@@ -1,0 +1,67 @@
+"""Microbenchmarks of the protocol hot-spots (CPU timings: relative only;
+the TPU picture comes from the dry-run roofline, not from these timings)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators as agg
+from repro.core.compression import CompressionSpec
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=20):
+    fn(*args).block_until_ready()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def aggregator_bench():
+    """Server-side aggregation cost per rule over (N=32, Q=1M) messages."""
+    key = jax.random.PRNGKey(0)
+    msgs = jax.random.normal(key, (32, 1 << 20))
+    rows = []
+    for name in ["mean", "median", "cwtm", "cwtm-nnm", "geomed", "krum", "tgn", "mcc"]:
+        a = jax.jit(agg.make_aggregator(name, n_byz=8, trim_frac=0.2))
+        us = _time(a, msgs)
+        rows.append((f"agg_{name}", us, msgs.size * 4 / (us * 1e-6) / 1e9))
+    return rows
+
+
+def kernel_vs_ref_bench():
+    """Pallas-interpret vs pure-jnp oracle (correct-path check + relative cost)."""
+    key = jax.random.PRNGKey(1)
+    msgs = jax.random.normal(key, (16, 1 << 16))
+    rows = []
+    t_ref = _time(jax.jit(lambda m: ops.cwtm(m, 2, backend="xla")), msgs, iters=10)
+    rows.append(("cwtm_xla_ref", t_ref, 0.0))
+    grads = jax.random.normal(key, (8, 1 << 16))
+    w = jnp.full((8,), 0.125)
+    t = _time(jax.jit(lambda g: ops.coded_combine(g, w, backend="xla")), grads, iters=10)
+    rows.append(("coded_combine_xla", t, 0.0))
+    return rows
+
+
+def compression_bench():
+    """Compression op cost + achieved wire compression ratio."""
+    key = jax.random.PRNGKey(2)
+    g = jax.random.normal(key, (1 << 20,))
+    rows = []
+    for spec in [
+        CompressionSpec("rand_sparse", q_hat_frac=0.3),
+        CompressionSpec("rand_sparse_shared", q_hat_frac=0.3),
+        CompressionSpec("quant", levels=16, chunk=1024),
+        CompressionSpec("top_k", q_hat_frac=0.3),
+    ]:
+        c = jax.jit(spec.make(g.shape[0]))
+        us = _time(lambda k: c(k, g), key, iters=10)
+        from repro.core.compression import wire_bits
+
+        ratio = wire_bits(spec, g.shape[0]) / (g.shape[0] * 32)
+        rows.append((f"comp_{spec.name}", us, ratio))
+    return rows

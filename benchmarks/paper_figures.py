@@ -1,0 +1,182 @@
+"""Reproduction of the paper's experimental section (Figs. 2-6).
+
+One function per figure; each returns rows of (curve label, x, value) and is
+asserted against the paper's qualitative claims.  The linear-regression setup
+follows Section VII exactly: N=100 subsets of one sample each,
+z_k ~ N(0, 100 I_100), per-subset ground truth with variance 1 + k*sigma_H,
+sign-flipping attack with coefficient -2.
+
+Scale notes: iteration counts are reduced (CPU, one core) but all protocol
+parameters (N=100, H, d values, learning rates, trim fraction, Q_hat) match
+the paper.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ProtocolConfig, protocol_round, theory
+from repro.core.attacks import AttackSpec
+from repro.core.compression import CompressionSpec
+from repro.data.synthetic import linear_regression_problem, linreg_loss, linreg_subset_grads
+
+N = 100
+DIM = 100
+
+
+def _train_curve(cfg: ProtocolConfig, z, y, lr, steps, seed=0, record_every=10):
+    x = jnp.zeros((DIM,))
+    key = jax.random.PRNGKey(seed)
+
+    @jax.jit
+    def step(x, k):
+        g = protocol_round(cfg, k, linreg_subset_grads(z, y, x))
+        return x - lr * g * cfg.n_devices  # g estimates (1/N) grad F; eq. (7) uses F
+
+    curve = []
+    for i in range(steps):
+        x = step(x, jax.random.fold_in(key, i))
+        if i % record_every == 0 or i == steps - 1:
+            curve.append((i, float(linreg_loss(z, y, x))))
+    return curve
+
+
+def fig2_error_vs_delta():
+    """Error term (eq. 33) as a function of the compression constant delta.
+
+    Paper setting: N=100, H=65, kappa=1.5, beta=1, d=5."""
+    rows = []
+    for delta in [0.0, 0.25, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0]:
+        p = theory.TheoryParams(n=100, h=65, d=5, kappa=1.5, beta=1.0, delta=delta)
+        rows.append(("com-lad-error", delta, theory.com_lad_error_order(p)))
+    vals = [v for _, _, v in rows]
+    assert all(a <= b + 1e-12 for a, b in zip(vals, vals[1:])), "error must grow with delta"
+    return rows
+
+
+def fig3_error_vs_d():
+    """Error term as a function of the computational load d.
+
+    Paper setting: N=100, H=65, kappa=1.5, beta=1, delta=0.5."""
+    rows = []
+    for d in [1, 2, 3, 5, 10, 20, 41, 60, 80, 100]:
+        p = theory.TheoryParams(n=100, h=65, d=d, kappa=1.5, beta=1.0, delta=0.5)
+        rows.append(("com-lad-error", d, theory.com_lad_error_order(p)))
+    vals = [v for _, _, v in rows]
+    assert all(a >= b - 1e-12 for a, b in zip(vals, vals[1:])), "error must shrink with d"
+    return rows
+
+
+def fig4_training_loss(steps: int = 800, lr: float = 1e-6, sigma_h: float = 0.3):
+    """Training loss vs iterations: VA / CWTM / CWTM-NNM / DRACO /
+    LAD-CWTM(-NNM) at d in {5, 10, 20}.  H=80, sign-flip coeff -2."""
+    key = jax.random.PRNGKey(0)
+    z, y = linear_regression_problem(key, n=N, dim=DIM, sigma_h=sigma_h)
+    n_byz = 20
+    atk = AttackSpec("sign_flip", n_byz=n_byz)
+
+    def cfg(method, d, agg, nb=n_byz):
+        return ProtocolConfig(n_devices=N, d=d, method=method, aggregator=agg,
+                              trim_frac=0.1, n_byz=nb, attack=atk)
+
+    curves = {
+        "VA": _train_curve(cfg("plain", 1, "mean"), z, y, lr, steps),
+        "CWTM": _train_curve(cfg("plain", 1, "cwtm"), z, y, lr, steps),
+        "CWTM-NNM": _train_curve(cfg("plain", 1, "cwtm-nnm"), z, y, lr, steps),
+        "LAD-CWTM-d5": _train_curve(cfg("lad", 5, "cwtm"), z, y, lr, steps),
+        "LAD-CWTM-d10": _train_curve(cfg("lad", 10, "cwtm"), z, y, lr, steps),
+        "LAD-CWTM-d20": _train_curve(cfg("lad", 20, "cwtm"), z, y, lr, steps),
+        "LAD-CWTM-NNM-d10": _train_curve(cfg("lad", 10, "cwtm-nnm"), z, y, lr, steps),
+        "DRACO-d41": _train_curve(
+            ProtocolConfig(n_devices=82, d=41, method="draco", n_byz=20, attack=atk),
+            z[:82], y[:82], lr, steps),
+    }
+    final = {k: v[-1][1] for k, v in curves.items()}
+    # the paper's ordering claims (Fig. 4): redundancy helps per aggregator,
+    # more d helps, NNM helps on top of LAD, DRACO (exact recovery) is best,
+    # and LAD beats vanilla averaging.
+    assert final["LAD-CWTM-d5"] < final["CWTM"], final
+    assert final["LAD-CWTM-d20"] <= final["LAD-CWTM-d5"] * 1.05, final
+    assert final["LAD-CWTM-NNM-d10"] < final["LAD-CWTM-d10"], final
+    assert final["DRACO-d41"] < min(final["LAD-CWTM-d20"], final["CWTM"]), final
+    assert final["VA"] > final["LAD-CWTM-d10"], final
+    # NOTE (EXPERIMENTS.md §Paper-validation): plain CWTM-NNM at d=1 can
+    # underperform CWTM at this heterogeneity/horizon — NNM's mixing pulls
+    # in-spread byzantine vectors into the average when the honest spread is
+    # large; redundancy (LAD) shrinks the spread and restores NNM's gain,
+    # which is exactly the paper's motivation for combining them.
+    rows = []
+    for label, curve in curves.items():
+        rows += [(label, i, v) for i, v in curve]
+    return rows
+
+
+def fig5_heterogeneity(steps: int = 600, lr: float = 1e-6):
+    """sigma_H in {0, 0.1}: the LAD advantage grows with heterogeneity."""
+    rows = []
+    gaps = {}
+    for sigma in [0.0, 0.1]:
+        key = jax.random.PRNGKey(1)
+        z, y = linear_regression_problem(key, n=N, dim=DIM, sigma_h=sigma)
+        atk = AttackSpec("sign_flip", n_byz=20)
+        plain = _train_curve(
+            ProtocolConfig(n_devices=N, d=1, method="plain", aggregator="cwtm",
+                           trim_frac=0.1, n_byz=20, attack=atk), z, y, lr, steps)
+        lad = _train_curve(
+            ProtocolConfig(n_devices=N, d=10, method="lad", aggregator="cwtm",
+                           trim_frac=0.1, n_byz=20, attack=atk), z, y, lr, steps)
+        rows += [(f"CWTM-s{sigma}", i, v) for i, v in plain]
+        rows += [(f"LAD-CWTM-d10-s{sigma}", i, v) for i, v in lad]
+        gaps[sigma] = plain[-1][1] - lad[-1][1]
+    assert gaps[0.1] > 0, gaps
+    return rows
+
+
+def fig6_compressed(steps: int = 700, lr: float = 3e-7):
+    """Compressed-communication setting: Com-VA / Com-CWTM(-NNM) / Com-TGN /
+    Com-LAD-CWTM(-NNM); random sparsification Q_hat=30, H=70, d=3."""
+    key = jax.random.PRNGKey(2)
+    z, y = linear_regression_problem(key, n=N, dim=DIM, sigma_h=0.3)
+    n_byz = 30
+    atk = AttackSpec("sign_flip", n_byz=n_byz)
+    comp = CompressionSpec("rand_sparse", q_hat_frac=0.3)  # Q_hat = 30 of 100
+
+    def cfg(method, d, agg):
+        return ProtocolConfig(n_devices=N, d=d, method=method, aggregator=agg,
+                              trim_frac=0.1, n_byz=n_byz, attack=atk,
+                              compression=comp)
+
+    curves = {
+        "Com-VA": _train_curve(cfg("plain", 1, "mean"), z, y, lr, steps),
+        "Com-CWTM": _train_curve(cfg("plain", 1, "cwtm"), z, y, lr, steps),
+        "Com-CWTM-NNM": _train_curve(cfg("plain", 1, "cwtm-nnm"), z, y, lr, steps),
+        "Com-TGN": _train_curve(cfg("plain", 1, "tgn"), z, y, lr, steps),
+        "Com-LAD-CWTM": _train_curve(cfg("lad", 3, "cwtm"), z, y, lr, steps),
+        "Com-LAD-CWTM-NNM": _train_curve(cfg("lad", 3, "cwtm-nnm"), z, y, lr, steps),
+    }
+    final = {k: v[-1][1] for k, v in curves.items()}
+    # paper claims: encoding-before-compression (Com-LAD) beats the same rule
+    # without redundancy, and Com-LAD-CWTM-NNM clearly outperforms Com-TGN
+    # (indeed every baseline).  NOTE: Com-VA is not asserted below Com-CWTM —
+    # with 30% sign-flip(-2) Byzantine the mean retains a +0.1x gradient
+    # component while an under-trimmed CWTM (paper's 0.1 trim vs 30% byz)
+    # carries surviving outliers; see EXPERIMENTS.md §Paper-validation.
+    assert final["Com-LAD-CWTM"] < final["Com-CWTM"], final
+    assert final["Com-LAD-CWTM-NNM"] < final["Com-CWTM-NNM"], final
+    assert final["Com-LAD-CWTM-NNM"] < final["Com-TGN"], final
+    assert final["Com-LAD-CWTM-NNM"] == min(final.values()), final
+    rows = []
+    for label, curve in curves.items():
+        rows += [(label, i, v) for i, v in curve]
+    return rows
+
+
+FIGURES = {
+    "fig2_error_vs_delta": fig2_error_vs_delta,
+    "fig3_error_vs_d": fig3_error_vs_d,
+    "fig4_training_loss": fig4_training_loss,
+    "fig5_heterogeneity": fig5_heterogeneity,
+    "fig6_compressed": fig6_compressed,
+}

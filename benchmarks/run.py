@@ -1,0 +1,39 @@
+"""Benchmark harness: one entry per paper figure + protocol microbenches.
+
+Prints ``name,us_per_call,derived`` CSV rows (figure benches report the
+final-loss / error-term values as ``derived``); writes the full per-figure
+curves to benchmarks/out/<figure>.csv.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+
+def main() -> None:
+    os.makedirs("benchmarks/out", exist_ok=True)
+    print("name,us_per_call,derived")
+
+    from benchmarks.paper_figures import FIGURES
+
+    for name, fn in FIGURES.items():
+        t0 = time.perf_counter()
+        rows = fn()
+        elapsed_us = (time.perf_counter() - t0) * 1e6
+        path = f"benchmarks/out/{name}.csv"
+        with open(path, "w") as f:
+            f.write("label,x,value\n")
+            for label, x, v in rows:
+                f.write(f"{label},{x},{v}\n")
+        # derived: the last value of the last curve (final loss / error term)
+        print(f"{name},{elapsed_us:.0f},{rows[-1][2]:.6g}")
+
+    from benchmarks.kernel_bench import aggregator_bench, compression_bench, kernel_vs_ref_bench
+
+    for rows in (aggregator_bench(), compression_bench(), kernel_vs_ref_bench()):
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived:.4g}")
+
+
+if __name__ == "__main__":
+    main()

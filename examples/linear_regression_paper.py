@@ -1,0 +1,59 @@
+"""The paper's Section-VII experiment: LAD vs baselines on linear regression.
+
+Reproduces the Fig. 4 comparison at full protocol scale (N=100 devices,
+20 Byzantine, sign-flipping attack x(-2)) with reduced iteration count.
+
+    PYTHONPATH=src python examples/linear_regression_paper.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import ProtocolConfig, protocol_round
+from repro.core.attacks import AttackSpec
+from repro.data.synthetic import linear_regression_problem, linreg_loss, linreg_subset_grads
+
+
+def train(cfg, z, y, lr=1e-6, steps=200, seed=0):
+    x = jnp.zeros((z.shape[1],))
+    key = jax.random.PRNGKey(seed)
+
+    @jax.jit
+    def step(x, k):
+        g = protocol_round(cfg, k, linreg_subset_grads(z, y, x))
+        return x - lr * g * cfg.n_devices
+
+    for i in range(steps):
+        x = step(x, jax.random.fold_in(key, i))
+    return float(linreg_loss(z, y, x))
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    z, y = linear_regression_problem(key, n=100, dim=100, sigma_h=0.3)
+    atk = AttackSpec("sign_flip", n_byz=20)
+
+    def cfg(method, d, agg):
+        return ProtocolConfig(n_devices=100, d=d, method=method, aggregator=agg,
+                              trim_frac=0.1, n_byz=20, attack=atk)
+
+    print(f"{'method':24s} final-loss")
+    results = {}
+    for name, c in {
+        "VA (mean)": cfg("plain", 1, "mean"),
+        "CWTM": cfg("plain", 1, "cwtm"),
+        "CWTM-NNM": cfg("plain", 1, "cwtm-nnm"),
+        "LAD-CWTM d=5": cfg("lad", 5, "cwtm"),
+        "LAD-CWTM d=10": cfg("lad", 10, "cwtm"),
+        "LAD-CWTM d=20": cfg("lad", 20, "cwtm"),
+        "LAD-CWTM-NNM d=10": cfg("lad", 10, "cwtm-nnm"),
+    }.items():
+        results[name] = train(c, z, y)
+        print(f"{name:24s} {results[name]:.4g}")
+
+    assert results["LAD-CWTM d=10"] < results["CWTM"]
+    print("\nOK: redundancy (d>1) beats the non-redundant robust baselines,")
+    print("matching the paper's Fig. 4 ordering.")
+
+
+if __name__ == "__main__":
+    main()

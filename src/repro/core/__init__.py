@@ -1,0 +1,28 @@
+"""Core protocol library: the paper's contribution (LAD / Com-LAD).
+
+Layout:
+  task_matrix.py  — cyclic task matrix S_hat (Lemma 1 optimal), DRACO's
+                    fractional repetition, per-round randomized assignment
+  coding.py       — eq.-(5) gradient encoder, DRACO majority-vote decoder
+  aggregators.py  — kappa-robust rules (CWTM, median, Krum, geomed, MCC, TGN,
+                    NNM pre-aggregation)
+  compression.py  — unbiased compressors (random sparsification, stochastic
+                    quantization) + shared-mask and top-k variants
+  attacks.py      — Byzantine attack library (sign-flip, ALIE, IPM, ...)
+  byzantine.py    — LAD/Com-LAD meta-algorithm (single-process protocol round)
+  distributed.py  — mesh/shard_map production realization of the protocol
+  theory.py       — Lemmas 1-4 / Theorems 1-2 constants and error terms
+"""
+from repro.core import aggregators, attacks, coding, compression, task_matrix, theory
+from repro.core.byzantine import ProtocolConfig, protocol_round
+
+__all__ = [
+    "aggregators",
+    "attacks",
+    "coding",
+    "compression",
+    "task_matrix",
+    "theory",
+    "ProtocolConfig",
+    "protocol_round",
+]

@@ -1,0 +1,125 @@
+"""Byzantine attack library.
+
+Attacks transform the stack of would-be-honest messages ``(N, Q)`` into the
+actually-transmitted stack, given a 0/1 byzantine mask ``(N,)``.  All attacks
+are implemented as pure functions so they can run inside jit/shard_map (the
+mask selects which rows are replaced).
+
+The paper's experiments use **sign-flipping** with coefficient -2 (Section
+VII).  We add the standard menu for ablations: Gaussian noise, zero/omniscient
+drop, ALIE ("a little is enough", [Baruch et al. 2019]) and IPM (inner-product
+manipulation, [Xie et al. 2020]) — both of which are *collusion* attacks that
+use the honest statistics, the hardest case for kappa-robust rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Attack = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+# signature: (key, honest_msgs (N,Q), byz_mask (N,)) -> transmitted (N,Q)
+
+__all__ = [
+    "sign_flip",
+    "gaussian",
+    "zero_attack",
+    "alie",
+    "ipm",
+    "label_shift_proxy",
+    "make_attack",
+    "AttackSpec",
+    "sample_byzantine_mask",
+]
+
+
+def sign_flip(key, msgs, mask, coeff: float = -2.0):
+    """Section VII attack: byzantine messages are the true ones times -2."""
+    del key
+    return jnp.where(mask[:, None] > 0, coeff * msgs, msgs)
+
+
+def gaussian(key, msgs, mask, std: float = 10.0):
+    noise = std * jax.random.normal(key, msgs.shape, dtype=msgs.dtype)
+    return jnp.where(mask[:, None] > 0, noise, msgs)
+
+
+def zero_attack(key, msgs, mask):
+    del key
+    return jnp.where(mask[:, None] > 0, jnp.zeros_like(msgs), msgs)
+
+
+def alie(key, msgs, mask, z: float = 1.5):
+    """A-Little-Is-Enough: byzantine devices send mean - z * std of the honest
+    set, staying just inside the plausible spread so distance-based rules
+    accept them."""
+    del key
+    honest_w = (1.0 - mask)[:, None]
+    h = jnp.maximum(jnp.sum(1.0 - mask), 1.0)
+    mu = jnp.sum(msgs * honest_w, axis=0) / h
+    var = jnp.sum(((msgs - mu[None]) ** 2) * honest_w, axis=0) / h
+    adv = mu - z * jnp.sqrt(var + 1e-12)
+    return jnp.where(mask[:, None] > 0, adv[None, :], msgs)
+
+
+def ipm(key, msgs, mask, eps: float = 0.5):
+    """Inner-product manipulation: send -eps * honest mean, dragging the
+    aggregate's inner product with the true gradient negative."""
+    del key
+    honest_w = (1.0 - mask)[:, None]
+    h = jnp.maximum(jnp.sum(1.0 - mask), 1.0)
+    mu = jnp.sum(msgs * honest_w, axis=0) / h
+    adv = -eps * mu
+    return jnp.where(mask[:, None] > 0, adv[None, :], msgs)
+
+
+def label_shift_proxy(key, msgs, mask, scale: float = 1.0):
+    """Gradient-space proxy for label flipping: negate and rescale (a
+    label-flipped cross-entropy gradient points roughly opposite)."""
+    del key
+    return jnp.where(mask[:, None] > 0, -scale * msgs, msgs)
+
+
+_ATTACKS = {
+    "none": lambda **kw: (lambda key, msgs, mask: msgs),
+    "sign_flip": lambda coeff=-2.0, **kw: (lambda key, m, mk: sign_flip(key, m, mk, coeff)),
+    "gaussian": lambda std=10.0, **kw: (lambda key, m, mk: gaussian(key, m, mk, std)),
+    "zero": lambda **kw: zero_attack,
+    "alie": lambda z=1.5, **kw: (lambda key, m, mk: alie(key, m, mk, z)),
+    "ipm": lambda eps=0.5, **kw: (lambda key, m, mk: ipm(key, m, mk, eps)),
+    "label_shift": lambda scale=1.0, **kw: (lambda key, m, mk: label_shift_proxy(key, m, mk, scale)),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackSpec:
+    name: str = "sign_flip"
+    n_byz: int = 0
+    fixed_identity: bool = True  # B^t fixed across rounds vs resampled per round
+    coeff: float = -2.0  # sign_flip
+    std: float = 10.0  # gaussian
+    z: float = 1.5  # alie
+    eps: float = 0.5  # ipm
+
+    def make(self) -> Attack:
+        return make_attack(self)
+
+
+def make_attack(spec: AttackSpec) -> Attack:
+    if spec.name not in _ATTACKS:
+        raise KeyError(f"unknown attack {spec.name!r}; have {sorted(_ATTACKS)}")
+    return _ATTACKS[spec.name](coeff=spec.coeff, std=spec.std, z=spec.z, eps=spec.eps)
+
+
+def sample_byzantine_mask(key: jax.Array, n: int, n_byz: int, fixed: bool = True) -> jax.Array:
+    """0/1 mask of byzantine devices.  ``fixed=True`` marks the first n_byz
+    devices (identity persists across rounds when the caller reuses the same
+    key); otherwise a uniformly random n_byz-subset per round."""
+    if n_byz == 0:
+        return jnp.zeros((n,), dtype=jnp.float32)
+    if fixed:
+        return (jnp.arange(n) < n_byz).astype(jnp.float32)
+    perm = jax.random.permutation(key, n)
+    return (perm < n_byz).astype(jnp.float32)

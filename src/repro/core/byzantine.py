@@ -1,0 +1,142 @@
+"""The LAD / Com-LAD meta-algorithm (Algorithms 1 and 2).
+
+This module is the *protocol* layer: given per-subset gradients, it performs
+one full round — task assignment, eq.-(5) encoding, compression, Byzantine
+corruption, robust aggregation — and returns the global update direction.
+
+Two execution styles are provided:
+
+  * ``lad_round`` — single-process vectorized simulation over the N logical
+    devices (used by the paper-reproduction benchmarks and the tests, where
+    all N subset gradients are computable in one place);
+  * the sharded shard_map production path lives in ``core/distributed.py``
+    and re-uses the same primitives.
+
+``method``:
+  * ``"lad"``   — Algorithm 1/2 (Com-LAD when ``compression.name != 'none'``)
+  * ``"plain"`` — the non-redundant baselines (VA / CWTM / CWTM-NNM / Com-TGN):
+                  equivalent to LAD with d = 1 (each device a single random
+                  subset), per Section VII's fair-comparison setup.
+  * ``"draco"`` — DRACO [13]: fractional repetition + majority-vote decode
+                  (exact recovery; incompatible with compression).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators as agg_lib
+from repro.core import attacks as attack_lib
+from repro.core import compression as comp_lib
+from repro.core import task_matrix as tm
+
+__all__ = ["ProtocolConfig", "lad_round", "protocol_round"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolConfig:
+    n_devices: int
+    d: int = 1  # computational load (subsets per device)
+    method: str = "lad"  # lad | plain | draco
+    aggregator: str = "cwtm"  # any key of aggregators.AGGREGATORS, opt. "-nnm"
+    trim_frac: float = 0.1
+    n_byz: int = 0
+    attack: attack_lib.AttackSpec = dataclasses.field(
+        default_factory=lambda: attack_lib.AttackSpec(name="sign_flip")
+    )
+    compression: comp_lib.CompressionSpec = dataclasses.field(
+        default_factory=comp_lib.CompressionSpec
+    )
+
+    def make_aggregator(self):
+        return agg_lib.make_aggregator(
+            self.aggregator, n_byz=self.n_byz, trim_frac=self.trim_frac
+        )
+
+    def effective_d(self) -> int:
+        return 1 if self.method == "plain" else self.d
+
+
+def _device_coded_gradients(cfg: ProtocolConfig, key: jax.Array, subset_grads: jax.Array):
+    """Assemble the (N, Q) stack of honest coded vectors g_i^t (eq. 5)."""
+    n = cfg.n_devices
+    d = cfg.effective_d()
+    if cfg.method == "draco":
+        # fractional repetition: device i's group replicates a permuted block
+        perm = jax.random.permutation(key, n)
+        groups = jnp.arange(n) // d  # (N,)
+        block_cols = groups[:, None] * d + jnp.arange(d)[None, :]  # (N, d)
+        subsets = perm[block_cols]
+        return jnp.mean(subset_grads[subsets], axis=1), subsets
+    assignment = tm.sample_assignment(key, n, d)
+    coded = jnp.mean(subset_grads[assignment.subsets], axis=1)  # (N, Q)
+    return coded, assignment.subsets
+
+
+def protocol_round(
+    cfg: ProtocolConfig,
+    key: jax.Array,
+    subset_grads: jax.Array,
+) -> jax.Array:
+    """One full protocol round.
+
+    Args:
+      cfg: protocol configuration.
+      key: round PRNG key (folds in the step index at the caller).
+      subset_grads: ``(N, Q)`` — gradient of every logical data subset at the
+        current iterate (the simulation's stand-in for devices' local compute).
+
+    Returns:
+      ``(Q,)`` the aggregated global update direction ``g^t``.
+    """
+    n = cfg.n_devices
+    k_assign, k_mask, k_attack, k_comp = jax.random.split(key, 4)
+
+    coded, _ = _device_coded_gradients(cfg, k_assign, subset_grads)
+
+    # --- Com-LAD compression (Definition 2) --------------------------------
+    q = coded.shape[1]
+    spec = cfg.compression
+    if spec.name not in ("none", "identity"):
+        compressor = spec.make(q)
+        if spec.name == "rand_sparse_shared":
+            # round-shared mask: same key for every device
+            coded = jax.vmap(lambda g: compressor(k_comp, g))(coded)
+        else:
+            dev_keys = jax.random.split(k_comp, n)
+            coded = jax.vmap(compressor)(dev_keys, coded)
+
+    # --- Byzantine corruption ----------------------------------------------
+    mask = attack_lib.sample_byzantine_mask(
+        k_mask, n, cfg.n_byz, fixed=cfg.attack.fixed_identity
+    )
+    attack = dataclasses.replace(cfg.attack, n_byz=cfg.n_byz).make()
+    transmitted = attack(k_attack, coded, mask)
+
+    # --- Server aggregation --------------------------------------------------
+    if cfg.method == "draco":
+        # DRACO ignores compression (incompatible, per Section VII.B) and
+        # decodes exactly via group majority vote.
+        return coded_draco_decode(transmitted, cfg.d)
+    aggregator = cfg.make_aggregator()
+    return aggregator(transmitted)
+
+
+def coded_draco_decode(transmitted: jax.Array, d: int) -> jax.Array:
+    from repro.core.coding import draco_decode
+
+    return draco_decode(transmitted, d)
+
+
+def lad_round(
+    cfg: ProtocolConfig,
+    key: jax.Array,
+    params: jax.Array,
+    subset_grad_fn: Callable[[jax.Array], jax.Array],
+) -> jax.Array:
+    """Convenience wrapper: compute all subset gradients at ``params`` then run
+    a protocol round.  ``subset_grad_fn(params) -> (N, Q)``."""
+    return protocol_round(cfg, key, subset_grad_fn(params))

@@ -1,0 +1,199 @@
+"""Communication-compression operators (Section V, Definition 2).
+
+Unbiased compressors ``C`` with ``E[C(g)] = g`` and
+``E||C(g) - g||^2 <= delta ||g||^2``:
+
+  * ``random_sparsification`` [16]  — keep ``q_hat`` random coordinates scaled
+    by ``Q / q_hat``; delta = Q/q_hat - 1.
+  * ``stochastic_quantization`` [27] — QSGD-style: per-chunk max-abs scale,
+    ``levels`` uniform levels, unbiased random rounding; delta <= ~ sqrt(Q)/levels
+    (standard QSGD bound).
+  * ``rand_k_shared``            — random sparsification with a *shared* mask
+    (same coordinates on every device for a given key).  Identical statistics
+    per device; enables physically smaller collectives (beyond-paper).
+
+Biased compressors (for ablations; the paper adopts unbiased only):
+
+  * ``top_k`` [15]  — keep the largest-|.| k coordinates (biased).
+
+Every compressor is a pure function ``(key, g) -> g_hat`` operating on 1-D
+vectors; ``compress_pytree`` maps it over a gradient pytree with split keys.
+``wire_bits`` reports the number of payload bits actually needed on the wire
+(the dense output is the paper's mathematical abstraction; byte accounting is
+explicit so the roofline can charge the true collective cost).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Compressor = Callable[[jax.Array, jax.Array], jax.Array]
+
+__all__ = [
+    "identity",
+    "random_sparsification",
+    "rand_k_shared_mask",
+    "stochastic_quantization",
+    "top_k",
+    "make_compressor",
+    "delta_of",
+    "wire_bits",
+    "CompressionSpec",
+]
+
+
+def identity(key: jax.Array, g: jax.Array) -> jax.Array:
+    del key
+    return g
+
+
+def random_sparsification(key: jax.Array, g: jax.Array, q_hat: int) -> jax.Array:
+    """Keep ``q_hat`` uniformly random coordinates, scale by ``Q/q_hat``.
+
+    Unbiased: each coordinate survives w.p. q_hat/Q and is scaled by Q/q_hat.
+    delta = Q/q_hat - 1 (eq. 10 constant).
+    """
+    q = g.shape[0]
+    # A uniformly random q_hat-subset via a random permutation's first q_hat slots.
+    perm = jax.random.permutation(key, q)
+    mask = jnp.zeros((q,), dtype=g.dtype).at[perm[:q_hat]].set(1.0)
+    return g * mask * (q / q_hat)
+
+
+def rand_k_shared_mask(key: jax.Array, q: int, q_hat: int) -> jax.Array:
+    """The round-shared sparsity mask (0/1 vector with q_hat ones).
+
+    Deriving the mask from the server's round key mirrors the paper's broadcast
+    of the permutation ``p^t``: shared randomness established at zero marginal
+    wire cost.  With a shared mask the collective payload shrinks physically
+    from Q to q_hat values.
+    """
+    perm = jax.random.permutation(key, q)
+    return jnp.zeros((q,), dtype=jnp.float32).at[perm[:q_hat]].set(1.0)
+
+
+def stochastic_quantization(
+    key: jax.Array, g: jax.Array, levels: int = 16, chunk: int = 1024
+) -> jax.Array:
+    """QSGD-style unbiased stochastic quantization with per-chunk scaling.
+
+    Each chunk of ``chunk`` coordinates is scaled by its max-abs, mapped onto
+    ``levels`` uniform levels in [-1, 1], and rounded up/down with probability
+    proportional to the remainder — hence unbiased.  Output is the dequantized
+    float vector (the wire format would be ``ceil(log2(2*levels+1))`` bits per
+    coordinate + one fp32 scale per chunk; see ``wire_bits``).
+    """
+    q = g.shape[0]
+    pad = (-q) % chunk
+    gp = jnp.pad(g, (0, pad))
+    gc = gp.reshape(-1, chunk)
+    scale = jnp.max(jnp.abs(gc), axis=1, keepdims=True)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    y = gc / safe * levels  # in [-levels, levels]
+    lo = jnp.floor(y)
+    p_up = y - lo
+    u = jax.random.uniform(key, y.shape)
+    yq = lo + (u < p_up).astype(gp.dtype)
+    out = yq / levels * safe
+    out = jnp.where(scale > 0, out, 0.0)
+    return out.reshape(-1)[:q]
+
+
+def top_k(key: jax.Array, g: jax.Array, q_hat: int) -> jax.Array:
+    """Biased top-k sparsification [15] (ablation only; violates eq. 9)."""
+    del key
+    q = g.shape[0]
+    _, idx = jax.lax.top_k(jnp.abs(g), q_hat)
+    mask = jnp.zeros((q,), dtype=g.dtype).at[idx].set(1.0)
+    return g * mask
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """Config-level description of the wire compression."""
+
+    name: str = "none"  # none | rand_sparse | rand_sparse_shared | quant | top_k
+    q_hat_frac: float = 0.3  # for sparsification: kept fraction q_hat / Q
+    levels: int = 16  # for quantization
+    chunk: int = 1024
+
+    def make(self, q: int) -> Compressor:
+        return make_compressor(self, q)
+
+    def delta(self, q: int) -> float:
+        return delta_of(self, q)
+
+    def bits_per_coord(self) -> float:
+        return wire_bits(self, q=1_000_000) / 1_000_000
+
+
+def make_compressor(spec: CompressionSpec, q: int) -> Compressor:
+    if spec.name in ("none", "identity"):
+        return identity
+    if spec.name == "rand_sparse":
+        q_hat = max(1, int(spec.q_hat_frac * q))
+        return partial(random_sparsification, q_hat=q_hat)
+    if spec.name == "rand_sparse_shared":
+        q_hat = max(1, int(spec.q_hat_frac * q))
+
+        def shared(key: jax.Array, g: jax.Array) -> jax.Array:
+            # NOTE: caller must pass the *round-shared* key, not a per-device key.
+            mask = rand_k_shared_mask(key, q, q_hat).astype(g.dtype)
+            return g * mask * (q / q_hat)
+
+        return shared
+    if spec.name == "quant":
+        return partial(stochastic_quantization, levels=spec.levels, chunk=spec.chunk)
+    if spec.name == "top_k":
+        q_hat = max(1, int(spec.q_hat_frac * q))
+        return partial(top_k, q_hat=q_hat)
+    raise KeyError(f"unknown compressor {spec.name!r}")
+
+
+def delta_of(spec: CompressionSpec, q: int) -> float:
+    """The eq.-(10) constant delta for each compressor."""
+    if spec.name in ("none", "identity"):
+        return 0.0
+    if spec.name in ("rand_sparse", "rand_sparse_shared"):
+        q_hat = max(1, int(spec.q_hat_frac * q))
+        return q / q_hat - 1.0
+    if spec.name == "quant":
+        # QSGD bound: delta <= min(Q/levels^2, sqrt(Q)/levels) for full-vector
+        # scaling; with per-chunk scaling Q -> chunk.
+        c = min(spec.chunk, q)
+        return min(c / spec.levels**2, (c**0.5) / spec.levels)
+    if spec.name == "top_k":
+        return 1.0 - spec.q_hat_frac  # contraction parameter (biased class)
+    raise KeyError(spec.name)
+
+
+def wire_bits(spec: CompressionSpec, q: int, value_bits: int = 32) -> float:
+    """Payload bits actually required to ship one compressed vector of length q."""
+    if spec.name in ("none", "identity"):
+        return float(q * value_bits)
+    if spec.name == "rand_sparse":
+        q_hat = max(1, int(spec.q_hat_frac * q))
+        import math
+
+        idx_bits = max(1, math.ceil(math.log2(max(q, 2))))
+        return float(q_hat * (value_bits + idx_bits))
+    if spec.name == "rand_sparse_shared":
+        q_hat = max(1, int(spec.q_hat_frac * q))
+        return float(q_hat * value_bits)  # mask derived from the shared round key
+    if spec.name == "quant":
+        import math
+
+        bits = math.ceil(math.log2(2 * spec.levels + 1))
+        n_chunks = -(-q // spec.chunk)
+        return float(q * bits + n_chunks * 32)
+    if spec.name == "top_k":
+        q_hat = max(1, int(spec.q_hat_frac * q))
+        import math
+
+        idx_bits = max(1, math.ceil(math.log2(max(q, 2))))
+        return float(q_hat * (value_bits + idx_bits))
+    raise KeyError(spec.name)

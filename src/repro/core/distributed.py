@@ -1,0 +1,24 @@
+"""Distributed protocol realization.
+
+The production implementation lives in :mod:`repro.core.protomath` (pure
+GSPMD: blocked-gradient einsums with custom VJPs).  An earlier prototype
+expressed the protocol with shard_map-manual collectives; that approach was
+abandoned because shard_map's in_specs cannot carry auto-axis (tensor
+parallel) placements — parameters entered the manual region replicated over
+the model axis, silently destroying TP sharding (documented in EXPERIMENTS.md
+§Perf, iteration 0).
+
+This module keeps the protocol-level *data movement* helpers that remain
+shard_map-free.
+"""
+from __future__ import annotations
+
+from repro.core.protomath import (  # noqa: F401 — public re-exports
+    BlockedProtocol,
+    pbias,
+    plookup,
+    pmm,
+    protocol_context,
+    pscale,
+    robust_combine,
+)

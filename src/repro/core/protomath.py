@@ -1,0 +1,480 @@
+"""Protocol-aware parameter math: the LAD gradient exchange in pure GSPMD.
+
+The paper's server replaces the data-parallel mean of per-device gradients
+with a kappa-robust aggregation.  In a pjit/GSPMD world the device boundary
+is the leading block of the batch: the global batch is laid out
+``(N * b_local, ...)`` with block ``n`` belonging to logical LAD device ``n``
+(sharded over the data mesh axes).  Every parameter-consuming op goes through
+the helpers here; under an active protocol context their backward pass:
+
+  1. computes the *blocked* parameter cotangent ``dw_n`` with an extra
+     leading device axis — einsum ``"n<lhs>,n<out> -> n<rhs>"`` — which GSPMD
+     executes entirely locally (the device axis is batch-sharded, so no
+     cross-device reduction is emitted: the per-device coded gradients stay
+     separate, exactly the paper's setting);
+  2. applies the device-side transforms: unbiased compression (Com-LAD) and
+     the Byzantine corruption of rows in ``B^t``;
+  3. robustly aggregates over the device axis:
+       * ``server="sharded"`` — a ``with_sharding_constraint`` moves the data
+         sharding from the device axis onto the parameter's FSDP dim; GSPMD
+         lowers the reshard to an **all-to-all**, after which the sort/trim/
+         mean run locally and the result is already ZeRO-sharded
+         (the beyond-paper sharded server);
+       * ``server="gather"`` — the device axis is aggregated directly; GSPMD
+         **all-gathers** the blocked cotangent so every replica aggregates
+         redundantly (the paper's replicated server, transient N x |w|).
+
+Forward passes are untouched — plain einsums on globally-sharded params, so
+FSDP param gathers and tensor-parallel sharding stay entirely under GSPMD
+control.  With no active context every helper is a plain einsum/take.
+"""
+from __future__ import annotations
+
+import dataclasses
+from contextlib import contextmanager
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import attacks as attack_lib
+from repro.core import compression as comp_lib
+
+DATA_AXES_1POD: tuple[str, ...] = ("data",)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockedProtocol:
+    """Static protocol parameters (hashable: used as custom_vjp nondiff arg)."""
+
+    n_devices: int = 16
+    data_axes: tuple[str, ...] = DATA_AXES_1POD
+    aggregator: str = "cwtm"  # mean | median | cwtm (optionally "-nnm")
+    trim_frac: float = 0.125
+    n_byz: int = 0
+    attack: attack_lib.AttackSpec = dataclasses.field(
+        default_factory=lambda: attack_lib.AttackSpec(name="sign_flip")
+    )
+    compression: comp_lib.CompressionSpec = dataclasses.field(
+        default_factory=comp_lib.CompressionSpec
+    )
+    server: str = "sharded"  # sharded | gather
+    honest_mean: bool = False  # protocol "none": plain data-parallel mean
+    model_size: int = 1  # mesh size of the "model" axis (tp pinning)
+    # Embedding-gather gradients are sparse over the vocab: most devices
+    # contribute zero at most coordinates, so coordinate-wise trimmed means
+    # degenerate (they trim away the real signal) AND the blocked (N, V, D)
+    # cotangent is the single most expensive buffer in the exchange.  Default
+    # is therefore mean aggregation via native autodiff (a documented
+    # protocol adaptation — DESIGN.md §6); set True to force the full
+    # robust exchange on lookups too.
+    embedding_robust: bool = False
+
+    @property
+    def dax(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+
+# --- context ----------------------------------------------------------------
+_ACTIVE: list = []  # [(BlockedProtocol, round_key)] — plain list, trace-safe
+
+
+@contextmanager
+def protocol_context(p: BlockedProtocol, round_key: jax.Array):
+    """Activate the LAD exchange for every pmm/embed/affine call inside."""
+    _ACTIVE.append((p, round_key))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def current_protocol():
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+_CALL_COUNTER = [0]
+
+
+def _next_key(round_key):
+    _CALL_COUNTER[0] += 1
+    return jax.random.fold_in(round_key, _CALL_COUNTER[0])
+
+
+def _float0(key):
+    return np.zeros(key.shape, dtype=jax.dtypes.float0)
+
+
+# --- aggregation over the device axis ---------------------------------------
+def _trim_count(p: BlockedProtocol) -> int:
+    f = int(p.trim_frac * p.n_devices)
+    return min(f, (p.n_devices - 1) // 2)
+
+
+def _apply_rule(p: BlockedProtocol, stack: jax.Array) -> jax.Array:
+    """(N, ...) -> (...) over axis 0."""
+    name = p.aggregator
+    if name.endswith("-nnm"):
+        name = name[: -len("-nnm")]
+        n = stack.shape[0]
+        flat = stack.reshape(n, -1).astype(jnp.float32)
+        sq = jnp.sum(flat * flat, axis=1)
+        d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * flat @ flat.T, 0.0)
+        k = n - p.n_byz if p.n_byz > 0 else n
+        _, idx = jax.lax.top_k(-d2, k)
+        stack = jnp.mean(flat[idx], axis=1).reshape(stack.shape).astype(stack.dtype)
+    if name == "mean":
+        return jnp.mean(stack.astype(jnp.float32), axis=0).astype(stack.dtype)
+    if name == "median":
+        return jnp.median(stack.astype(jnp.float32), axis=0).astype(stack.dtype)
+    if name == "cwtm":
+        f = _trim_count(p)
+        srt = jnp.sort(stack.astype(jnp.float32), axis=0)
+        kept = srt[f : stack.shape[0] - f] if f > 0 else srt
+        return jnp.mean(kept, axis=0).astype(stack.dtype)
+    raise KeyError(f"blocked protocol supports mean/median/cwtm[-nnm], got {name!r}")
+
+
+def _corrupt_rows(p: BlockedProtocol, dw_n: jax.Array, key: jax.Array) -> jax.Array:
+    """Device-side compression + Byzantine corruption, row-wise over axis 0.
+
+    Attacks apply in the native (N, *w) layout (no flattening — reshapes of
+    multi-axis-sharded tensors trigger GSPMD full rematerializations);
+    compression needs the flat per-device vector view.
+    """
+    n = p.n_devices
+    k_comp, k_attack = jax.random.split(key)
+    spec = p.compression
+    if spec.name not in ("none", "identity"):
+        flat = dw_n.reshape(n, -1)
+        comp = spec.make(flat.shape[1])
+        if spec.name == "rand_sparse_shared":
+            flat = jax.vmap(lambda g: comp(k_comp, g))(flat)
+        else:
+            dev_keys = jax.random.split(k_comp, n)
+            flat = jax.vmap(comp)(dev_keys, flat)
+        dw_n = flat.reshape(dw_n.shape)
+    if p.n_byz > 0 and p.attack.name != "none":
+        bshape = (n,) + (1,) * (dw_n.ndim - 1)
+        is_byz = (jnp.arange(n) < p.n_byz).astype(dw_n.dtype).reshape(bshape)
+        a = p.attack
+        if a.name == "sign_flip":
+            adv = a.coeff * dw_n
+        elif a.name == "zero":
+            adv = jnp.zeros_like(dw_n)
+        elif a.name == "label_shift":
+            adv = -dw_n
+        elif a.name == "gaussian":
+            adv = a.std * jax.random.normal(k_attack, dw_n.shape, dw_n.dtype)
+        elif a.name in ("alie", "ipm"):
+            honest_w = 1.0 - is_byz
+            h = jnp.maximum(jnp.sum(honest_w), 1.0)
+            mu = jnp.sum(dw_n * honest_w, axis=0, keepdims=True) / h
+            if a.name == "ipm":
+                adv = jnp.broadcast_to(-a.eps * mu, dw_n.shape)
+            else:
+                var = jnp.sum(((dw_n - mu) ** 2) * honest_w, axis=0, keepdims=True) / h
+                adv = jnp.broadcast_to(mu - a.z * jnp.sqrt(var + 1e-12), dw_n.shape)
+        else:
+            raise KeyError(p.attack.name)
+        dw_n = is_byz * adv.astype(dw_n.dtype) + (1.0 - is_byz) * dw_n
+    return dw_n
+
+
+def _dw_pspec(p: BlockedProtocol, w_spec: tuple | None, w_shape,
+              fsdp_to_dax: bool, n_replicated: bool) -> P:
+    """PartitionSpec for the blocked cotangent (N, *w_shape): the tp dims
+    keep their model-axis sharding throughout the exchange."""
+    entries: list = [None if n_replicated else p.dax]
+    for i in range(len(w_shape)):
+        ax = w_spec[i] if (w_spec is not None and i < len(w_spec)) else None
+        if ax == "tp" and p.model_size > 1 and w_shape[i] % p.model_size == 0:
+            entries.append("model")
+        elif ax == "fsdp" and fsdp_to_dax and w_shape[i] % p.n_devices == 0:
+            entries.append(p.dax)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def robust_combine(p: BlockedProtocol, dw_n: jax.Array, key: jax.Array,
+                   w_spec: tuple | None) -> jax.Array:
+    """The server: (N, *w_shape) blocked cotangent -> (*w_shape) aggregate."""
+    w_shape = dw_n.shape[1:]
+    # device axis on data, tp dims on model: computed fully locally
+    dw_n = jax.lax.with_sharding_constraint(
+        dw_n, _dw_pspec(p, w_spec, w_shape, fsdp_to_dax=False, n_replicated=False)
+    )
+    if p.honest_mean:
+        return jnp.mean(dw_n.astype(jnp.float32), axis=0)
+    dw_n = _corrupt_rows(p, dw_n, key)
+    fsdp_dim = w_spec.index("fsdp") if (w_spec and "fsdp" in w_spec) else None
+    if (p.server == "sharded" and fsdp_dim is not None
+            and w_shape[fsdp_dim] % p.n_devices == 0):
+        # move the data sharding from the device axis onto the fsdp dim:
+        # GSPMD lowers the reshard to an all-to-all; the aggregation then
+        # runs on local (N, shard) blocks and the result is ZeRO-sharded.
+        dw_n = jax.lax.with_sharding_constraint(
+            dw_n, _dw_pspec(p, w_spec, w_shape, fsdp_to_dax=True, n_replicated=True)
+        )
+    else:
+        # replicated (gather) server: every replica receives all N versions
+        # (all-gather over the device axis) and aggregates redundantly.
+        dw_n = jax.lax.with_sharding_constraint(
+            dw_n, _dw_pspec(p, w_spec, w_shape, fsdp_to_dax=False, n_replicated=True)
+        )
+    return _apply_rule(p, dw_n).astype(jnp.float32)
+
+
+# --- blocked einsum ----------------------------------------------------------
+def _block(x: jax.Array, n: int) -> jax.Array:
+    return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+
+def _pin_w(p: BlockedProtocol, w: jax.Array, w_spec: tuple | None) -> jax.Array:
+    """Pin a parameter to its tensor-parallel *compute view*: tp dims on the
+    model axis, the fsdp dim unconstrained (GSPMD inserts the ZeRO gather
+    from storage).  Needed because scan-body parameter slices lose their
+    input shardings in propagation."""
+    if w_spec is None or p.model_size <= 1:
+        return w
+    entries = []
+    any_tp = False
+    for i, ax in enumerate(w_spec):
+        if ax == "tp" and w.shape[i] % p.model_size == 0:
+            entries.append("model")
+            any_tp = True
+        else:
+            entries.append(None)
+    if not any_tp:
+        return w
+    return jax.lax.with_sharding_constraint(w, P(*entries))
+
+
+def _pin_out(p: BlockedProtocol, spec: str, w_spec: tuple | None,
+             out: jax.Array) -> jax.Array:
+    """Pin an einsum output: leading batch dim to the data axes, and any
+    output dim inherited from a tensor-parallel w dim to the model axis."""
+    lhs_rhs, out_ix = spec.split("->")
+    lhs, rhs = lhs_rhs.split(",")
+    entries = [None] * out.ndim
+    if out.ndim and out.shape[0] % p.n_devices == 0 and out_ix[0] in lhs:
+        entries[0] = p.dax
+    if w_spec is not None and p.model_size > 1:
+        for i, ax in enumerate(w_spec):
+            if ax == "tp" and i < len(rhs):
+                letter = rhs[i]
+                if letter in out_ix:
+                    j = out_ix.index(letter)
+                    if j != 0 and out.shape[j] % p.model_size == 0:
+                        entries[j] = "model"
+    if all(e is None for e in entries):
+        return out
+    return jax.lax.with_sharding_constraint(out, P(*entries))
+
+
+def _pin_batch(p: BlockedProtocol, x: jax.Array) -> jax.Array:
+    """Pin the leading (device-blocked) batch dim to the data axes.
+
+    GSPMD's sharding propagation does not reliably survive the deep
+    scan/remat/custom-vjp nest — without re-anchoring, activations fall back
+    to replicated and every chip computes the full global batch.  Re-pinning
+    at every protocol op keeps the whole network data-parallel.
+    """
+    if x.ndim == 0 or x.shape[0] % p.n_devices != 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(p.dax, *([None] * (x.ndim - 1)))
+    )
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _pmm(p: BlockedProtocol, spec: str, w_spec: tuple | None, pre_blocked: bool,
+         x: jax.Array, w: jax.Array, key: jax.Array):
+    del key
+    return _pin_out(p, spec, w_spec,
+                    jnp.einsum(spec, _pin_batch(p, x), _pin_w(p, w, w_spec)))
+
+
+def _pmm_fwd(p, spec, w_spec, pre_blocked, x, w, key):
+    x = _pin_batch(p, x)
+    w = _pin_w(p, w, w_spec)
+    return _pin_out(p, spec, w_spec, jnp.einsum(spec, x, w)), (x, w, key)
+
+
+def _pmm_bwd(p, spec, w_spec, pre_blocked, res, ct):
+    x, w, key = res
+    lhs_rhs, out = spec.split("->")
+    lhs, rhs = lhs_rhs.split(",")
+    ct = _pin_out(p, spec, w_spec, ct)  # ct has the einsum-output structure
+    dx = _pin_batch(p, jnp.einsum(f"{out},{rhs}->{lhs}", ct, w).astype(x.dtype))
+    if pre_blocked:
+        # operands already carry the device axis as their first index (MoE):
+        # keep it in the cotangent instead of re-blocking
+        assert lhs[0] == out[0] == "n", spec
+        dw_n = jnp.einsum(f"{lhs},{out}->n{rhs}", x, ct)
+    else:
+        xb = _block(x, p.n_devices)
+        ctb = _block(ct, p.n_devices)
+        dw_n = jnp.einsum(f"n{lhs},n{out}->n{rhs}", xb, ctb)
+    dw = robust_combine(p, dw_n, key, w_spec).astype(w.dtype)
+    return dx, dw, _float0(key)
+
+
+_pmm.defvjp(_pmm_fwd, _pmm_bwd)
+
+
+def pmm(spec: str, x: jax.Array, w: jax.Array, w_spec: tuple | None = None,
+        pre_blocked: bool = False, fsdp_dim: int | None = None) -> jax.Array:
+    """Protocol-aware ``einsum(spec, x, w)`` (w is the parameter).
+
+    ``w_spec`` — the parameter's logical axes (e.g. ``("fsdp", "tp")``):
+    pins the tensor-parallel compute view and locates the ZeRO dim for the
+    sharded server.  ``fsdp_dim`` is a legacy alias (builds a minimal spec).
+    ``pre_blocked`` — operands already carry the device axis 'n' as their
+    leading index (expert-parallel MoE path).
+    """
+    ctx = current_protocol()
+    if ctx is None:
+        return jnp.einsum(spec, x, w)
+    p, round_key = ctx
+    if w_spec is None and fsdp_dim is not None:
+        w_spec = tuple("fsdp" if i == fsdp_dim else None for i in range(w.ndim))
+    if pre_blocked and not spec.startswith("n"):
+        raise ValueError(f"pre_blocked pmm needs an explicit n axis: {spec}")
+    return _pmm(p, spec, w_spec, pre_blocked, x, w, _next_key(round_key))
+
+
+# --- embedding lookup --------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _plookup(p: BlockedProtocol, w_spec: tuple, table: jax.Array, ids: jax.Array,
+             key: jax.Array):
+    del key
+    return _pin_batch(p, jnp.take(_pin_w(p, table, w_spec), ids, axis=0))
+
+
+def _plookup_fwd(p, w_spec, table, ids, key):
+    table = _pin_w(p, table, w_spec)
+    return _pin_batch(p, jnp.take(table, ids, axis=0)), (table, ids, key)
+
+
+def _plookup_bwd(p, w_spec, res, ct):
+    table, ids, key = res
+    n = p.n_devices
+    idb = _block(ids.reshape(-1), n)  # (N, T/N)
+    ctb = _block(ct.reshape((-1,) + ct.shape[ids.ndim:]), n)  # (N, T/N, D)
+    dt_n = jnp.zeros((n,) + table.shape, jnp.float32)
+    # batched scatter-add: device axis stays sharded; each block scatters its
+    # own token cotangents into its own copy of the (sharded) table grad
+    dt_n = dt_n.at[jnp.arange(n)[:, None], idb].add(ctb.astype(jnp.float32))
+    dw = robust_combine(p, dt_n, key, w_spec).astype(table.dtype)
+    return dw, None, _float0(key)
+
+
+_plookup.defvjp(_plookup_fwd, _plookup_bwd)
+
+
+def plookup(table: jax.Array, ids: jax.Array, fsdp_dim: int = 1,
+            w_spec: tuple | None = None) -> jax.Array:
+    """Protocol-aware ``take(table, ids, axis=0)`` (embedding lookup).
+
+    Robust aggregation of lookup gradients is opt-in
+    (``BlockedProtocol.embedding_robust``); by default the sparse scatter
+    gradient aggregates by mean through native autodiff (see the field's
+    docstring for why)."""
+    ctx = current_protocol()
+    if ctx is None:
+        return jnp.take(table, ids, axis=0)
+    p, round_key = ctx
+    if not p.embedding_robust:
+        return jnp.take(table, ids, axis=0)
+    if w_spec is None:
+        w_spec = tuple("fsdp" if i == fsdp_dim else ("tp" if i == 0 else None)
+                       for i in range(table.ndim))
+    return _plookup(p, tuple(w_spec), table, ids, _next_key(round_key))
+
+
+# --- elementwise affine (norm scales, biases, gates) --------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _paffine(p: BlockedProtocol, mode: str, x: jax.Array, w: jax.Array,
+             key: jax.Array):
+    del key
+    return _pin_batch(p, x * w if mode == "mul" else x + w)
+
+
+def _paffine_fwd(p, mode, x, w, key):
+    out = _pin_batch(p, x * w if mode == "mul" else x + w)
+    return out, (x, w, key)
+
+
+def _paffine_bwd(p, mode, res, ct):
+    x, w, key = res
+    ct = _pin_batch(p, ct)
+    dx = ct * w if mode == "mul" else ct
+    contrib = ct * x if mode == "mul" else ct
+    n = p.n_devices
+    cb = _block(contrib, n)  # (N, B/N, ..., *w broadcast dims)
+    # sum all axes except the device axis and the trailing w dims
+    reduce_axes = tuple(range(1, cb.ndim - w.ndim))
+    dw_n = jnp.sum(cb.astype(jnp.float32), axis=reduce_axes)
+    dw = robust_combine(p, dw_n, key, None).astype(w.dtype)
+    return dx.astype(x.dtype), dw, _float0(key)
+
+
+_paffine.defvjp(_paffine_fwd, _paffine_bwd)
+
+
+def pscale(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Protocol-aware ``x * w`` with w broadcast on trailing dims."""
+    ctx = current_protocol()
+    if ctx is None:
+        return x * w
+    p, round_key = ctx
+    return _paffine(p, "mul", x, w, _next_key(round_key))
+
+
+def pbias(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Protocol-aware ``x + w`` with w broadcast on trailing dims."""
+    ctx = current_protocol()
+    if ctx is None:
+        return x + w
+    p, round_key = ctx
+    return _paffine(p, "add", x, w, _next_key(round_key))
+
+
+# --- block tap: scan-internal small params ------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _block_tap(p: BlockedProtocol, w: jax.Array, key: jax.Array):
+    del key
+    return jnp.broadcast_to(w[None], (p.n_devices,) + w.shape)
+
+
+def _block_tap_fwd(p, w, key):
+    return _block_tap(p, w, key), key
+
+
+def _block_tap_bwd(p, key, ct):
+    # ct: (N, *w) — per-device accumulated cotangent (downstream usage is
+    # blocked per device, e.g. inside a sequence scan)
+    return robust_combine(p, ct, key, None).astype(ct.dtype), _float0(key)
+
+
+_block_tap.defvjp(_block_tap_fwd, _block_tap_bwd)
+
+
+def block_tap(w: jax.Array):
+    """Broadcast a (small) parameter to an explicit per-device copy
+    ``(N, *w.shape)`` whose cotangent is robustly aggregated once.
+
+    For parameters consumed *inside* a sequence scan (Mamba's A), where a
+    per-step paffine would trigger one server exchange per token.  Returns
+    ``(w_b, n)`` — with no active protocol, ``(w[None], 1)``.
+    """
+    ctx = current_protocol()
+    if ctx is None:
+        return w[None], 1
+    p, round_key = ctx
+    return _block_tap(p, w, _next_key(round_key)), p.n_devices

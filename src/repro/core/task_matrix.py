@@ -1,0 +1,130 @@
+"""Computation task matrices for gradient coding.
+
+The paper's central combinatorial object is the cyclic task matrix ``S_hat``
+(Section IV): an ``N x N`` 0/1 matrix whose first row has ``d`` leading ones
+and whose every subsequent row is a cyclic shift of the previous one.  Row
+``i`` is a *computation task*: the set of data subsets whose gradients the
+device executing that task must compute.  Lemma 1 proves that among all
+matrices with ``d`` ones per row, column-balanced matrices (every column has
+exactly ``d`` ones) minimize the deviation of the honest average from the true
+mean — and the cyclic matrix is the canonical balanced construction.
+
+We also provide the fractional-repetition matrix used by DRACO [13] (the
+paper's exact-recovery baseline), where devices are partitioned into groups
+that replicate whole blocks of subsets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "cyclic_task_matrix",
+    "fractional_repetition_matrix",
+    "column_counts",
+    "is_column_balanced",
+    "assignment_deviation",
+    "TaskAssignment",
+    "sample_assignment",
+]
+
+
+def cyclic_task_matrix(n: int, d: int) -> np.ndarray:
+    """The paper's ``S_hat``: ``n x n`` cyclic 0/1 matrix, ``d`` ones per row.
+
+    Row ``i`` has ones in columns ``i, i+1, ..., i+d-1 (mod n)``.
+    """
+    if not (1 <= d <= n):
+        raise ValueError(f"computational load d={d} must be in [1, {n}]")
+    first = np.zeros(n, dtype=np.int32)
+    first[:d] = 1
+    rows = [np.roll(first, i) for i in range(n)]
+    return np.stack(rows, axis=0)
+
+
+def fractional_repetition_matrix(n: int, d: int) -> np.ndarray:
+    """DRACO-style fractional repetition task matrix.
+
+    Devices are split into ``n // d`` groups of ``d`` devices; every device in
+    group ``g`` computes the same block of ``d`` subsets ``[g*d, (g+1)*d)``.
+    Requires ``d | n``.  Column-balanced (each column has ``d`` ones), so it
+    attains the Lemma-1 infimum as well; its value for DRACO is that the
+    *group* structure enables majority-vote exact decoding when each group has
+    a majority of honest devices.
+    """
+    if n % d != 0:
+        raise ValueError(f"fractional repetition needs d | n, got n={n}, d={d}")
+    s = np.zeros((n, n), dtype=np.int32)
+    for i in range(n):
+        g = i // d
+        s[i, g * d : (g + 1) * d] = 1
+    return s
+
+
+def column_counts(s: np.ndarray) -> np.ndarray:
+    return np.asarray(s).sum(axis=0)
+
+
+def is_column_balanced(s: np.ndarray) -> bool:
+    """True iff every column has the same number of ones (Lemma 1 optimality)."""
+    counts = column_counts(s)
+    return bool(np.all(counts == counts[0]))
+
+
+def assignment_deviation(s: np.ndarray, h: int) -> float:
+    """Closed-form E||(1/(dH) h S - (1/N) 1)||^2 for a column-balanced S.
+
+    This is the quantity of Lemma 1; for the cyclic matrix it equals
+    ``(N-H)(N-d) / (d H (N-1) N)``.  For general S we evaluate the exact
+    expectation from the proof of Lemma 1 (eqs. 38-41), which only depends on
+    the column counts ``theta_j``.
+    """
+    s = np.asarray(s)
+    n = s.shape[0]
+    d = int(s[0].sum())
+    theta = column_counts(s).astype(np.float64)
+    # eq. (40)-(41): E||.||^2 = 1/(d^2 H^2) [ H d + H(H-1)/(N(N-1)) * (sum theta_j^2 - d N) ] - 1/N
+    cross = float((theta**2).sum() - d * n)
+    val = (h * d + h * (h - 1) / (n * (n - 1)) * cross) / (d**2 * h**2) - 1.0 / n
+    return float(val)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TaskAssignment:
+    """Per-iteration randomized assignment (Section IV).
+
+    Attributes:
+      task_index: ``(N,)`` int32 — ``T_i^t``, a permutation; device ``i``
+        executes row ``task_index[i]`` of the task matrix.
+      subset_perm: ``(N,)`` int32 — ``p^t``; column ``k`` of the task matrix
+        refers to logical data subset ``subset_perm[k]``.
+      subsets: ``(N, d)`` int32 — for convenience, ``subsets[i]`` lists the
+        ``d`` logical subset ids device ``i`` must compute this round
+        (``{p_k : S_hat[T_i, k] = 1}``).
+    """
+
+    task_index: jax.Array
+    subset_perm: jax.Array
+    subsets: jax.Array
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def sample_assignment(key: jax.Array, n: int, d: int) -> TaskAssignment:
+    """Draw the round's (T^t, p^t) and materialize per-device subset lists.
+
+    Both permutations are independent and uniform, matching Algorithm 1.  For
+    the cyclic matrix, row ``r`` selects columns ``r, r+1, ..., r+d-1 (mod N)``,
+    so device ``i``'s subsets are ``p[(T_i + j) mod N], j in [0, d)``.
+    """
+    k_task, k_perm = jax.random.split(key)
+    task_index = jax.random.permutation(k_task, n).astype(jnp.int32)
+    subset_perm = jax.random.permutation(k_perm, n).astype(jnp.int32)
+    offsets = jnp.arange(d, dtype=jnp.int32)[None, :]  # (1, d)
+    cols = (task_index[:, None] + offsets) % n  # (N, d)
+    subsets = subset_perm[cols]
+    return TaskAssignment(task_index=task_index, subset_perm=subset_perm, subsets=subsets)

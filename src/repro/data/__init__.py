@@ -1,0 +1,8 @@
+"""Data pipeline: heterogeneous synthetic subsets + device allocation."""
+from repro.data.synthetic import (
+    HeterogeneousLM,
+    linear_regression_problem,
+    lm_batch_for_devices,
+)
+
+__all__ = ["HeterogeneousLM", "linear_regression_problem", "lm_batch_for_devices"]

@@ -1,0 +1,86 @@
+"""Synthetic training data with controllable heterogeneity.
+
+Two generators:
+
+1. ``linear_regression_problem`` — the paper's Section-VII setup, exactly:
+   N subsets of one sample each; features z_k ~ N(0, 100 I); per-subset
+   ground-truth x_hat_k with elementwise variance ``1 + k * sigma_h``
+   (heterogeneity grows with the subset index); labels
+   y_k ~ N(<z_k, x_hat_k>, 1).  ``sigma_h = 0`` recovers the IID case.
+
+2. ``HeterogeneousLM`` — the LM generalization used by the production train
+   path: each of the N logical subsets draws tokens from its own skewed
+   unigram/bigram distribution (a Dirichlet-perturbed base distribution whose
+   concentration shrinks with sigma_h), so per-subset gradients differ the
+   way the paper's beta^2 heterogeneity bound models.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_regression_problem(key, n: int = 100, dim: int = 100, sigma_h: float = 0.3):
+    """Returns (Z (N, dim), y (N,)) — one sample per subset, per Section VII."""
+    kz, kx, ky = jax.random.split(key, 3)
+    z = jax.random.normal(kz, (n, dim)) * 10.0  # N(0, 100)
+    subset_std = jnp.sqrt(1.0 + jnp.arange(n, dtype=jnp.float32) * sigma_h)  # (N,)
+    x_hat = jax.random.normal(kx, (n, dim)) * subset_std[:, None]
+    y_mean = jnp.sum(z * x_hat, axis=1)
+    y = y_mean + jax.random.normal(ky, (n,))
+    return z, y
+
+
+def linreg_subset_grads(z: jax.Array, y: jax.Array, x: jax.Array) -> jax.Array:
+    """All N subset gradients of f_k(x) = 0.5 (<x, z_k> - y_k)^2: (N, dim)."""
+    resid = z @ x - y  # (N,)
+    return resid[:, None] * z
+
+
+def linreg_loss(z: jax.Array, y: jax.Array, x: jax.Array) -> jax.Array:
+    return 0.5 * jnp.sum((z @ x - y) ** 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class HeterogeneousLM:
+    """Skewed-unigram synthetic LM data.
+
+    Each subset k has its own unigram distribution: a shared Zipf base
+    re-weighted by a per-subset Dirichlet draw with concentration
+    ``1 / (sigma_h + 1e-3)`` — larger sigma_h -> more heterogeneous subsets.
+    """
+
+    vocab: int
+    n_subsets: int
+    sigma_h: float = 0.3
+    zipf_a: float = 1.2
+
+    def subset_logits(self, key) -> jax.Array:
+        """(N, V) per-subset unigram logits."""
+        base = -self.zipf_a * jnp.log(jnp.arange(1, self.vocab + 1, dtype=jnp.float32))
+        conc = 1.0 / (self.sigma_h + 1e-3)
+        noise = jax.random.gamma(key, conc, (self.n_subsets, self.vocab)) / conc
+        return base[None, :] + jnp.log(noise + 1e-9)
+
+    def sample(self, key, subset_logits: jax.Array, per_subset: int, seq_len: int):
+        """tokens (N, per_subset, seq_len) int32, one row of subsets each."""
+        keys = jax.random.split(key, self.n_subsets)
+
+        def one(k, logits):
+            return jax.random.categorical(k, logits, shape=(per_subset, seq_len))
+
+        return jax.vmap(one)(keys, subset_logits).astype(jnp.int32)
+
+
+def lm_batch_for_devices(
+    key, vocab: int, n_subsets: int, per_subset: int, seq_len: int, sigma_h: float = 0.3
+):
+    """One global batch laid out by subset: returns dict with
+    tokens (N, per_subset, S) and next-token labels."""
+    gen = HeterogeneousLM(vocab=vocab, n_subsets=n_subsets, sigma_h=sigma_h)
+    k1, k2 = jax.random.split(key)
+    logits = gen.subset_logits(k1)
+    toks = gen.sample(k2, logits, per_subset, seq_len + 1)
+    return {"tokens": toks[..., :-1], "labels": toks[..., 1:]}

@@ -1,0 +1,42 @@
+"""Pallas TPU kernel: eq.-(5) coded-gradient combine.
+
+The device-side encoder reduces its ``d`` stacked subset gradients with
+weights ``1/d`` (kept general: arbitrary weights support fractional-repetition
+codes too).  Fusing the weighted reduce avoids writing the stacked gradients
+back to HBM between accumulation steps: one ``(d, q_block)`` tile per program,
+fp32 accumulation on the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(grads_ref, w_ref, out_ref):
+    g = grads_ref[...].astype(jnp.float32)  # (d, q_block)
+    w = w_ref[...].astype(jnp.float32)  # (d,)
+    out_ref[...] = jnp.einsum("dq,d->q", g, w).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("q_block", "interpret"))
+def coded_combine_pallas(
+    grads: jax.Array, weights: jax.Array, q_block: int = 2048, interpret: bool = True
+) -> jax.Array:
+    """grads: (d, Q), weights: (d,) -> (Q,)."""
+    d, q = grads.shape
+    q_block = min(q_block, q)
+    assert q % q_block == 0, (q, q_block)
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=(q // q_block,),
+        in_specs=[
+            pl.BlockSpec((d, q_block), lambda i: (0, i)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((q_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q,), grads.dtype),
+        interpret=interpret,
+    )(grads, weights)

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: coordinate-wise trimmed mean (the LAD server hot-spot).
+
+The server aggregates ``N`` device messages of length ``Q`` (per model shard).
+CWTM is a per-coordinate sort + trim + mean — a purely memory-bound reduction,
+so the win on TPU is fusing sort/trim/mean in VMEM over ``(N, q_block)`` tiles
+instead of materializing the ``(N, Q)`` sorted intermediate in HBM (3x HBM
+traffic for a jnp.sort-based implementation: read + sorted write + read).
+
+The per-coordinate sort over the tiny static ``N`` axis (16/32 devices) is an
+odd-even transposition network: ``N`` compare-exchange passes on vectors of
+width ``q_block`` — each pass is a vectorized min/max on the VPU, no data-
+dependent control flow.  Tiling: grid over ``Q / q_block``; each program
+holds an ``(N, q_block)`` tile in VMEM (default q_block 2048: 32 x 2048 x 4 B
+= 256 KB, comfortably inside the ~16 MB VMEM budget with double buffering).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sort_rows(x: jax.Array) -> jax.Array:
+    """Odd-even transposition sort along axis 0 (static, branch-free)."""
+    n = x.shape[0]
+    for phase in range(n):
+        start = phase % 2
+        # pairs (start, start+1), (start+2, start+3), ...
+        a = x[start::2]
+        b = x[start + 1 :: 2]
+        k = min(a.shape[0], b.shape[0])
+        if k == 0:  # odd phase of a 2-row tile: nothing to exchange
+            continue
+        lo = jnp.minimum(a[:k], b[:k])
+        hi = jnp.maximum(a[:k], b[:k])
+        inter = jnp.stack([lo, hi], axis=1).reshape(2 * k, -1)
+        parts = []
+        if start:
+            parts.append(x[:1])
+        parts.append(inter)
+        tail = start + 2 * k
+        if tail < n:
+            parts.append(x[tail:])
+        x = jnp.concatenate(parts, axis=0)
+    return x
+
+
+def _cwtm_kernel(msgs_ref, out_ref, *, trim: int):
+    x = msgs_ref[...]
+    n = x.shape[0]
+    srt = _sort_rows(x.astype(jnp.float32))
+    kept = srt[trim : n - trim] if trim > 0 else srt
+    out_ref[...] = jnp.mean(kept, axis=0).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("trim", "q_block", "interpret"))
+def cwtm_pallas(
+    msgs: jax.Array, trim: int, q_block: int = 2048, interpret: bool = True
+) -> jax.Array:
+    """msgs: (N, Q) -> (Q,) trimmed mean.  Q % q_block == 0."""
+    n, q = msgs.shape
+    if 2 * trim >= n:
+        raise ValueError(f"trim={trim} too large for N={n}")
+    q_block = min(q_block, q)
+    assert q % q_block == 0, (q, q_block)
+    return pl.pallas_call(
+        functools.partial(_cwtm_kernel, trim=trim),
+        grid=(q // q_block,),
+        in_specs=[pl.BlockSpec((n, q_block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((q_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q,), msgs.dtype),
+        interpret=interpret,
+    )(msgs)

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: pairwise squared distances for NNM pre-aggregation.
+
+NNM [23] needs the ``(N, N)`` distance matrix between device messages.  The
+compute shape is a Gram matmul over the huge Q axis — MXU work — plus row
+norms.  The kernel tiles the contraction: grid over ``Q / q_block``, each
+program multiply-accumulates an ``(N, q_block) @ (q_block, N)`` partial Gram
+and a partial row-norm into fp32 output accumulators that live across the
+grid (sequential TPU grid semantics).  The trivial ``(N, N)`` distance
+assembly happens in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(msgs_ref, gram_ref, sq_ref):
+    i = pl.program_id(0)
+    x = msgs_ref[...].astype(jnp.float32)  # (N, q_block)
+
+    @pl.when(i == 0)
+    def _init():
+        gram_ref[...] = jnp.zeros_like(gram_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    gram_ref[...] += x @ x.T
+    sq_ref[...] += jnp.sum(x * x, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("q_block", "interpret"))
+def gram_pallas(msgs: jax.Array, q_block: int = 2048, interpret: bool = True):
+    """msgs: (N, Q) -> (gram (N, N) fp32, sqnorms (N,) fp32)."""
+    n, q = msgs.shape
+    q_block = min(q_block, q)
+    assert q % q_block == 0, (q, q_block)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(q // q_block,),
+        in_specs=[pl.BlockSpec((n, q_block), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(msgs)

@@ -1,0 +1,61 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``backend`` selects the implementation:
+  * ``"pallas"``      — compiled Pallas (TPU target)
+  * ``"interpret"``   — Pallas interpret mode (CPU-correct; used by tests)
+  * ``"xla"``         — the pure-jnp oracle (default inside the production
+                        step functions so CPU dry-runs lower everywhere)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.coded_combine import coded_combine_pallas
+from repro.kernels.cwtm import cwtm_pallas
+from repro.kernels.nnm_dist import gram_pallas
+from repro.kernels.quantize import stochastic_quantize_pallas
+
+DEFAULT_BACKEND = "xla"
+
+
+def _interp(backend: str) -> bool:
+    if backend == "pallas":
+        return False
+    if backend == "interpret":
+        return True
+    raise ValueError(backend)
+
+
+def cwtm(msgs: jax.Array, trim: int, backend: str = DEFAULT_BACKEND, **kw) -> jax.Array:
+    if backend == "xla":
+        return ref.cwtm_ref(msgs, trim)
+    return cwtm_pallas(msgs, trim, interpret=_interp(backend), **kw)
+
+
+def coded_combine(
+    grads: jax.Array, weights: jax.Array, backend: str = DEFAULT_BACKEND, **kw
+) -> jax.Array:
+    if backend == "xla":
+        return ref.coded_combine_ref(grads, weights)
+    return coded_combine_pallas(grads, weights, interpret=_interp(backend), **kw)
+
+
+def stochastic_quantize(
+    g: jax.Array,
+    u: jax.Array,
+    levels: int = 16,
+    block: int = 1024,
+    backend: str = DEFAULT_BACKEND,
+) -> jax.Array:
+    if backend == "xla":
+        return ref.stochastic_quantize_ref(g, u, levels, block)
+    return stochastic_quantize_pallas(g, u, levels, q_block=block, interpret=_interp(backend))
+
+
+def pairwise_sqdist(msgs: jax.Array, backend: str = DEFAULT_BACKEND, **kw) -> jax.Array:
+    if backend == "xla":
+        return ref.pairwise_sqdist_ref(msgs)
+    gram, sq = gram_pallas(msgs, interpret=_interp(backend), **kw)
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: QSGD stochastic quantization (Com-LAD wire encoder).
+
+Fuses per-block max-abs scale, level mapping, stochastic rounding and dequant
+in one VMEM pass.  The rounding randomness ``u ~ U[0,1)`` is an input (the
+device derives it from its round key), so kernel and oracle are bit-exact.
+
+Tiling: grid over ``Q / q_block``; the quantization block equals the kernel
+tile (one scale per tile), keeping the scale reduction entirely in-VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(g_ref, u_ref, out_ref, *, levels: int):
+    g = g_ref[...].astype(jnp.float32)
+    u = u_ref[...]
+    scale = jnp.max(jnp.abs(g))
+    safe = jnp.where(scale > 0, scale, 1.0)
+    y = g / safe * levels
+    lo = jnp.floor(y)
+    yq = lo + (u < (y - lo)).astype(jnp.float32)
+    out = jnp.where(scale > 0, yq / levels * safe, 0.0)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "q_block", "interpret"))
+def stochastic_quantize_pallas(
+    g: jax.Array, u: jax.Array, levels: int = 16, q_block: int = 1024, interpret: bool = True
+) -> jax.Array:
+    """g, u: (Q,) -> (Q,) dequantized stochastic quantization."""
+    (q,) = g.shape
+    q_block = min(q_block, q)
+    assert q % q_block == 0, (q, q_block)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, levels=levels),
+        grid=(q // q_block,),
+        in_specs=[
+            pl.BlockSpec((q_block,), lambda i: (i,)),
+            pl.BlockSpec((q_block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((q_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q,), g.dtype),
+        interpret=interpret,
+    )(g, u)

@@ -1,0 +1,330 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+Lowers + compiles every (architecture x input shape) combination for the
+production meshes — 16x16 (single pod, 256 chips) and 2x16x16 (two pods,
+512 chips) — using ShapeDtypeStruct stand-ins (no allocation), then records
+memory analysis, cost analysis and the collective schedule for the roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>[__tag].json and are
+skipped if already present (incremental).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.configs.archs import ARCHS
+from repro.configs.base import INPUT_SHAPES, ArchConfig, ShapeConfig, TrainConfig
+from repro.launch import roofline
+from repro.launch.mesh import data_axes, make_production_mesh, n_data_devices
+from repro.launch.serve import (
+    batch_dim_pspec,
+    decode_state_pspecs,
+    serve_input_specs,
+)
+from repro.launch.train import build_train_step, param_mesh_rules
+from repro.models.module import logical_to_mesh
+from repro.optim import make_optimizer
+
+
+def skip_reason(cfg: ArchConfig, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k" and cfg.long_context == "skip":
+        return "enc-dec audio model: 500k decoder context is out of scope (DESIGN.md)"
+    return None
+
+
+def _effective_cfg(cfg: ArchConfig, shape: ShapeConfig) -> ArchConfig:
+    """Apply the long-context policy: sliding-window attention for window archs."""
+    if shape.name == "long_500k" and cfg.long_context in ("window", "native"):
+        period = tuple(
+            type(b)(mixer=b.mixer, mlp=b.mlp, sliding_window=cfg.long_window)
+            if b.mixer in ("attn", "attn_nope")
+            else b
+            for b in cfg.period
+        )
+        return cfg.scaled(period=period)
+    return cfg
+
+
+def auto_microbatches(cfg: ArchConfig, shape: ShapeConfig, n_data: int, d: int,
+                      budget_bytes: float = 2.5e9) -> int:
+    """Split the local d-redundant batch so the period-scan residual stack
+    (the dominant training buffer: n_periods x seqs x seq x d_model x 4B on
+    the fp32-inflated CPU backend) fits the per-chip budget."""
+    local_seqs = max(1, shape.global_batch // n_data) * d
+    per_seq = cfg.n_periods * shape.seq_len * cfg.d_model * 4.0
+    # inner-period recompute transients scale with period length
+    per_seq = max(per_seq, len(cfg.period) * shape.seq_len * cfg.d_model * 3 * 4.0)
+    m_min = max(1, int(-(-local_seqs * per_seq // budget_bytes)))
+    m = 1
+    while m < m_min and m < local_seqs:
+        m *= 2
+    while local_seqs % m != 0:  # must divide the local batch
+        m *= 2
+    return min(m, local_seqs)
+
+
+def build_case(cfg: ArchConfig, shape: ShapeConfig, mesh, tcfg: TrainConfig):
+    """Returns (fn, example_args) ready for jit(fn).lower(*args)."""
+    # NB: init must run under eval_shape for shapes, but the spec tree is
+    # static python data — get it from a cheap reduced trace of the same code.
+    param_shapes, specs = _shapes_and_specs(cfg)
+    pspecs = logical_to_mesh(specs, mesh, rules=param_mesh_rules(mesh), shapes=param_shapes)
+    p_sds = jax.tree.map(
+        lambda s, ps: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, ps)),
+        param_shapes, pspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+    if shape.kind == "train":
+        if tcfg.microbatches == 0:  # 0 = auto
+            import dataclasses as _dc
+
+            from repro.launch.mesh import n_data_devices as _ndd
+
+            tcfg = _dc.replace(
+                tcfg,
+                microbatches=auto_microbatches(cfg, shape, _ndd(mesh), tcfg.d),
+            )
+        step_fn, opt = build_train_step(cfg, tcfg, mesh, specs)
+        opt_shapes = jax.eval_shape(opt.init, param_shapes)
+        from repro.optim.optimizers import OptState
+
+        def opt_sharding(moment):
+            if moment == () or moment is None:
+                return ()
+            return jax.tree.map(
+                lambda s, ps: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=NamedSharding(mesh, ps)),
+                moment, pspecs,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+            )
+
+        o_sds = OptState(
+            step=jax.ShapeDtypeStruct((), jnp.int32,
+                                      sharding=NamedSharding(mesh, P())),
+            mu=opt_sharding(opt_shapes.mu),
+            nu=opt_sharding(opt_shapes.nu),
+        )
+        bspec = batch_dim_pspec(shape.global_batch, mesh)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len), jnp.int32,
+                sharding=NamedSharding(mesh, P(bspec[0], None))),
+            "labels": jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len), jnp.int32,
+                sharding=NamedSharding(mesh, P(bspec[0], None))),
+        }
+        if cfg.family in ("vlm", "audio"):
+            enc = cfg.encoder
+            batch["frontend"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, enc.n_frontend_tokens, enc.d_frontend), jnp.float32,
+                sharding=NamedSharding(mesh, P(bspec[0], None, None)))
+        idx = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+        return step_fn, (p_sds, o_sds, batch, idx)
+
+    if shape.kind == "prefill":
+        ins = serve_input_specs(cfg, shape, mesh)
+
+        def fn(params, batch):
+            return models.prefill(params, specs, cfg, batch["tokens"],
+                                  frontend=batch.get("frontend"))
+
+        return fn, (p_sds, ins)
+
+    # decode
+    ins = serve_input_specs(cfg, shape, mesh)
+
+    def fn(params, token, state):
+        return models.decode_step(params, specs, cfg, token, state)
+
+    return fn, (p_sds, ins["token"], ins["state"])
+
+
+_SPEC_CACHE: dict = {}
+
+
+def _shapes_and_specs(cfg: ArchConfig):
+    """Param shapes via eval_shape (no allocation); the logical-spec tree is
+    plain python data produced during tracing — captured via side channel."""
+    if cfg.name in _SPEC_CACHE:
+        return _SPEC_CACHE[cfg.name]
+    captured = {}
+
+    def only_params(k):
+        p, s = models.init(k, cfg)
+        captured["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(only_params, jax.random.PRNGKey(0))
+    _SPEC_CACHE[cfg.name] = (shapes, captured["specs"])
+    return _SPEC_CACHE[cfg.name]
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool, tcfg: TrainConfig,
+             out_dir: str, tag: str = "", save_hlo: bool = False,
+             force: bool = False, attn_tp: str | None = None) -> dict:
+    cfg0 = ARCHS[arch]
+    if attn_tp:
+        cfg0 = cfg0.scaled(attn_tp=attn_tp)
+        _SPEC_CACHE.pop(cfg0.name, None)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "pod2" if multi_pod else "pod1"
+    case_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    path = os.path.join(out_dir, case_id + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+                 "tcfg": {"protocol": tcfg.protocol, "d": tcfg.d,
+                          "aggregator": tcfg.aggregator, "server": tcfg.server,
+                          "compression": tcfg.compression, "n_byz": tcfg.n_byz,
+                          "microbatches": tcfg.microbatches}}
+    reason = skip_reason(cfg0, shape)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        _save(path, rec)
+        return rec
+
+    cfg = _effective_cfg(cfg0, shape)
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.size
+        with mesh:
+            fn, args = build_case(cfg, shape, mesh, tcfg)
+            lowered = jax.jit(fn).lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # scan-aware analysis: XLA's cost_analysis counts while bodies once;
+        # analyze_hlo multiplies loop bodies by their trip counts.
+        an = roofline.analyze_hlo(hlo)
+        coll = {
+            "bytes_by_kind": an.wire_by_kind,
+            "count_by_kind": an.coll_count_by_kind,
+            "total_wire_bytes": an.wire_bytes,
+            "n_while": an.n_while,
+            "max_trip": an.max_trip,
+        }
+        d_red = tcfg.d if (shape.kind == "train" and tcfg.protocol != "none") else 1
+        mf = roofline.model_flops(cfg, shape, d_redundancy=d_red)
+        terms = roofline.derive_terms(
+            {"flops": an.flops, "bytes accessed": an.bytes_hbm},
+            coll, model_flops_total=mf, chips=chips,
+        )
+        rec.update(
+            status="ok",
+            chips=chips,
+            compile_s=round(time.time() - t0, 1),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_per_chip_gib": round(
+                    (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                     + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+                    / 2**30, 3),
+            },
+            cost={k: cost[k] for k in ("flops", "bytes accessed") if k in cost},
+            cost_note="xla cost_analysis counts loop bodies once; roofline uses analyze_hlo",
+            collectives=coll,
+            roofline=terms.as_dict(),
+            model_flops_total=mf,
+        )
+        if save_hlo:
+            with open(os.path.join(out_dir, case_id + ".hlo"), "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:],
+                   compile_s=round(time.time() - t0, 1))
+    _save(path, rec)
+    return rec
+
+
+def _save(path, rec):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default=None, choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    # protocol knobs (perf experiments)
+    ap.add_argument("--protocol", default="lad", choices=["lad", "none"])
+    ap.add_argument("--d", type=int, default=2)
+    ap.add_argument("--aggregator", default="cwtm")
+    ap.add_argument("--server", default="sharded", choices=["sharded", "gather"])
+    ap.add_argument("--compression", default="none")
+    ap.add_argument("--q-hat-frac", type=float, default=0.3)
+    ap.add_argument("--n-byz", type=int, default=2)
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="0 = auto-size to the memory budget")
+    ap.add_argument("--attn-tp", default=None, choices=["heads", "head_dim"])
+    args = ap.parse_args()
+
+    tcfg = TrainConfig(
+        protocol=args.protocol, d=args.d, aggregator=args.aggregator,
+        server=args.server, compression=args.compression,
+        q_hat_frac=args.q_hat_frac, n_byz=args.n_byz,
+        microbatches=args.microbatches,
+    )
+    meshes = {"pod1": [False], "pod2": [True], "both": [False, True]}[args.multi_pod]
+    cases = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cases.append((a, s, mp))
+
+    results = []
+    for a, s, mp in cases:
+        rec = run_case(a, s, mp, tcfg, args.out_dir, tag=args.tag,
+                       save_hlo=args.save_hlo, force=args.force,
+                       attn_tp=args.attn_tp)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f"dom={r['dominant']} comp={r['compute_s']:.3e}s "
+                     f"mem={r['memory_s']:.3e}s coll={r['collective_s']:.3e}s "
+                     f"peak={rec['memory']['peak_per_chip_gib']}GiB "
+                     f"({rec.get('compile_s')}s compile)")
+        elif status == "error":
+            extra = rec["error"][:160]
+        else:
+            extra = rec.get("reason", "")
+        print(f"[{status:7s}] {a} x {s} x {'pod2' if mp else 'pod1'} {extra}", flush=True)
+        results.append(rec)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {len(results) - n_ok - n_skip} failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dryrun JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dir_: str, mesh: str):
+    recs = {}
+    for path in glob.glob(os.path.join(dir_, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("tag"):
+            continue  # tagged = perf experiments, reported separately
+        if r.get("mesh") != mesh:
+            continue
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt_s(x):
+    return f"{x:.2e}"
+
+
+def roofline_table(recs, archs, mesh: str) -> str:
+    lines = [
+        f"### Roofline — {mesh} (single pod, 256 chips)" if mesh == "pod1"
+        else f"### Dry-run — {mesh} (2 pods, 512 chips)",
+        "",
+        "| arch | shape | status | compute s | memory s | collective s | dominant "
+        "| peak GiB/chip | useful ratio | wire GB/chip |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in archs:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | MISSING | | | | | | | |")
+                continue
+            if r["status"] == "skipped":
+                lines.append(
+                    f"| {arch} | {shape} | skipped | | | | | | | |")
+                continue
+            if r["status"] == "error":
+                err = r.get("error", "")[:40].replace("|", "/")
+                lines.append(f"| {arch} | {shape} | ERROR {err} | | | | | | | |")
+                continue
+            ro = r["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | ok | {fmt_s(ro['compute_s'])} "
+                f"| {fmt_s(ro['memory_s'])} | {fmt_s(ro['collective_s'])} "
+                f"| **{ro['dominant']}** | {r['memory']['peak_per_chip_gib']:.2f} "
+                f"| {ro['useful_ratio']:.3f} "
+                f"| {ro['wire_bytes_per_chip'] / 1e9:.2f} |"
+            )
+    return "\n".join(lines)
+
+
+def summary(recs) -> str:
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    sk = sum(1 for r in recs.values() if r["status"] == "skipped")
+    er = sum(1 for r in recs.values() if r["status"] == "error")
+    return f"{ok} ok / {sk} skipped / {er} failed (of {len(recs)})"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    from repro.configs.archs import ARCHS
+
+    archs = sorted(ARCHS)
+    for mesh in ("pod1", "pod2"):
+        recs = load(args.dir, mesh)
+        if not recs:
+            continue
+        print(f"\n## {mesh}: {summary(recs)}\n")
+        print(roofline_table(recs, archs, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""The LAD train step (pure pjit/GSPMD) + training driver.
+
+``build_train_step`` assembles the full production step:
+
+  1. cyclic microbatch redundancy — ``d``-fold replication of the device-
+     blocked batch via rolls over the (data-sharded) device axis; GSPMD
+     lowers the rolls to collective-permutes, realizing the cyclic task
+     matrix S_hat on the wire,
+  2. forward/backward under ``protocol_context`` (core.protomath): every
+     parameter's cotangent is computed per-device-block, compressed,
+     Byzantine-corrupted and robustly aggregated (the paper's server),
+  3. ZeRO optimizer update on (data x model)-sharded params/state.
+
+Everything is GSPMD-sharded from the parameter/batch shardings; there is no
+shard_map — the protocol lives in the custom_vjp rules of protomath.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.configs.base import ArchConfig, TrainConfig
+from repro.core import attacks as attack_lib
+from repro.core import compression as comp_lib
+from repro.core.protomath import BlockedProtocol, protocol_context
+from repro.launch.mesh import data_axes, n_data_devices
+from repro.models.module import logical_to_mesh
+from repro.optim import make_optimizer
+from repro.optim.optimizers import OptState
+from repro.optim.schedule import linear_warmup_cosine
+
+
+def make_protocol(tcfg: TrainConfig, mesh) -> BlockedProtocol:
+    axes = data_axes(mesh)
+    return BlockedProtocol(
+        n_devices=n_data_devices(mesh),
+        data_axes=axes,
+        aggregator=tcfg.aggregator,
+        trim_frac=tcfg.trim_frac,
+        n_byz=tcfg.n_byz,
+        attack=attack_lib.AttackSpec(name=tcfg.attack, n_byz=tcfg.n_byz),
+        compression=comp_lib.CompressionSpec(
+            name=tcfg.compression, q_hat_frac=tcfg.q_hat_frac, levels=tcfg.quant_levels
+        ),
+        server=tcfg.server,
+        honest_mean=(tcfg.protocol == "none"),
+        model_size=mesh.shape.get("model", 1),
+    )
+
+
+def param_mesh_rules(mesh) -> dict:
+    axes = data_axes(mesh)
+    return {"fsdp": axes if len(axes) > 1 else axes[0], "tp": "model", "stack": None}
+
+
+def param_pspecs(specs, mesh, shapes=None):
+    return logical_to_mesh(specs, mesh, rules=param_mesh_rules(mesh), shapes=shapes)
+
+
+def shardings_for(specs, mesh, shapes=None):
+    """NamedSharding tree for a logical-spec tree on ``mesh``."""
+    pspecs = param_pspecs(specs, mesh, shapes)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(mesh, extra_dims: int = 1) -> P:
+    axes = data_axes(mesh)
+    lead = axes if len(axes) > 1 else axes[0]
+    return P(lead, *([None] * extra_dims))
+
+
+def redundant_batch(batch: Any, d: int, n_devices: int) -> Any:
+    """Cyclic gradient-coding redundancy in the global view.
+
+    The batch's leading dim is device-blocked ``(N * b, ...)``; device ``i``
+    must additionally compute subsets ``i+1 .. i+d-1`` (cyclic task matrix).
+    Rolling the device-block axis by -j hands block ``i`` block ``i+j``'s
+    data; GSPMD lowers the roll over the data-sharded axis to a
+    collective-permute ring — the redundancy traffic of LAD.
+    """
+    if d <= 1:
+        return batch
+
+    def leaf(x):
+        blocks = x.reshape((n_devices, x.shape[0] // n_devices) + x.shape[1:])
+        rolled = [jnp.roll(blocks, -j, axis=0) for j in range(d)]
+        out = jnp.concatenate(rolled, axis=1)  # (N, d*b, ...)
+        return out.reshape((x.shape[0] * d,) + x.shape[1:])
+
+    return jax.tree.map(leaf, batch)
+
+
+def build_train_step(cfg: ArchConfig, tcfg: TrainConfig, mesh, specs):
+    """Returns (step_fn, optimizer).  step(params, opt_state, batch, idx)."""
+    n_dev = n_data_devices(mesh)
+    protocol = make_protocol(tcfg, mesh)
+    opt = make_optimizer(tcfg.optimizer, momentum_dtype=tcfg.momentum_dtype)
+    schedule = linear_warmup_cosine(tcfg.lr, warmup=max(tcfg.steps // 20, 1),
+                                    total_steps=tcfg.steps)
+    d = 1 if tcfg.protocol == "none" else tcfg.d
+    base_key = jax.random.PRNGKey(tcfg.seed)
+    bspec = batch_pspec(mesh)
+
+    def step(params, opt_state, batch, step_idx):
+        round_key = jax.random.fold_in(base_key, step_idx)
+        batch_d = redundant_batch(batch, d, n_dev)
+        m = tcfg.microbatches
+
+        def loss_and_grad(mb, mb_key):
+            with protocol_context(protocol, mb_key):
+                def loss_fn(pp):
+                    return models.loss_fn(pp, specs, cfg, mb, remat=tcfg.remat)
+
+                return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+        if m <= 1:
+            (loss, metrics), grads = loss_and_grad(batch_d, round_key)
+        else:
+            # microbatch split within each device block: every microbatch
+            # keeps the (N, sl) device-block layout the protocol needs
+            db = batch_d["tokens"].shape[0] // n_dev  # rows per device block
+            assert db % m == 0, (db, m)
+            sl = db // m
+
+            def micro_slice(x, j):
+                blocks = x.reshape((n_dev, db) + x.shape[1:])
+                piece = jax.lax.dynamic_slice_in_dim(blocks, j * sl, sl, axis=1)
+                return piece.reshape((n_dev * sl,) + x.shape[1:])
+
+            def micro_step(acc, j):
+                mb = jax.tree.map(lambda x: micro_slice(x, j), batch_d)
+                (l, met), g = loss_and_grad(mb, jax.random.fold_in(round_key, j))
+                acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return acc, (l, met)
+
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, metricses) = jax.lax.scan(
+                micro_step, acc0, jnp.arange(m, dtype=jnp.int32)
+            )
+            grads = jax.tree.map(lambda g: g / m, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metricses)
+
+        lr = schedule(step_idx)
+        new_params, new_opt = opt.update(params, grads, opt_state, lr,
+                                         weight_decay=tcfg.weight_decay)
+        return new_params, new_opt, loss, metrics
+
+    return step, opt
+
+
+def opt_state_shardings(opt_shapes: OptState, param_shardings, mesh):
+    """Shardings for optimizer state: moments mirror the params."""
+    rep = NamedSharding(mesh, P())
+
+    def mirror(moment):
+        if moment == () or moment is None:
+            return ()
+        return param_shardings
+
+    return OptState(step=rep, mu=mirror(opt_shapes.mu), nu=mirror(opt_shapes.nu))
+
+
+@dataclasses.dataclass
+class Trainer:
+    """End-to-end training driver (used by examples/ on small models)."""
+
+    cfg: ArchConfig
+    tcfg: TrainConfig
+    mesh: Any
+
+    def __post_init__(self):
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        with self.mesh:
+            self.params, self.specs = models.init(key, self.cfg)
+            shardings = shardings_for(self.specs, self.mesh, self.params)
+            self.params = jax.tree.map(jax.device_put, self.params, shardings)
+            step_fn, self.opt = build_train_step(self.cfg, self.tcfg, self.mesh, self.specs)
+            self.opt_state = self.opt.init(self.params)
+            bspec = batch_pspec(self.mesh)
+            self._jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+            self._bsharding = NamedSharding(self.mesh, bspec)
+
+    def run(self, batches, log_every: int = 10):
+        history = []
+        with self.mesh:
+            for i, batch in enumerate(batches):
+                batch = {
+                    k: jax.device_put(
+                        v, NamedSharding(self.mesh, P(self._bsharding.spec[0],
+                                                      *([None] * (v.ndim - 1))))
+                    )
+                    for k, v in batch.items()
+                }
+                self.params, self.opt_state, loss, metrics = self._jit_step(
+                    self.params, self.opt_state, batch, jnp.asarray(i, jnp.int32)
+                )
+                if i % log_every == 0 or i == self.tcfg.steps - 1:
+                    history.append((i, float(loss)))
+        return history

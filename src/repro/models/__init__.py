@@ -1,0 +1,21 @@
+"""Pure-JAX model zoo: one period-scanned assembly for all ten architectures."""
+from repro.models import attention, layers, mamba, module, moe, rwkv, serving, transformer
+from repro.models.transformer import forward, init, loss_fn
+from repro.models.serving import decode_step, init_decode_state, prefill
+
+__all__ = [
+    "attention",
+    "layers",
+    "mamba",
+    "module",
+    "moe",
+    "rwkv",
+    "serving",
+    "transformer",
+    "forward",
+    "init",
+    "loss_fn",
+    "decode_step",
+    "init_decode_state",
+    "prefill",
+]

@@ -1,0 +1,113 @@
+"""Minimal functional module system.
+
+Parameters are nested dicts of jax arrays.  Every initializer returns a pair
+``(params, specs)`` with identical tree structure, where each spec leaf is a
+tuple of *logical axis names* (one per array dim) drawn from:
+
+  * ``"tp"``    — tensor-parallel dim (sharded over the mesh "model" axis)
+  * ``"fsdp"``  — ZeRO/FSDP dim (sharded over the mesh "data" (+"pod") axes)
+  * ``None``    — replicated dim
+  * ``"stack"`` — the leading period-scan stacking dim (never sharded)
+
+``logical_to_mesh`` maps a spec tree to ``jax.sharding.PartitionSpec``s for a
+given mesh, with divisibility checks downgrading a sharded dim to replicated
+when it cannot split evenly (GSPMD could pad, but even splits keep the
+roofline accounting honest).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Any  # nested dict of arrays
+Specs = Any  # matching nested dict of tuples of logical axis names
+
+DEFAULT_RULES = {
+    "tp": "model",
+    "fsdp": "data",
+    "stack": None,
+    None: None,
+}
+
+
+def truncated_normal_init(key, shape, dtype, scale: float):
+    """He-style scaled truncated normal (stddev = scale / sqrt(fan_in))."""
+    fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def dense_param(key, shape, axes, dtype=jnp.bfloat16, scale: float = 1.0):
+    """A weight matrix with its logical-axes spec."""
+    assert len(shape) == len(axes), (shape, axes)
+    return truncated_normal_init(key, shape, dtype, scale), tuple(axes)
+
+
+def scale_param(shape, axes, dtype=jnp.float32, value: float = 1.0):
+    """Norm scales etc. — deterministic init, usually replicated."""
+    assert len(shape) == len(axes)
+    return jnp.full(shape, value, dtype=dtype), tuple(axes)
+
+
+def zeros_param(shape, axes, dtype=jnp.bfloat16):
+    assert len(shape) == len(axes)
+    return jnp.zeros(shape, dtype=dtype), tuple(axes)
+
+
+def split_tree(pairs: dict) -> tuple[Params, Specs]:
+    """Split a nested dict of ``(param, spec)`` pairs into two parallel trees."""
+    params, specs = {}, {}
+    for name, val in pairs.items():
+        if isinstance(val, dict):
+            p, s = split_tree(val)
+        else:
+            p, s = val
+        params[name], specs[name] = p, s
+    return params, specs
+
+
+def _axis_size(mesh, mesh_axis) -> int:
+    if mesh_axis is None:
+        return 1
+    if isinstance(mesh_axis, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in mesh_axis)
+    return mesh.shape[mesh_axis]
+
+
+def logical_to_mesh(specs: Specs, mesh, rules: dict | None = None, shapes: Params | None = None):
+    """Map a logical-spec tree to a PartitionSpec tree for ``mesh``.
+
+    If ``shapes`` (a tree of arrays or ShapeDtypeStructs) is given, any dim
+    that does not divide evenly by its mesh-axis size is downgraded to
+    replicated.
+    """
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+
+    def one(spec, shaped=None):
+        entries = []
+        for i, ax in enumerate(spec):
+            mesh_ax = rules.get(ax, None)
+            if mesh_ax is not None and shaped is not None:
+                if shaped.shape[i] % _axis_size(mesh, mesh_ax) != 0:
+                    mesh_ax = None
+            entries.append(mesh_ax)
+        return P(*entries)
+
+    if shapes is None:
+        return jax.tree.map(one, specs, is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree.map(
+        lambda s, a: one(s, a), specs, shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def tree_size(params) -> int:
+    """Total number of parameters."""
+    return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def tree_bytes(params) -> int:
+    return sum(int(math.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(params))

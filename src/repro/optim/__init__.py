@@ -1,0 +1,14 @@
+"""Optimizers (built in-tree — no optax dependency)."""
+from repro.optim.optimizers import OptState, adamw, make_optimizer, sgd, sgd_momentum
+from repro.optim.schedule import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = [
+    "OptState",
+    "adamw",
+    "sgd",
+    "sgd_momentum",
+    "make_optimizer",
+    "constant",
+    "cosine_decay",
+    "linear_warmup_cosine",
+]

@@ -1,0 +1,121 @@
+"""SGD / SGD-momentum / AdamW with dtype-configurable state.
+
+An optimizer is a pair of pure functions:
+
+    state = opt.init(params)
+    new_params, new_state = opt.update(params, grads, state, lr)
+
+State leaves inherit the *sharding-relevant shape* of their parameter, so the
+ZeRO layout (params sharded over data x model) extends to optimizer state for
+free.  ``momentum_dtype`` lets the 398B-class configs keep Adam moments in
+bf16 (12 -> 6 bytes/param), which is what makes them fit 16 GB/chip meshes —
+recorded in DESIGN.md as a hardware adaptation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class OptState:
+    step: jax.Array
+    mu: Any  # first moment / momentum (or () for plain SGD)
+    nu: Any  # second moment (or () for SGD/momentum)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32), mu=(), nu=())
+
+    def update(params, grads, state, lr, weight_decay=0.0):
+        def upd(p, g):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * g).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, grads)
+        return new_params, OptState(step=state.step + 1, mu=(), nu=())
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(beta: float = 0.9, momentum_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        mu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=momentum_dtype), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=())
+
+    def update(params, grads, state, lr, weight_decay=0.0):
+        def upd(p, g, m):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m_new = beta * m.astype(jnp.float32) + g
+            return (p.astype(jnp.float32) - lr * m_new).astype(p.dtype), m_new.astype(
+                momentum_dtype
+            )
+
+        out = jax.tree.map(upd, params, grads, state.mu)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step=state.step + 1, mu=new_mu, nu=())
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    momentum_dtype=jnp.float32,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=momentum_dtype)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(params, grads, state, lr, weight_decay=0.0):
+        t = state.step + 1
+        c1 = 1.0 - b1 ** t.astype(jnp.float32)
+        c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            m_hat = m_new / c1
+            v_hat = v_new / c2
+            step_vec = m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (
+                (p.astype(jnp.float32) - lr * step_vec).astype(p.dtype),
+                m_new.astype(momentum_dtype),
+                v_new.astype(momentum_dtype),
+            )
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        pick = lambda i: jax.tree.map(
+            lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return pick(0), OptState(step=t, mu=pick(1), nu=pick(2))
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, *, momentum_dtype: str = "float32", **kwargs) -> Optimizer:
+    md = jnp.dtype(momentum_dtype)
+    if name == "sgd":
+        return sgd()
+    if name in ("momentum", "sgd_momentum"):
+        return sgd_momentum(momentum_dtype=md, **kwargs)
+    if name == "adamw":
+        return adamw(momentum_dtype=md, **kwargs)
+    raise KeyError(f"unknown optimizer {name!r}")

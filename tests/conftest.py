@@ -1,0 +1,13 @@
+"""Shared fixtures.
+
+NOTE: no XLA_FLAGS here — smoke tests and benches must see the 1 real CPU
+device.  Tests that need a small virtual mesh spawn a subprocess (see
+tests/test_distributed.py) or run single-device shard_map.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

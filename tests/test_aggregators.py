@@ -1,0 +1,112 @@
+"""kappa-robustness and correctness properties of the aggregation rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregators as agg
+
+
+def _honest_byz(key, n, h, q, spread=1.0, byz_scale=100.0):
+    k1, k2 = jax.random.split(key)
+    honest = spread * jax.random.normal(k1, (h, q))
+    byz = byz_scale * jax.random.normal(k2, (n - h, q))
+    return jnp.concatenate([honest, byz]), honest
+
+
+RULES = ["median", "cwtm", "geomed", "krum", "multi_krum", "mcc", "tgn", "cwtm-nnm"]
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_kappa_robustness_definition(rule, key):
+    """Definition 1: ||agg - honest_mean||^2 <= kappa * mean ||z_i - mean||^2
+    must hold with a *bounded* kappa no matter how wild the byzantine values
+    are (we check a generous numeric kappa)."""
+    n, h, q = 20, 15, 64
+    msgs, honest = _honest_byz(key, n, h, q, byz_scale=1e4)
+    a = agg.make_aggregator(rule, n_byz=n - h, trim_frac=0.25)
+    out = a(msgs)
+    mean_h = jnp.mean(honest, axis=0)
+    dev = float(jnp.sum((out - mean_h) ** 2))
+    spread = float(jnp.mean(jnp.sum((honest - mean_h) ** 2, axis=1)))
+    assert dev <= 100.0 * spread, f"{rule}: dev={dev} spread={spread}"
+
+
+@pytest.mark.parametrize("rule", RULES + ["mean"])
+def test_agrees_with_mean_when_identical(rule, key):
+    """All rules must return the common value when every message is equal."""
+    n, q = 12, 32
+    v = jax.random.normal(key, (q,))
+    msgs = jnp.tile(v, (n, 1))
+    a = agg.make_aggregator(rule, n_byz=2, trim_frac=0.25)
+    np.testing.assert_allclose(np.asarray(a(msgs)), np.asarray(v), rtol=2e-4, atol=1e-5)
+
+
+def test_mean_not_robust(key):
+    n, h, q = 10, 8, 16
+    msgs, honest = _honest_byz(key, n, h, q, byz_scale=1e6)
+    out = agg.mean(msgs)
+    dev = float(jnp.linalg.norm(out - jnp.mean(honest, axis=0)))
+    assert dev > 1e3, "mean must be destroyed by large byzantine values"
+
+
+@given(st.integers(5, 24), st.data())
+@settings(max_examples=25, deadline=None)
+def test_cwtm_bounds_hypothesis(n, data):
+    """CWTM output is coordinate-wise within [min, max] of the messages and
+    invariant to permutation of the senders."""
+    q = data.draw(st.integers(1, 8))
+    trim = data.draw(st.floats(0.0, 0.45))
+    vals = data.draw(
+        st.lists(
+            st.lists(st.floats(-1e6, 1e6, allow_nan=False, width=32),
+                     min_size=q, max_size=q),
+            min_size=n, max_size=n,
+        )
+    )
+    msgs = jnp.asarray(vals, jnp.float32)
+    if int(trim * n) * 2 >= n:
+        return
+    out = agg.cwtm(msgs, trim_frac=trim)
+    assert (out <= jnp.max(msgs, axis=0) + 1e-5).all()
+    assert (out >= jnp.min(msgs, axis=0) - 1e-5).all()
+    perm = np.random.default_rng(0).permutation(n)
+    np.testing.assert_allclose(np.asarray(agg.cwtm(msgs[perm], trim_frac=trim)),
+                               np.asarray(out), rtol=1e-5, atol=1e-6)
+
+
+def test_geometric_median_minimizes(key):
+    """Weiszfeld output should (approximately) minimize sum of distances."""
+    msgs = jax.random.normal(key, (9, 4))
+    gm = agg.geometric_median(msgs, iters=64)
+
+    def total_dist(z):
+        return float(jnp.sum(jnp.linalg.norm(msgs - z[None], axis=1)))
+
+    base = total_dist(gm)
+    rng = np.random.default_rng(1)
+    for _ in range(30):
+        assert base <= total_dist(gm + jnp.asarray(rng.normal(0, 0.1, 4), jnp.float32)) + 1e-3
+
+
+def test_nnm_reduces_byz_influence(key):
+    """NNM pre-mixing should bring CWTM closer to the honest mean under a
+    colluding attack (the paper's motivation for CWTM-NNM)."""
+    n, h, q = 20, 14, 48
+    k1, k2 = jax.random.split(key)
+    honest = jax.random.normal(k1, (h, q)) + 3.0
+    adv = jnp.tile(-3.0 * jnp.mean(honest, axis=0), (n - h, 1))
+    msgs = jnp.concatenate([honest, adv])
+    mean_h = jnp.mean(honest, axis=0)
+    plain = agg.cwtm(msgs, trim_frac=0.3)
+    mixed = agg.nnm_then(lambda m: agg.cwtm(m, trim_frac=0.3), n_byz=n - h)(msgs)
+    assert jnp.linalg.norm(mixed - mean_h) <= jnp.linalg.norm(plain - mean_h) + 1e-4
+
+
+def test_kappa_bounds_table():
+    assert agg.kappa_bound("mean", 10, 8) == float("inf")
+    assert agg.kappa_bound("cwtm", 10, 8) > 0
+    assert agg.kappa_bound("cwtm", 10, 10) == 0.0
+    # more byzantine -> larger kappa
+    assert agg.kappa_bound("cwtm", 20, 12) > agg.kappa_bound("cwtm", 20, 18)

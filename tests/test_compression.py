@@ -1,0 +1,90 @@
+"""Definition-2 properties of the compression operators (unbiasedness + delta)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as comp
+
+
+@pytest.mark.parametrize(
+    "spec",
+    [
+        comp.CompressionSpec("rand_sparse", q_hat_frac=0.3),
+        comp.CompressionSpec("rand_sparse_shared", q_hat_frac=0.3),
+        comp.CompressionSpec("quant", levels=8, chunk=64),
+    ],
+)
+def test_unbiasedness(spec, key):
+    """E[C(g)] = g (eq. 9), estimated over many independent draws."""
+    q = 128
+    g = jax.random.normal(key, (q,))
+    c = spec.make(q)
+    keys = jax.random.split(jax.random.PRNGKey(7), 4000)
+    samples = jax.vmap(lambda k: c(k, g))(keys)
+    est = jnp.mean(samples, axis=0)
+    err = float(jnp.linalg.norm(est - g) / jnp.linalg.norm(g))
+    assert err < 0.05, f"{spec.name}: relative bias {err}"
+
+
+@pytest.mark.parametrize(
+    "spec",
+    [
+        comp.CompressionSpec("rand_sparse", q_hat_frac=0.25),
+        comp.CompressionSpec("rand_sparse_shared", q_hat_frac=0.25),
+        comp.CompressionSpec("quant", levels=16, chunk=128),
+    ],
+)
+def test_variance_bounded_by_delta(spec, key):
+    """E||C(g)-g||^2 <= delta ||g||^2 (eq. 10)."""
+    q = 256
+    g = jax.random.normal(key, (q,))
+    c = spec.make(q)
+    delta = spec.delta(q)
+    keys = jax.random.split(jax.random.PRNGKey(3), 2000)
+    errs = jax.vmap(lambda k: jnp.sum((c(k, g) - g) ** 2))(keys)
+    bound = delta * float(jnp.sum(g * g))
+    assert float(jnp.mean(errs)) <= bound * 1.05 + 1e-9
+
+
+def test_rand_sparse_keeps_exactly_qhat(key):
+    q, frac = 200, 0.3
+    spec = comp.CompressionSpec("rand_sparse", q_hat_frac=frac)
+    g = jax.random.normal(key, (q,)) + 2.0  # no zeros
+    out = spec.make(q)(jax.random.PRNGKey(1), g)
+    assert int(jnp.sum(out != 0)) == int(frac * q)
+
+
+def test_shared_mask_is_shared(key):
+    """Same key -> identical support across devices (the wire win)."""
+    q = 128
+    spec = comp.CompressionSpec("rand_sparse_shared", q_hat_frac=0.5)
+    c = spec.make(q)
+    g1 = jax.random.normal(key, (q,)) + 3.0
+    g2 = jax.random.normal(jax.random.fold_in(key, 1), (q,)) + 3.0
+    shared = jax.random.PRNGKey(9)
+    np.testing.assert_array_equal(np.asarray(c(shared, g1) != 0), np.asarray(c(shared, g2) != 0))
+
+
+def test_topk_is_biased_contraction(key):
+    q = 100
+    spec = comp.CompressionSpec("top_k", q_hat_frac=0.4)
+    g = jax.random.normal(key, (q,))
+    out = spec.make(q)(jax.random.PRNGKey(0), g)
+    # top-k is a contraction: ||C(g)-g||^2 <= (1 - k/Q) ||g||^2
+    assert float(jnp.sum((out - g) ** 2)) <= (1 - 0.4) * float(jnp.sum(g * g)) + 1e-6
+
+
+@given(st.integers(8, 300), st.floats(0.05, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_wire_bits_monotone(q, frac):
+    dense = comp.wire_bits(comp.CompressionSpec("none"), q)
+    sparse = comp.wire_bits(comp.CompressionSpec("rand_sparse_shared", q_hat_frac=frac), q)
+    assert sparse <= dense + 1e-9
+
+
+def test_quant_wire_bits():
+    spec = comp.CompressionSpec("quant", levels=16, chunk=1024)
+    bits = comp.wire_bits(spec, 1 << 20)
+    assert bits < 0.25 * 32 * (1 << 20)  # ~6 bits/coord + scales << fp32

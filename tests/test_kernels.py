@@ -1,0 +1,81 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n,q,trim", [(8, 2048, 1), (16, 4096, 2), (32, 8192, 4), (16, 2048, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cwtm_kernel_sweep(n, q, trim, dtype, key):
+    msgs = (jax.random.normal(key, (n, q)) * 3).astype(dtype)
+    out = ops.cwtm(msgs, trim, backend="interpret")
+    want = ref.cwtm_ref(msgs, trim)
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), rtol=rtol, atol=1e-6
+    )
+
+
+@given(st.integers(2, 24), st.sampled_from([1024, 2048, 4096]))
+@settings(max_examples=10, deadline=None)
+def test_cwtm_kernel_property(n, q):
+    key = jax.random.PRNGKey(n * q)
+    msgs = jax.random.normal(key, (n, q))
+    trim = (n - 1) // 3
+    out = ops.cwtm(msgs, trim, backend="interpret")
+    want = ref.cwtm_ref(msgs, trim)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-6)
+    # trimmed mean within per-coordinate bounds
+    assert (np.asarray(out) <= np.asarray(msgs.max(0)) + 1e-5).all()
+    assert (np.asarray(out) >= np.asarray(msgs.min(0)) - 1e-5).all()
+
+
+@pytest.mark.parametrize("d,q", [(2, 2048), (5, 4096), (8, 8192)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_coded_combine_kernel(d, q, dtype, key):
+    grads = (jax.random.normal(key, (d, q))).astype(dtype)
+    w = jnp.full((d,), 1.0 / d, jnp.float32)
+    out = ops.coded_combine(grads, w, backend="interpret")
+    want = ref.coded_combine_ref(grads, w)
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), rtol=rtol, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("q,levels,block", [(4096, 16, 1024), (8192, 4, 512), (2048, 64, 2048)])
+def test_quantize_kernel(q, levels, block, key):
+    g = jax.random.normal(key, (q,))
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (q,))
+    out = ops.stochastic_quantize(g, u, levels, block, backend="interpret")
+    want = ref.stochastic_quantize_ref(g, u, levels, block)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+    # quantization grid: |out| <= max|g| per block and error bounded by step
+    gb = np.asarray(g).reshape(-1, block)
+    ob = np.asarray(out).reshape(-1, block)
+    scale = np.abs(gb).max(1, keepdims=True)
+    assert (np.abs(ob) <= scale + 1e-6).all()
+    assert (np.abs(ob - gb) <= scale / levels + 1e-6).all()
+
+
+@pytest.mark.parametrize("n,q", [(8, 2048), (16, 4096), (32, 8192)])
+def test_gram_kernel(n, q, key):
+    msgs = jax.random.normal(key, (n, q))
+    out = ops.pairwise_sqdist(msgs, backend="interpret")
+    want = ref.pairwise_sqdist_ref(msgs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-2)
+    assert (np.diag(np.asarray(out)) < 1e-2).all()
+
+
+def test_kernel_vs_xla_backends_agree(key):
+    """ops.* must agree across backend="xla" and backend="interpret"."""
+    msgs = jax.random.normal(key, (16, 4096))
+    np.testing.assert_allclose(
+        np.asarray(ops.cwtm(msgs, 2, backend="xla")),
+        np.asarray(ops.cwtm(msgs, 2, backend="interpret")),
+        rtol=1e-5, atol=1e-6,
+    )

@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests: reduced variant of every assigned family
+runs one forward/train step on CPU, asserting output shapes and no NaNs;
+plus decode/prefill consistency checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs.archs import ARCHS, reduced
+from repro.models.module import tree_size
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch(cfg, key, b=2, s=64):
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family in ("vlm", "audio"):
+        enc = cfg.encoder
+        batch["frontend"] = jax.random.normal(
+            jax.random.fold_in(key, 9), (b, enc.n_frontend_tokens, enc.d_frontend)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step(arch, key):
+    """Reduced variant: forward + grad, correct shapes, finite values."""
+    cfg = reduced(ARCHS[arch])
+    assert cfg.d_model <= 512 and cfg.n_layers <= 2 * len(cfg.period)
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    params, specs = models.init(key, cfg)
+    batch = _batch(cfg, key)
+    (loss, metrics), grads = jax.value_and_grad(models.loss_fn, has_aux=True)(
+        params, specs, cfg, batch
+    )
+    assert jnp.isfinite(loss), arch
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    )
+    assert jnp.isfinite(gnorm) and gnorm > 0, arch
+    logits, aux = models.forward(params, specs, cfg, batch["tokens"],
+                                 frontend=batch.get("frontend"))
+    assert logits.shape == (2, 64, cfg.vocab)
+    assert not jnp.any(jnp.isnan(logits))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_decode_step(arch, key):
+    cfg = reduced(ARCHS[arch])
+    params, specs = models.init(key, cfg)
+    state = models.init_decode_state(cfg, batch=2, seq_len=64, filled=32)
+    token = jax.random.randint(key, (2, 1), 0, cfg.vocab)
+    logits, new_state = models.decode_step(params, specs, cfg, token, state)
+    assert logits.shape == (2, cfg.vocab)
+    assert not jnp.any(jnp.isnan(logits))
+    # caches advanced
+    for leaf_old, leaf_new in zip(jax.tree.leaves(state), jax.tree.leaves(new_state)):
+        assert leaf_old.shape == leaf_new.shape
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "rwkv6-1.6b", "whisper-small"])
+def test_prefill_matches_forward_last_logits(arch, key):
+    """prefill's last-position logits must equal forward's last position."""
+    cfg = reduced(ARCHS[arch])
+    params, specs = models.init(key, cfg)
+    batch = _batch(cfg, key, b=2, s=32)
+    logits_full, _ = models.forward(params, specs, cfg, batch["tokens"],
+                                    frontend=batch.get("frontend"))
+    logits_pre, state = models.prefill(params, specs, cfg, batch["tokens"],
+                                       frontend=batch.get("frontend"))
+    np.testing.assert_allclose(
+        np.asarray(logits_pre), np.asarray(logits_full[:, -1, :]), rtol=2e-3, atol=2e-3
+    )
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-1.6b", "smollm-360m"])
+def test_prefill_then_decode_matches_forward(arch, key):
+    """decode(t+1) after prefill(0..t) must match the full forward at t+1."""
+    cfg = reduced(ARCHS[arch])
+    params, specs = models.init(key, cfg)
+    s = 32
+    tokens = jax.random.randint(key, (2, s + 1), 0, cfg.vocab)
+    logits_full, _ = models.forward(params, specs, cfg, tokens)
+    _, state = models.prefill(params, specs, cfg, tokens[:, :s], capacity=s + 8)
+    logits_dec, _ = models.decode_step(params, specs, cfg, tokens[:, s:], state)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_full[:, -1, :]), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_full_configs_match_assignment():
+    """Exact architecture numbers from the assignment table."""
+    a = ARCHS
+    assert (a["jamba-1.5-large-398b"].n_layers, a["jamba-1.5-large-398b"].d_model) == (72, 8192)
+    assert a["jamba-1.5-large-398b"].moe.n_experts == 16
+    assert a["granite-8b"].d_ff == 14336 and a["granite-8b"].n_kv_heads == 8
+    assert a["phi4-mini-3.8b"].vocab == 200064
+    assert a["llama-3.2-vision-90b"].n_layers == 100
+    assert a["rwkv6-1.6b"].d_model == 2048 and a["rwkv6-1.6b"].family == "ssm"
+    assert a["smollm-360m"].n_heads == 15 and a["smollm-360m"].n_kv_heads == 5
+    assert a["granite-moe-3b-a800m"].moe.n_experts == 40
+    assert a["granite-moe-3b-a800m"].moe.top_k == 8
+    assert a["qwen3-moe-235b-a22b"].moe.n_experts == 128
+    assert a["qwen3-moe-235b-a22b"].vocab == 151936
+    assert a["whisper-small"].encoder.n_encoder_layers == 12
+    assert a["yi-9b"].vocab == 64000 and a["yi-9b"].n_kv_heads == 4
+
+
+def test_full_param_counts_via_eval_shape():
+    """The big configs hit their nominal sizes (no allocation)."""
+    targets = {
+        "jamba-1.5-large-398b": (380e9, 420e9),
+        "qwen3-moe-235b-a22b": (220e9, 250e9),
+        "llama-3.2-vision-90b": (80e9, 95e9),
+        "yi-9b": (8e9, 10e9),
+        "smollm-360m": (0.3e9, 0.5e9),
+    }
+    for name, (lo, hi) in targets.items():
+        cfg = ARCHS[name]
+        shapes = jax.eval_shape(lambda k, c=cfg: models.init(k, c)[0], jax.random.PRNGKey(0))
+        n = tree_size(jax.tree.leaves(shapes))
+        assert lo <= n <= hi, f"{name}: {n / 1e9:.1f}B not in [{lo / 1e9}, {hi / 1e9}]"

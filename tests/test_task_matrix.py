@@ -1,0 +1,75 @@
+"""Task-matrix properties (Lemma 1 optimality, assignment correctness)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import task_matrix as tm
+from repro.core import theory
+
+
+@given(st.integers(2, 40), st.data())
+@settings(max_examples=40, deadline=None)
+def test_cyclic_matrix_structure(n, data):
+    d = data.draw(st.integers(1, n))
+    s = tm.cyclic_task_matrix(n, d)
+    assert s.shape == (n, n)
+    assert (s.sum(axis=1) == d).all(), "every row has exactly d ones"
+    assert (s.sum(axis=0) == d).all(), "cyclic matrix is column-balanced"
+    # row i is row 0 rolled by i
+    for i in range(0, n, max(1, n // 5)):
+        np.testing.assert_array_equal(s[i], np.roll(s[0], i))
+
+
+@given(st.integers(2, 30), st.data())
+@settings(max_examples=30, deadline=None)
+def test_lemma1_closed_form_matches_expectation(n, data):
+    d = data.draw(st.integers(1, n))
+    h = data.draw(st.integers(n // 2 + 1, n))
+    s = tm.cyclic_task_matrix(n, d)
+    # the generic evaluation (eqs. 38-41) must equal the closed form (eq. 17)
+    assert tm.assignment_deviation(s, h) == pytest.approx(
+        theory.lemma1_deviation(n, h, d), rel=1e-9, abs=1e-12
+    )
+
+
+def test_cyclic_beats_unbalanced_matrices():
+    """Lemma 1: the cyclic (column-balanced) matrix attains the infimum."""
+    n, h, d = 8, 6, 3
+    s_cyc = tm.cyclic_task_matrix(n, d)
+    base = tm.assignment_deviation(s_cyc, h)
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        s = np.zeros((n, n), dtype=np.int32)
+        for i in range(n):
+            s[i, rng.choice(n, size=d, replace=False)] = 1
+        assert tm.assignment_deviation(s, h) >= base - 1e-12
+
+
+def test_fractional_repetition_balanced():
+    s = tm.fractional_repetition_matrix(12, 4)
+    assert tm.is_column_balanced(s)
+    assert (s.sum(axis=1) == 4).all()
+    with pytest.raises(ValueError):
+        tm.fractional_repetition_matrix(10, 4)
+
+
+def test_sample_assignment_is_valid(key):
+    n, d = 16, 5
+    a = tm.sample_assignment(key, n, d)
+    assert sorted(np.asarray(a.task_index).tolist()) == list(range(n))
+    assert sorted(np.asarray(a.subset_perm).tolist()) == list(range(n))
+    assert a.subsets.shape == (n, d)
+    # device i computes d *distinct* subsets
+    for row in np.asarray(a.subsets):
+        assert len(set(row.tolist())) == d
+
+
+def test_assignment_uniform_marginals(key):
+    """Each subset is computed by exactly d devices every round (cyclic code)."""
+    n, d = 8, 3
+    for i in range(10):
+        a = tm.sample_assignment(jax.random.fold_in(key, i), n, d)
+        counts = np.bincount(np.asarray(a.subsets).reshape(-1), minlength=n)
+        assert (counts == d).all()

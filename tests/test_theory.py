@@ -1,0 +1,94 @@
+"""Convergence-theory constants (Lemmas 1-4, Theorems 1-2) sanity checks."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory
+from repro.core.theory import TheoryParams
+
+
+def test_paper_example_min_d():
+    """Section VI: N=100, H=65, kappa=1.5 -> improvement for d >= 3."""
+    assert theory.min_d_for_improvement(100, 65, 1.5) == 3
+
+
+def test_error_decreases_with_d():
+    """Fig. 3: the error term shrinks monotonically as d grows."""
+    vals = [
+        theory.com_lad_error_order(TheoryParams(n=100, h=65, d=d, kappa=1.5, delta=0.5))
+        for d in range(1, 101)
+    ]
+    assert all(a >= b - 1e-12 for a, b in zip(vals, vals[1:]))
+
+
+def test_error_increases_with_delta():
+    """Fig. 2: more compression error (delta) -> larger error term."""
+    vals = [
+        theory.com_lad_error_order(TheoryParams(n=100, h=65, d=5, kappa=1.5, delta=dl))
+        for dl in [0.0, 0.25, 0.5, 1.0, 2.0]
+    ]
+    assert all(a <= b + 1e-12 for a, b in zip(vals, vals[1:]))
+
+
+def test_lad_error_vanishes_at_d_equals_n():
+    p = TheoryParams(n=50, h=30, d=50, kappa=1.0)
+    assert theory.lad_error_order(p) == 0.0
+    x1, x2, x3, _ = theory.xis(p)
+    assert x1 == 0.0 and x2 == 0.0 and x3 == 0.0
+
+
+def test_lad_is_com_lad_at_delta_zero():
+    """Theorem 2 should be Theorem 1 with delta = 0 (the paper's derivation).
+
+    The paper's printed eqs. (30)-(31) carry an 8x coefficient where the
+    delta=0 substitution of eqs. (24)-(25) gives 4x — a documented paper
+    inconsistency (see theory.xis).  xi_1, xi_2 match exactly; xi_3, xi_4's
+    lam-term is exactly 2x."""
+    p = TheoryParams(n=64, h=40, d=8, kappa=1.2, beta=2.0, delta=0.0)
+    k1, k2, k3, k4 = theory.kappas(p)
+    x1, x2, x3, x4 = theory.xis(p)
+    assert (k1, k2) == pytest.approx((x1, x2), rel=1e-12)
+    assert x3 == pytest.approx(2.0 * k3, rel=1e-12)
+    lam_term_k = k4 - 2.0 / p.n**2
+    lam_term_x = x4 - 2.0 / p.n**2
+    assert lam_term_x == pytest.approx(2.0 * lam_term_k, rel=1e-12)
+
+
+@given(
+    st.integers(4, 200),
+    st.data(),
+)
+@settings(max_examples=50, deadline=None)
+def test_constants_nonnegative_and_lr_valid(n, data):
+    h = data.draw(st.integers(n // 2 + 1, n))
+    d = data.draw(st.integers(1, n))
+    kappa = data.draw(st.floats(0.0, 10.0))
+    delta = data.draw(st.floats(0.0, 5.0))
+    p = TheoryParams(n=n, h=h, d=d, kappa=kappa, beta=1.0, delta=delta)
+    for v in theory.kappas(p) + theory.xis(p):
+        assert v >= -1e-12
+    lr = theory.max_learning_rate(p)
+    assert lr >= 0.0
+    if lr > 0:
+        # the error term is finite for any admissible step size below the cap
+        assert math.isfinite(theory.com_lad_error_term(p, lr * 0.5))
+
+
+def test_lemma1_shrinks_with_h_and_d():
+    base = theory.lemma1_deviation(100, 65, 5)
+    assert theory.lemma1_deviation(100, 80, 5) < base  # more honest -> smaller
+    assert theory.lemma1_deviation(100, 65, 20) < base  # more redundancy -> smaller
+    assert theory.lemma1_deviation(100, 65, 100) == 0.0  # d=N -> zero
+
+
+def test_baseline_comparison_eq35_vs_eq36():
+    """LAD error < robust-aggregation-alone error for d >= the threshold."""
+    n, h, kappa = 100, 65, 1.5
+    dmin = theory.min_d_for_improvement(n, h, kappa)
+    p_lo = TheoryParams(n=n, h=h, d=max(dmin - 1, 1), kappa=kappa)
+    p_hi = TheoryParams(n=n, h=h, d=dmin, kappa=kappa)
+    base = theory.baseline_error_order(p_hi)
+    assert theory.lad_error_order(p_hi) <= base + 1e-9
+    if dmin > 1:
+        assert theory.lad_error_order(p_lo) > base * 0.9  # near/above threshold
