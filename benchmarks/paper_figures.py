@@ -6,41 +6,42 @@ follows Section VII exactly: N=100 subsets of one sample each,
 z_k ~ N(0, 100 I_100), per-subset ground truth with variance 1 + k*sigma_H,
 sign-flipping attack with coefficient -2.
 
+Every experimental curve comes from the declarative scenario registry
+(``repro.core.scenarios.PAPER_FIG4/5/6``) executed through the scan-compiled
+engine: one compile + one device->host transfer per curve, instead of the
+per-iteration dispatch loop this file used to hand-wire.
+
 Scale notes: iteration counts are reduced (CPU, one core) but all protocol
 parameters (N=100, H, d values, learning rates, trim fraction, Q_hat) match
 the paper.
 """
 from __future__ import annotations
 
-import time
-
 import jax
-import jax.numpy as jnp
 
-from repro.core import ProtocolConfig, protocol_round, theory
-from repro.core.attacks import AttackSpec
-from repro.core.compression import CompressionSpec
-from repro.data.synthetic import linear_regression_problem, linreg_loss, linreg_subset_grads
+from repro.core import scenarios, theory
+from repro.data.synthetic import linear_regression_problem
 
 N = 100
 DIM = 100
+RECORD_EVERY = 10
 
 
-def _train_curve(cfg: ProtocolConfig, z, y, lr, steps, seed=0, record_every=10):
-    x = jnp.zeros((DIM,))
-    key = jax.random.PRNGKey(seed)
+def _curves(registry, steps, problem, seed=0):
+    """Run every scenario of a registry dict on a shared problem."""
+    return {
+        label: scenarios.run_scenario(scn, steps, seed=seed, problem=problem).curve(
+            every=RECORD_EVERY
+        )
+        for label, scn in registry.items()
+    }
 
-    @jax.jit
-    def step(x, k):
-        g = protocol_round(cfg, k, linreg_subset_grads(z, y, x))
-        return x - lr * g * cfg.n_devices  # g estimates (1/N) grad F; eq. (7) uses F
 
-    curve = []
-    for i in range(steps):
-        x = step(x, jax.random.fold_in(key, i))
-        if i % record_every == 0 or i == steps - 1:
-            curve.append((i, float(linreg_loss(z, y, x))))
-    return curve
+def _rows(curves):
+    rows = []
+    for label, curve in curves.items():
+        rows += [(label, i, v) for i, v in curve]
+    return rows
 
 
 def fig2_error_vs_delta():
@@ -69,30 +70,11 @@ def fig3_error_vs_d():
     return rows
 
 
-def fig4_training_loss(steps: int = 800, lr: float = 1e-6, sigma_h: float = 0.3):
+def fig4_training_loss(steps: int = 800, sigma_h: float = 0.3):
     """Training loss vs iterations: VA / CWTM / CWTM-NNM / DRACO /
     LAD-CWTM(-NNM) at d in {5, 10, 20}.  H=80, sign-flip coeff -2."""
-    key = jax.random.PRNGKey(0)
-    z, y = linear_regression_problem(key, n=N, dim=DIM, sigma_h=sigma_h)
-    n_byz = 20
-    atk = AttackSpec("sign_flip", n_byz=n_byz)
-
-    def cfg(method, d, agg, nb=n_byz):
-        return ProtocolConfig(n_devices=N, d=d, method=method, aggregator=agg,
-                              trim_frac=0.1, n_byz=nb, attack=atk)
-
-    curves = {
-        "VA": _train_curve(cfg("plain", 1, "mean"), z, y, lr, steps),
-        "CWTM": _train_curve(cfg("plain", 1, "cwtm"), z, y, lr, steps),
-        "CWTM-NNM": _train_curve(cfg("plain", 1, "cwtm-nnm"), z, y, lr, steps),
-        "LAD-CWTM-d5": _train_curve(cfg("lad", 5, "cwtm"), z, y, lr, steps),
-        "LAD-CWTM-d10": _train_curve(cfg("lad", 10, "cwtm"), z, y, lr, steps),
-        "LAD-CWTM-d20": _train_curve(cfg("lad", 20, "cwtm"), z, y, lr, steps),
-        "LAD-CWTM-NNM-d10": _train_curve(cfg("lad", 10, "cwtm-nnm"), z, y, lr, steps),
-        "DRACO-d41": _train_curve(
-            ProtocolConfig(n_devices=82, d=41, method="draco", n_byz=20, attack=atk),
-            z[:82], y[:82], lr, steps),
-    }
+    problem = linear_regression_problem(jax.random.PRNGKey(0), n=N, dim=DIM, sigma_h=sigma_h)
+    curves = _curves(scenarios.PAPER_FIG4, steps, problem)
     final = {k: v[-1][1] for k, v in curves.items()}
     # the paper's ordering claims (Fig. 4): redundancy helps per aggregator,
     # more d helps, NNM helps on top of LAD, DRACO (exact recovery) is best,
@@ -107,55 +89,33 @@ def fig4_training_loss(steps: int = 800, lr: float = 1e-6, sigma_h: float = 0.3)
     # in-spread byzantine vectors into the average when the honest spread is
     # large; redundancy (LAD) shrinks the spread and restores NNM's gain,
     # which is exactly the paper's motivation for combining them.
-    rows = []
-    for label, curve in curves.items():
-        rows += [(label, i, v) for i, v in curve]
-    return rows
+    return _rows(curves)
 
 
-def fig5_heterogeneity(steps: int = 600, lr: float = 1e-6):
+def fig5_heterogeneity(steps: int = 600):
     """sigma_H in {0, 0.1}: the LAD advantage grows with heterogeneity."""
     rows = []
-    gaps = {}
+    finals = {}
     for sigma in [0.0, 0.1]:
-        key = jax.random.PRNGKey(1)
-        z, y = linear_regression_problem(key, n=N, dim=DIM, sigma_h=sigma)
-        atk = AttackSpec("sign_flip", n_byz=20)
-        plain = _train_curve(
-            ProtocolConfig(n_devices=N, d=1, method="plain", aggregator="cwtm",
-                           trim_frac=0.1, n_byz=20, attack=atk), z, y, lr, steps)
-        lad = _train_curve(
-            ProtocolConfig(n_devices=N, d=10, method="lad", aggregator="cwtm",
-                           trim_frac=0.1, n_byz=20, attack=atk), z, y, lr, steps)
-        rows += [(f"CWTM-s{sigma}", i, v) for i, v in plain]
-        rows += [(f"LAD-CWTM-d10-s{sigma}", i, v) for i, v in lad]
-        gaps[sigma] = plain[-1][1] - lad[-1][1]
+        problem = linear_regression_problem(jax.random.PRNGKey(1), n=N, dim=DIM, sigma_h=sigma)
+        registry = {
+            label: scn
+            for label, scn in scenarios.PAPER_FIG5.items()
+            if scn.sigma_h == sigma
+        }
+        curves = _curves(registry, steps, problem)
+        rows += _rows(curves)
+        finals.update({k: v[-1][1] for k, v in curves.items()})
+    gaps = {s: finals[f"CWTM-s{s:g}"] - finals[f"LAD-CWTM-d10-s{s:g}"] for s in (0.0, 0.1)}
     assert gaps[0.1] > 0, gaps
     return rows
 
 
-def fig6_compressed(steps: int = 700, lr: float = 3e-7):
+def fig6_compressed(steps: int = 700):
     """Compressed-communication setting: Com-VA / Com-CWTM(-NNM) / Com-TGN /
     Com-LAD-CWTM(-NNM); random sparsification Q_hat=30, H=70, d=3."""
-    key = jax.random.PRNGKey(2)
-    z, y = linear_regression_problem(key, n=N, dim=DIM, sigma_h=0.3)
-    n_byz = 30
-    atk = AttackSpec("sign_flip", n_byz=n_byz)
-    comp = CompressionSpec("rand_sparse", q_hat_frac=0.3)  # Q_hat = 30 of 100
-
-    def cfg(method, d, agg):
-        return ProtocolConfig(n_devices=N, d=d, method=method, aggregator=agg,
-                              trim_frac=0.1, n_byz=n_byz, attack=atk,
-                              compression=comp)
-
-    curves = {
-        "Com-VA": _train_curve(cfg("plain", 1, "mean"), z, y, lr, steps),
-        "Com-CWTM": _train_curve(cfg("plain", 1, "cwtm"), z, y, lr, steps),
-        "Com-CWTM-NNM": _train_curve(cfg("plain", 1, "cwtm-nnm"), z, y, lr, steps),
-        "Com-TGN": _train_curve(cfg("plain", 1, "tgn"), z, y, lr, steps),
-        "Com-LAD-CWTM": _train_curve(cfg("lad", 3, "cwtm"), z, y, lr, steps),
-        "Com-LAD-CWTM-NNM": _train_curve(cfg("lad", 3, "cwtm-nnm"), z, y, lr, steps),
-    }
+    problem = linear_regression_problem(jax.random.PRNGKey(2), n=N, dim=DIM, sigma_h=0.3)
+    curves = _curves(scenarios.PAPER_FIG6, steps, problem)
     final = {k: v[-1][1] for k, v in curves.items()}
     # paper claims: encoding-before-compression (Com-LAD) beats the same rule
     # without redundancy, and Com-LAD-CWTM-NNM clearly outperforms Com-TGN
@@ -167,10 +127,16 @@ def fig6_compressed(steps: int = 700, lr: float = 3e-7):
     assert final["Com-LAD-CWTM-NNM"] < final["Com-CWTM-NNM"], final
     assert final["Com-LAD-CWTM-NNM"] < final["Com-TGN"], final
     assert final["Com-LAD-CWTM-NNM"] == min(final.values()), final
-    rows = []
-    for label, curve in curves.items():
-        rows += [(label, i, v) for i, v in curve]
-    return rows
+    return _rows(curves)
+
+
+def section7_sweep(steps: int = 200):
+    """The full Section-VII comparison matrix (>= 3 methods x >= 3 attacks x
+    >= 2 compressors) from one registry call through the engine."""
+    grid = scenarios.section7_grid()
+    results = scenarios.run_grid(grid, steps)
+    assert len(results) == len(grid)
+    return [("grid", name, m["final_loss"]) for name, m in results.items()]
 
 
 FIGURES = {
@@ -179,4 +145,5 @@ FIGURES = {
     "fig4_training_loss": fig4_training_loss,
     "fig5_heterogeneity": fig5_heterogeneity,
     "fig6_compressed": fig6_compressed,
+    "section7_sweep": section7_sweep,
 }

@@ -2,61 +2,41 @@
 
 Random sparsification (Q_hat = 30% of coordinates), 30 Byzantine devices,
 sign-flipping attack applied before compression, CWTM/CWTM-NNM servers —
-plus the wire-byte accounting that motivates Com-LAD.
+plus the wire-byte accounting that motivates Com-LAD.  Each method is a row
+of the Fig.-6 scenario registry and runs as one scan-compiled trajectory:
 
     PYTHONPATH=src python examples/compressed_training.py
 """
 import jax
-import jax.numpy as jnp
 
-from repro.core import ProtocolConfig, protocol_round
-from repro.core.attacks import AttackSpec
+from repro.core import scenarios
 from repro.core.compression import CompressionSpec, wire_bits
-from repro.data.synthetic import linear_regression_problem, linreg_loss, linreg_subset_grads
-
-
-def train(cfg, z, y, lr=3e-7, steps=250, seed=0):
-    x = jnp.zeros((z.shape[1],))
-    key = jax.random.PRNGKey(seed)
-
-    @jax.jit
-    def step(x, k):
-        g = protocol_round(cfg, k, linreg_subset_grads(z, y, x))
-        return x - lr * g * cfg.n_devices
-
-    for i in range(steps):
-        x = step(x, jax.random.fold_in(key, i))
-    return float(linreg_loss(z, y, x))
+from repro.data.synthetic import linear_regression_problem
 
 
 def main():
-    key = jax.random.PRNGKey(0)
-    z, y = linear_regression_problem(key, n=100, dim=100, sigma_h=0.3)
-    comp = CompressionSpec("rand_sparse", q_hat_frac=0.3)
-    atk = AttackSpec("sign_flip", n_byz=30)
+    problem = linear_regression_problem(jax.random.PRNGKey(0), n=100, dim=100, sigma_h=0.3)
 
     print("wire bytes per message:")
     dense_bits = wire_bits(CompressionSpec("none"), 100)
-    for spec in [CompressionSpec("none"), comp,
+    for spec in [CompressionSpec("none"),
+                 CompressionSpec("rand_sparse", q_hat_frac=0.3),
                  CompressionSpec("rand_sparse_shared", q_hat_frac=0.3),
                  CompressionSpec("quant", levels=16, chunk=100)]:
         bits = wire_bits(spec, 100)
         print(f"  {spec.name:20s} {bits / 8:7.0f} B  ({bits / dense_bits:.0%} of dense)")
 
-    def cfg(method, d, agg):
-        return ProtocolConfig(n_devices=100, d=d, method=method, aggregator=agg,
-                              trim_frac=0.1, n_byz=30, attack=atk, compression=comp)
-
     print(f"\n{'method':22s} final-loss")
     results = {}
-    for name, c in {
-        "Com-VA": cfg("plain", 1, "mean"),
-        "Com-CWTM": cfg("plain", 1, "cwtm"),
-        "Com-TGN": cfg("plain", 1, "tgn"),
-        "Com-LAD-CWTM d=3": cfg("lad", 3, "cwtm"),
-        "Com-LAD-CWTM-NNM d=3": cfg("lad", 3, "cwtm-nnm"),
+    for name, label in {
+        "Com-VA": "Com-VA",
+        "Com-CWTM": "Com-CWTM",
+        "Com-TGN": "Com-TGN",
+        "Com-LAD-CWTM d=3": "Com-LAD-CWTM",
+        "Com-LAD-CWTM-NNM d=3": "Com-LAD-CWTM-NNM",
     }.items():
-        results[name] = train(c, z, y)
+        res = scenarios.run_scenario(scenarios.PAPER_FIG6[label], steps=250, problem=problem)
+        results[name] = float(res.metrics["loss"][-1])
         print(f"{name:22s} {results[name]:.4g}")
 
     assert results["Com-LAD-CWTM d=3"] < results["Com-CWTM"]

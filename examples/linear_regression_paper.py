@@ -2,52 +2,34 @@
 
 Reproduces the Fig. 4 comparison at full protocol scale (N=100 devices,
 20 Byzantine, sign-flipping attack x(-2)) with reduced iteration count.
+Each method is one row of the declarative scenario registry and runs as a
+single scan-compiled trajectory (one jit compile per curve, no per-round
+dispatch):
 
     PYTHONPATH=src python examples/linear_regression_paper.py
 """
 import jax
-import jax.numpy as jnp
 
-from repro.core import ProtocolConfig, protocol_round
-from repro.core.attacks import AttackSpec
-from repro.data.synthetic import linear_regression_problem, linreg_loss, linreg_subset_grads
-
-
-def train(cfg, z, y, lr=1e-6, steps=200, seed=0):
-    x = jnp.zeros((z.shape[1],))
-    key = jax.random.PRNGKey(seed)
-
-    @jax.jit
-    def step(x, k):
-        g = protocol_round(cfg, k, linreg_subset_grads(z, y, x))
-        return x - lr * g * cfg.n_devices
-
-    for i in range(steps):
-        x = step(x, jax.random.fold_in(key, i))
-    return float(linreg_loss(z, y, x))
+from repro.core import scenarios
+from repro.data.synthetic import linear_regression_problem
 
 
 def main():
-    key = jax.random.PRNGKey(0)
-    z, y = linear_regression_problem(key, n=100, dim=100, sigma_h=0.3)
-    atk = AttackSpec("sign_flip", n_byz=20)
-
-    def cfg(method, d, agg):
-        return ProtocolConfig(n_devices=100, d=d, method=method, aggregator=agg,
-                              trim_frac=0.1, n_byz=20, attack=atk)
+    problem = linear_regression_problem(jax.random.PRNGKey(0), n=100, dim=100, sigma_h=0.3)
 
     print(f"{'method':24s} final-loss")
     results = {}
-    for name, c in {
-        "VA (mean)": cfg("plain", 1, "mean"),
-        "CWTM": cfg("plain", 1, "cwtm"),
-        "CWTM-NNM": cfg("plain", 1, "cwtm-nnm"),
-        "LAD-CWTM d=5": cfg("lad", 5, "cwtm"),
-        "LAD-CWTM d=10": cfg("lad", 10, "cwtm"),
-        "LAD-CWTM d=20": cfg("lad", 20, "cwtm"),
-        "LAD-CWTM-NNM d=10": cfg("lad", 10, "cwtm-nnm"),
+    for name, scn in {
+        "VA (mean)": scenarios.PAPER_FIG4["VA"],
+        "CWTM": scenarios.PAPER_FIG4["CWTM"],
+        "CWTM-NNM": scenarios.PAPER_FIG4["CWTM-NNM"],
+        "LAD-CWTM d=5": scenarios.PAPER_FIG4["LAD-CWTM-d5"],
+        "LAD-CWTM d=10": scenarios.PAPER_FIG4["LAD-CWTM-d10"],
+        "LAD-CWTM d=20": scenarios.PAPER_FIG4["LAD-CWTM-d20"],
+        "LAD-CWTM-NNM d=10": scenarios.PAPER_FIG4["LAD-CWTM-NNM-d10"],
     }.items():
-        results[name] = train(c, z, y)
+        res = scenarios.run_scenario(scn, steps=200, problem=problem)
+        results[name] = float(res.metrics["loss"][-1])
         print(f"{name:24s} {results[name]:.4g}")
 
     assert results["LAD-CWTM d=10"] < results["CWTM"]

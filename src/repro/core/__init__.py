@@ -10,11 +10,15 @@ Layout:
                     quantization) + shared-mask and top-k variants
   attacks.py      — Byzantine attack library (sign-flip, ALIE, IPM, ...)
   byzantine.py    — LAD/Com-LAD meta-algorithm (single-process protocol round)
+  engine.py       — scan-compiled multi-round trajectory engine
+  scenarios.py    — declarative method x attack x aggregator x compressor grid
   distributed.py  — mesh/shard_map production realization of the protocol
   theory.py       — Lemmas 1-4 / Theorems 1-2 constants and error terms
 """
 from repro.core import aggregators, attacks, coding, compression, task_matrix, theory
 from repro.core.byzantine import ProtocolConfig, protocol_round
+from repro.core.engine import TrajectoryResult, protocol_rounds, run_trajectory
+from repro.core.scenarios import Scenario, run_grid, run_scenario, section7_grid
 
 __all__ = [
     "aggregators",
@@ -25,4 +29,11 @@ __all__ = [
     "theory",
     "ProtocolConfig",
     "protocol_round",
+    "TrajectoryResult",
+    "protocol_rounds",
+    "run_trajectory",
+    "Scenario",
+    "run_grid",
+    "run_scenario",
+    "section7_grid",
 ]

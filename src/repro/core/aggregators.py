@@ -143,12 +143,17 @@ def tgn(msgs: jax.Array, thresh_frac: float = 0.2, n_byz: int = 0) -> jax.Array:
     return jnp.mean(msgs[idx], axis=0)
 
 
-def nnm_mix(msgs: jax.Array, n_byz: int) -> jax.Array:
+def nnm_mix(msgs: jax.Array, n_byz: int, d2: jax.Array | None = None) -> jax.Array:
     """Nearest-neighbor mixing [23] pre-aggregation: replace each message by
-    the average of its ``N - b`` nearest neighbors (including itself)."""
+    the average of its ``N - b`` nearest neighbors (including itself).
+
+    ``d2`` optionally supplies the precomputed ``(N, N)`` squared-distance
+    matrix (e.g. from the Pallas gram kernel); the selection rule stays in
+    one place either way."""
     n = msgs.shape[0]
     k = n - n_byz
-    d2 = _pairwise_sqdist(msgs)
+    if d2 is None:
+        d2 = _pairwise_sqdist(msgs)
     _, idx = jax.lax.top_k(-d2, k)  # (N, k) nearest-neighbor indices per row
     return jnp.mean(msgs[idx], axis=1)  # (N, Q)
 

@@ -32,6 +32,7 @@ from repro.core import aggregators as agg_lib
 from repro.core import attacks as attack_lib
 from repro.core import compression as comp_lib
 from repro.core import task_matrix as tm
+from repro.kernels import ops as kernel_ops
 
 __all__ = ["ProtocolConfig", "lad_round", "protocol_round"]
 
@@ -50,6 +51,11 @@ class ProtocolConfig:
     compression: comp_lib.CompressionSpec = dataclasses.field(
         default_factory=comp_lib.CompressionSpec
     )
+    # Hot-path kernel backend for the server/device inner ops (kernels/ops.py):
+    #   "xla"       — pure-jnp reference path (CPU default)
+    #   "interpret" — Pallas interpret mode (CPU-correct kernel semantics)
+    #   "pallas"    — compiled Pallas kernels (TPU target)
+    backend: str = "xla"
 
     def make_aggregator(self):
         return agg_lib.make_aggregator(
@@ -58,6 +64,17 @@ class ProtocolConfig:
 
     def effective_d(self) -> int:
         return 1 if self.method == "plain" else self.d
+
+
+def _encode(cfg: ProtocolConfig, stacked: jax.Array) -> jax.Array:
+    """eq.-(5) per-device combine of the gathered ``(N, d, Q)`` stack."""
+    if cfg.backend == "xla":
+        return jnp.mean(stacked, axis=1)
+    d = stacked.shape[1]
+    w = jnp.full((d,), 1.0 / d, jnp.float32)
+    return jax.vmap(
+        lambda g: kernel_ops.coded_combine(g, w, backend=cfg.backend)
+    )(stacked)
 
 
 def _device_coded_gradients(cfg: ProtocolConfig, key: jax.Array, subset_grads: jax.Array):
@@ -70,10 +87,29 @@ def _device_coded_gradients(cfg: ProtocolConfig, key: jax.Array, subset_grads: j
         groups = jnp.arange(n) // d  # (N,)
         block_cols = groups[:, None] * d + jnp.arange(d)[None, :]  # (N, d)
         subsets = perm[block_cols]
-        return jnp.mean(subset_grads[subsets], axis=1), subsets
+        return _encode(cfg, subset_grads[subsets]), subsets
     assignment = tm.sample_assignment(key, n, d)
-    coded = jnp.mean(subset_grads[assignment.subsets], axis=1)  # (N, Q)
+    coded = _encode(cfg, subset_grads[assignment.subsets])  # (N, Q)
     return coded, assignment.subsets
+
+
+def _server_aggregate(cfg: ProtocolConfig, transmitted: jax.Array) -> jax.Array:
+    """Robust aggregation, routed through the Pallas kernels when the config
+    selects a kernel backend and the rule has a kernel realization (CWTM and
+    its NNM-premixed variant — the paper's main rules); other rules fall back
+    to the pure-jnp aggregators on every backend."""
+    if cfg.backend != "xla":
+        name, nnm = cfg.aggregator, False
+        if name.endswith("-nnm"):
+            name, nnm = name[: -len("-nnm")], True
+        if name == "cwtm":
+            msgs = transmitted
+            if nnm:
+                d2 = kernel_ops.pairwise_sqdist(msgs, backend=cfg.backend)
+                msgs = agg_lib.nnm_mix(msgs, cfg.n_byz, d2=d2)
+            trim = int(cfg.trim_frac * msgs.shape[0])
+            return kernel_ops.cwtm(msgs, trim, backend=cfg.backend)
+    return cfg.make_aggregator()(transmitted)
 
 
 def protocol_round(
@@ -101,13 +137,26 @@ def protocol_round(
     q = coded.shape[1]
     spec = cfg.compression
     if spec.name not in ("none", "identity"):
-        compressor = spec.make(q)
-        if spec.name == "rand_sparse_shared":
-            # round-shared mask: same key for every device
-            coded = jax.vmap(lambda g: compressor(k_comp, g))(coded)
-        else:
+        if spec.name == "quant" and cfg.backend != "xla":
+            # kernel hot path: the rounding randomness u is drawn per device
+            # from its round key and fed to the fused quantize kernel
             dev_keys = jax.random.split(k_comp, n)
-            coded = jax.vmap(compressor)(dev_keys, coded)
+
+            def quant_one(k, g):
+                u = jax.random.uniform(k, g.shape)
+                return kernel_ops.stochastic_quantize(
+                    g, u, spec.levels, spec.chunk, backend=cfg.backend
+                )
+
+            coded = jax.vmap(quant_one)(dev_keys, coded)
+        else:
+            compressor = spec.make(q)
+            if spec.name == "rand_sparse_shared":
+                # round-shared mask: same key for every device
+                coded = jax.vmap(lambda g: compressor(k_comp, g))(coded)
+            else:
+                dev_keys = jax.random.split(k_comp, n)
+                coded = jax.vmap(compressor)(dev_keys, coded)
 
     # --- Byzantine corruption ----------------------------------------------
     mask = attack_lib.sample_byzantine_mask(
@@ -121,8 +170,7 @@ def protocol_round(
         # DRACO ignores compression (incompatible, per Section VII.B) and
         # decodes exactly via group majority vote.
         return coded_draco_decode(transmitted, cfg.d)
-    aggregator = cfg.make_aggregator()
-    return aggregator(transmitted)
+    return _server_aggregate(cfg, transmitted)
 
 
 def coded_draco_decode(transmitted: jax.Array, d: int) -> jax.Array:

@@ -1,0 +1,181 @@
+"""Scan-compiled multi-round protocol engine.
+
+Before this module, a "training run" was a Python loop that re-dispatched a
+jitted single-round function per iteration: N steps = N dispatches + N host
+round-trips for metric readback.  The engine compiles an *entire trajectory*
+— task assignment, eq.-(5) encoding, compression, attack injection, robust
+aggregation, optimizer step — as ONE ``jax.lax.scan`` over rounds.  PRNG
+keys, optimizer state and the iterate thread through the scan carry; per-
+round metrics (loss, solution error, aggregation distance) come back as
+stacked ``(steps,)`` arrays in a single device->host transfer at the end.
+
+Two execution modes share the identical round body:
+
+  * ``mode="scan"`` — the compiled ``lax.scan`` hot path (default);
+  * ``mode="loop"`` — the legacy per-round jitted Python loop, kept as the
+    bit-exactness reference (tests assert scan == loop on the same keys).
+
+The per-round randomness is ``jax.random.fold_in(key, t)`` — exactly the
+convention of the previous hand-written loops in benchmarks/ and examples/,
+so trajectories are reproducible across engine modes and across the old code.
+
+``protocol_rounds`` is the metric-free sibling used by statistical tests:
+``rounds`` aggregates of the *same* subset-gradient stack under fresh round
+keys, again as one compiled scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.byzantine import ProtocolConfig, protocol_round
+from repro.optim import make_optimizer
+
+__all__ = ["TrajectoryResult", "run_trajectory", "protocol_rounds"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrajectoryResult:
+    """Output of ``run_trajectory``.
+
+    Attributes:
+      x: final iterate ``(Q,)`` (or pytree matching ``x0``).
+      metrics: dict of per-round ``(steps,)`` arrays — always ``loss`` (if a
+        ``loss_fn`` was given), ``agg_dist`` (||aggregate - honest subset
+        mean||, the round's aggregation error) and ``grad_norm``; plus
+        ``sol_err`` (||x_t - x*||) when ``x_star`` is supplied.
+    """
+
+    x: Any
+    metrics: dict[str, jax.Array]
+
+    def curve(self, name: str = "loss", every: int = 1) -> list[tuple[int, float]]:
+        """(iteration, value) pairs thinned to ``every`` (always keeps the
+        last round) — the row format of benchmarks/paper_figures.py."""
+        vals = jax.device_get(self.metrics[name])
+        n = len(vals)
+        return [
+            (i, float(v))
+            for i, v in enumerate(vals)
+            if i % every == 0 or i == n - 1
+        ]
+
+
+def _round_body(
+    cfg: ProtocolConfig,
+    key: jax.Array,
+    opt,
+    subset_grad_fn: Callable[[Any], jax.Array],
+    loss_fn: Callable[[Any], jax.Array] | None,
+    x_star: jax.Array | None,
+    lr: float | Callable[[jax.Array], jax.Array],
+    grad_scale: float,
+):
+    """The single round used by both engine modes (shared => bit-identical)."""
+
+    def body(carry, t):
+        x, opt_state = carry
+        k = jax.random.fold_in(key, t)
+        grads = subset_grad_fn(x)  # (N, Q)
+        g = protocol_round(cfg, k, grads)
+        lr_t = lr(t) if callable(lr) else lr
+        new_x, new_state = opt.update(x, grad_scale * g, opt_state, lr_t)
+        metrics = {
+            "agg_dist": jnp.linalg.norm(g - jnp.mean(grads, axis=0)),
+            "grad_norm": jnp.linalg.norm(g),
+        }
+        if loss_fn is not None:
+            metrics["loss"] = loss_fn(new_x)
+        if x_star is not None:
+            metrics["sol_err"] = jnp.linalg.norm(new_x - x_star)
+        return (new_x, new_state), metrics
+
+    return body
+
+
+def run_trajectory(
+    cfg: ProtocolConfig,
+    key: jax.Array,
+    x0: jax.Array,
+    subset_grad_fn: Callable[[Any], jax.Array],
+    *,
+    steps: int,
+    lr: float | Callable[[jax.Array], jax.Array],
+    optimizer: str = "sgd",
+    grad_scale: float = 1.0,
+    loss_fn: Callable[[Any], jax.Array] | None = None,
+    x_star: jax.Array | None = None,
+    mode: str = "scan",
+) -> TrajectoryResult:
+    """Run ``steps`` full protocol rounds from ``x0``.
+
+    Args:
+      cfg: protocol configuration (method/attack/aggregator/compression).
+      key: trajectory PRNG key; round ``t`` uses ``fold_in(key, t)``.
+      x0: initial iterate.
+      subset_grad_fn: ``x -> (N, Q)`` per-subset gradients at ``x``.
+      steps: number of rounds (static; the scan length).
+      lr: step size, a float or a ``t -> lr`` schedule.
+      optimizer: any ``repro.optim.make_optimizer`` name.
+      grad_scale: multiplies the aggregate before the optimizer step (the
+        paper's eq.-(7) sum-loss F needs ``N x`` the mean-gradient estimate).
+      loss_fn / x_star: optional per-round metric hooks.
+      mode: ``"scan"`` (one compiled trajectory) or ``"loop"`` (per-round
+        jitted dispatch; the bit-exactness reference).
+    """
+    if mode not in ("scan", "loop"):
+        raise ValueError(f"unknown engine mode {mode!r}")
+    opt = make_optimizer(optimizer)
+    opt_state0 = opt.init(x0)
+    body = _round_body(cfg, key, opt, subset_grad_fn, loss_fn, x_star, lr, grad_scale)
+
+    if mode == "scan":
+
+        @jax.jit
+        def trajectory(x0, opt_state0):
+            return jax.lax.scan(
+                body, (x0, opt_state0), jnp.arange(steps, dtype=jnp.int32)
+            )
+
+        (x, _), metrics = trajectory(x0, opt_state0)
+        return TrajectoryResult(x=x, metrics=metrics)
+
+    step_fn = jax.jit(body)
+    carry = (x0, opt_state0)
+    per_round = []
+    for t in range(steps):
+        carry, m = step_fn(carry, jnp.asarray(t, jnp.int32))
+        per_round.append(m)
+    metrics = jax.tree.map(lambda *ms: jnp.stack(ms), *per_round)
+    return TrajectoryResult(x=carry[0], metrics=metrics)
+
+
+def protocol_rounds(
+    cfg: ProtocolConfig,
+    key: jax.Array,
+    subset_grads: jax.Array,
+    rounds: int,
+    *,
+    key_offset: int = 0,
+) -> jax.Array:
+    """``rounds`` independent protocol rounds on a fixed ``(N, Q)`` gradient
+    stack, compiled as one scan: returns the ``(rounds, Q)`` aggregates.
+
+    Round ``t`` uses ``fold_in(key, key_offset + t)`` — statistical tests use
+    this to estimate encoder bias / variance without per-round dispatch.
+    """
+
+    @jax.jit
+    def sweep(subset_grads):
+        def body(_, t):
+            return None, protocol_round(cfg, jax.random.fold_in(key, t), subset_grads)
+
+        _, outs = jax.lax.scan(
+            body, None, key_offset + jnp.arange(rounds, dtype=jnp.int32)
+        )
+        return outs
+
+    return sweep(subset_grads)

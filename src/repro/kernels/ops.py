@@ -5,6 +5,14 @@
   * ``"interpret"``   — Pallas interpret mode (CPU-correct; used by tests)
   * ``"xla"``         — the pure-jnp oracle (default inside the production
                         step functions so CPU dry-runs lower everywhere)
+
+The wrappers own the tiling contract: callers may pass ANY ``Q`` — when the
+length does not divide the tile, inputs are zero-padded up to the next tile
+boundary here and the output is sliced back.  Zero columns are exact no-ops
+for every kernel (they are sliced off for cwtm/combine, contribute 0 to the
+gram/row-norm accumulators, and cannot raise a max-abs quantization scale),
+so padded and unpadded calls agree bitwise on the real coordinates.  Both
+backends see the same padded operands, keeping xla/interpret/pallas parity.
 """
 from __future__ import annotations
 
@@ -28,18 +36,40 @@ def _interp(backend: str) -> bool:
     raise ValueError(backend)
 
 
-def cwtm(msgs: jax.Array, trim: int, backend: str = DEFAULT_BACKEND, **kw) -> jax.Array:
+def _pad_last(x: jax.Array, block: int) -> jax.Array:
+    """Zero-pad the last axis up to a multiple of ``block``."""
+    pad = (-x.shape[-1]) % block
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths)
+
+
+def _tile(q: int, q_block: int) -> int:
+    """Effective tile length: never longer than the (unpadded) vector."""
+    return min(q_block, q)
+
+
+def cwtm(msgs: jax.Array, trim: int, backend: str = DEFAULT_BACKEND, q_block: int = 2048) -> jax.Array:
     if backend == "xla":
         return ref.cwtm_ref(msgs, trim)
-    return cwtm_pallas(msgs, trim, interpret=_interp(backend), **kw)
+    q = msgs.shape[1]
+    qb = _tile(q, q_block)
+    out = cwtm_pallas(_pad_last(msgs, qb), trim, q_block=qb, interpret=_interp(backend))
+    return out[:q]
 
 
 def coded_combine(
-    grads: jax.Array, weights: jax.Array, backend: str = DEFAULT_BACKEND, **kw
+    grads: jax.Array, weights: jax.Array, backend: str = DEFAULT_BACKEND, q_block: int = 2048
 ) -> jax.Array:
     if backend == "xla":
         return ref.coded_combine_ref(grads, weights)
-    return coded_combine_pallas(grads, weights, interpret=_interp(backend), **kw)
+    q = grads.shape[1]
+    qb = _tile(q, q_block)
+    out = coded_combine_pallas(
+        _pad_last(grads, qb), weights, q_block=qb, interpret=_interp(backend)
+    )
+    return out[:q]
 
 
 def stochastic_quantize(
@@ -49,13 +79,21 @@ def stochastic_quantize(
     block: int = 1024,
     backend: str = DEFAULT_BACKEND,
 ) -> jax.Array:
+    # Pad BEFORE dispatch so both backends quantize identical blocks: the
+    # tail block's scale is the max-abs of its real entries (zeros never win).
+    q = g.shape[0]
+    qb = _tile(q, block)
+    gp, up = _pad_last(g, qb), _pad_last(u, qb)
     if backend == "xla":
-        return ref.stochastic_quantize_ref(g, u, levels, block)
-    return stochastic_quantize_pallas(g, u, levels, q_block=block, interpret=_interp(backend))
+        return ref.stochastic_quantize_ref(gp, up, levels, qb)[:q]
+    return stochastic_quantize_pallas(
+        gp, up, levels, q_block=qb, interpret=_interp(backend)
+    )[:q]
 
 
-def pairwise_sqdist(msgs: jax.Array, backend: str = DEFAULT_BACKEND, **kw) -> jax.Array:
+def pairwise_sqdist(msgs: jax.Array, backend: str = DEFAULT_BACKEND, q_block: int = 2048) -> jax.Array:
     if backend == "xla":
         return ref.pairwise_sqdist_ref(msgs)
-    gram, sq = gram_pallas(msgs, interpret=_interp(backend), **kw)
+    qb = _tile(msgs.shape[1], q_block)
+    gram, sq = gram_pallas(_pad_last(msgs, qb), q_block=qb, interpret=_interp(backend))
     return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)

@@ -1,0 +1,102 @@
+"""Property-testing compatibility layer: `hypothesis` with a built-in fallback.
+
+The tier-1 suite is property-tested.  When the real `hypothesis` package is
+installed (see requirements-dev.txt) this module re-exports it unchanged and
+tests get full shrinking/replay.  When it is NOT installed — the minimal
+container ships only the jax toolchain — the suite must still collect *and*
+keep its property coverage, so this module provides a tiny API-compatible
+fallback: each ``@given`` test runs ``max_examples`` times on values drawn
+from a deterministically seeded RNG (no shrinking, fixed corpus).
+
+Only the API surface the test-suite uses is implemented:
+
+    from repro.testing import given, settings, strategies as st
+
+    st.integers(lo, hi) / st.floats(lo, hi, ...) / st.sampled_from(seq)
+    st.lists(elem, min_size=, max_size=) / st.data()  (-> .draw(strategy))
+    @given(...) stacked with @settings(max_examples=, deadline=)
+
+``HAVE_HYPOTHESIS`` tells tests which engine they are running under.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly by which env runs the suite
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng: random.Random):
+            return self._draw_fn(rng)
+
+    class _Data:
+        """The object bound to a ``st.data()`` argument."""
+
+        def __init__(self, rng: random.Random):
+            self._rng = rng
+
+        def draw(self, strategy: _Strategy):
+            return strategy.draw(self._rng)
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(
+            min_value: float, max_value: float, allow_nan: bool = False, width: int = 64
+        ) -> _Strategy:
+            del allow_nan, width  # uniform draws are always finite
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            pool = list(elements)
+            return _Strategy(lambda rng: rng.choice(pool))
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+            return _Strategy(
+                lambda rng: [
+                    elements.draw(rng) for _ in range(rng.randint(min_size, max_size))
+                ]
+            )
+
+        @staticmethod
+        def data() -> _Strategy:
+            return _Strategy(lambda rng: _Data(rng))
+
+    def settings(max_examples: int = 20, deadline=None, **_kw):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strats: _Strategy):
+        def deco(fn):
+            n_examples = getattr(fn, "_fallback_max_examples", 20)
+
+            def runner():
+                # seed on the test name: stable corpus per test, across runs
+                rng = random.Random(fn.__name__)
+                for _ in range(n_examples):
+                    fn(*[s.draw(rng) for s in strats])
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            # the drawn parameters are not pytest fixtures: hide the signature
+            runner.__signature__ = inspect.Signature()
+            return runner
+
+        return deco

@@ -1,11 +1,49 @@
-"""Shared fixtures.
+"""Shared fixtures + the `slow` marker.
 
-NOTE: no XLA_FLAGS here — smoke tests and benches must see the 1 real CPU
-device.  Tests that need a small virtual mesh spawn a subprocess (see
-tests/test_distributed.py) or run single-device shard_map.
+NOTE: no device-count XLA_FLAGS here — smoke tests and benches must see the
+1 real CPU device.  Tests that need a small virtual mesh spawn a subprocess
+(see tests/test_distributed.py) or run single-device shard_map.
+
+The suite is jit-compile bound (~130 tests, each compiling small programs),
+so we do lower the XLA *optimization effort* for test runs: correctness is
+unchanged, compile time roughly halves.  Unset XLA_FLAGS to benchmark real
+compile output; the flags are only applied when the caller set none.
+
+Tests marked ``@pytest.mark.slow`` (multi-minute subprocess meshes, the
+biggest architecture smoke configs) are skipped by default so the tier-1
+run stays under ~a minute; run them with ``pytest --runslow``.
 """
+import os
+
+if "XLA_FLAGS" not in os.environ:  # must happen before jax initializes XLA
+    os.environ["XLA_FLAGS"] = (
+        "--xla_backend_optimization_level=0 --xla_llvm_disable_expensive_passes=true"
+    )
+
 import jax
 import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="also run tests marked slow",
+    )
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test, skipped unless --runslow is given"
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow: needs --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
 
 
 @pytest.fixture(scope="session")

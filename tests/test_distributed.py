@@ -11,6 +11,9 @@ import textwrap
 
 import pytest
 
+# ~90s of subprocess mesh setup + 5 Trainer compiles: --runslow only
+pytestmark = pytest.mark.slow
+
 _SCRIPT = textwrap.dedent(
     """
     import os

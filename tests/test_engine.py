@@ -1,0 +1,156 @@
+"""Scan-compiled engine: bit-identity with the per-round loop, scenario registry."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ProtocolConfig, run_trajectory, scenarios
+from repro.core.attacks import AttackSpec
+from repro.core.compression import CompressionSpec
+from repro.data.synthetic import linear_regression_problem, linreg_loss, linreg_subset_grads
+
+N, DIM, STEPS = 24, 32, 30
+
+
+def _problem(key):
+    z, y = linear_regression_problem(key, n=N, dim=DIM, sigma_h=0.3)
+    return z, y, lambda x: linreg_subset_grads(z, y, x), lambda x: linreg_loss(z, y, x)
+
+
+# every protocol method of Section VII, incl. the Pallas-kernel hot path
+METHODS = {
+    "lad": dict(method="lad", d=6, aggregator="cwtm"),
+    "com_lad": dict(method="lad", d=6, aggregator="cwtm",
+                    compression=CompressionSpec("rand_sparse", q_hat_frac=0.5)),
+    "com_lad_quant_kernels": dict(method="lad", d=6, aggregator="cwtm",
+                                  compression=CompressionSpec("quant", levels=8, chunk=16),
+                                  backend="interpret"),
+    "plain": dict(method="plain", d=1, aggregator="cwtm-nnm"),
+    "draco": dict(method="draco", d=4),
+}
+
+
+@pytest.mark.parametrize("name", sorted(METHODS))
+def test_scan_bit_identical_to_loop(name, key):
+    """The compiled lax.scan trajectory must equal the legacy per-round jitted
+    Python loop BITWISE on the same PRNG keys, for every method."""
+    _, _, grad_fn, loss_fn = _problem(key)
+    cfg = ProtocolConfig(n_devices=N, n_byz=4, trim_frac=0.2,
+                         attack=AttackSpec("sign_flip", n_byz=4), **METHODS[name])
+    x0 = jnp.zeros((DIM,))
+    kw = dict(steps=STEPS, lr=1e-6, grad_scale=float(N), loss_fn=loss_fn)
+    scan = run_trajectory(cfg, key, x0, grad_fn, mode="scan", **kw)
+    loop = run_trajectory(cfg, key, x0, grad_fn, mode="loop", **kw)
+    np.testing.assert_array_equal(np.asarray(scan.x), np.asarray(loop.x))
+    assert sorted(scan.metrics) == sorted(loop.metrics)
+    for k in scan.metrics:
+        np.testing.assert_array_equal(
+            np.asarray(scan.metrics[k]), np.asarray(loop.metrics[k]), err_msg=k
+        )
+
+
+def test_trajectory_metrics_and_curve(key):
+    z, y, grad_fn, loss_fn = _problem(key)
+    cfg = ProtocolConfig(n_devices=N, d=4, n_byz=2, aggregator="cwtm", trim_frac=0.2,
+                         attack=AttackSpec("sign_flip", n_byz=2))
+    x_star, *_ = jnp.linalg.lstsq(z, y)
+    res = run_trajectory(cfg, key, jnp.zeros((DIM,)), grad_fn, steps=STEPS, lr=1e-6,
+                         grad_scale=float(N), loss_fn=loss_fn, x_star=x_star)
+    for name in ("loss", "agg_dist", "grad_norm", "sol_err"):
+        assert res.metrics[name].shape == (STEPS,), name
+        assert bool(jnp.all(jnp.isfinite(res.metrics[name]))), name
+    # training makes progress on the attacked problem
+    assert float(res.metrics["loss"][-1]) < float(res.metrics["loss"][0])
+    curve = res.curve(every=10)
+    assert curve[0][0] == 0 and curve[-1][0] == STEPS - 1
+    assert curve[-1][1] == pytest.approx(float(res.metrics["loss"][-1]))
+
+
+def test_lr_schedule_is_applied(key):
+    """A zero schedule must freeze the iterate; a callable lr threads t."""
+    _, _, grad_fn, _ = _problem(key)
+    cfg = ProtocolConfig(n_devices=N, d=2, aggregator="mean", attack=AttackSpec("none"))
+    x0 = jnp.ones((DIM,))
+    res = run_trajectory(cfg, key, x0, grad_fn, steps=5, lr=lambda t: 0.0 * t)
+    np.testing.assert_array_equal(np.asarray(res.x), np.asarray(x0))
+
+
+def test_engine_matches_legacy_hand_loop(key):
+    """Compatibility with the pre-engine benchmark loop (x -= lr*g*N): same
+    keys, same trajectory up to float reassociation of the lr*scale product."""
+    z, y, grad_fn, _ = _problem(key)
+    cfg = ProtocolConfig(n_devices=N, d=6, n_byz=4, aggregator="cwtm", trim_frac=0.2,
+                         attack=AttackSpec("sign_flip", n_byz=4))
+    lr = 1e-6
+
+    @jax.jit
+    def step(x, k):
+        from repro.core import protocol_round
+
+        return x - lr * protocol_round(cfg, k, grad_fn(x)) * N
+
+    x = jnp.zeros((DIM,))
+    for i in range(STEPS):
+        x = step(x, jax.random.fold_in(key, i))
+    res = run_trajectory(cfg, key, jnp.zeros((DIM,)), grad_fn, steps=STEPS, lr=lr,
+                         grad_scale=float(N))
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(x), rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------- scenarios
+
+
+def test_section7_grid_covers_matrix():
+    grid = scenarios.section7_grid()
+    names = [s.name for s in grid]
+    assert len(set(names)) == len(names), "scenario names must be unique"
+    methods = {s.method for s in grid}
+    attacks = {s.attack for s in grid}
+    compressors = {s.compressor for s in grid}
+    assert len(methods) >= 3 and len(attacks) >= 3 and len(compressors) >= 2
+    for s in grid:
+        if s.method == "draco":
+            assert s.compressor == "none", "DRACO is incompatible with compression"
+            assert s.n_devices % s.d == 0, "fractional repetition needs d | N"
+
+
+def test_scenario_lowers_to_protocol_config():
+    scn = scenarios.Scenario(name="x", method="lad", d=7, aggregator="cwtm-nnm",
+                             attack="alie", n_byz=5, compressor="quant",
+                             quant_levels=4, trim_frac=0.15, n_devices=32,
+                             backend="interpret")
+    cfg = scn.protocol()
+    assert cfg.n_devices == 32 and cfg.d == 7 and cfg.method == "lad"
+    assert cfg.aggregator == "cwtm-nnm" and cfg.trim_frac == 0.15
+    assert cfg.attack.name == "alie" and cfg.attack.n_byz == 5 and cfg.n_byz == 5
+    assert cfg.compression.name == "quant" and cfg.compression.levels == 4
+    assert cfg.backend == "interpret"
+
+
+def test_paper_figure_registries_are_wellformed():
+    for registry in (scenarios.PAPER_FIG4, scenarios.PAPER_FIG5, scenarios.PAPER_FIG6):
+        for label, scn in registry.items():
+            assert scn.name == label
+    assert all(s.compressor == "rand_sparse" for s in scenarios.PAPER_FIG6.values())
+    assert scenarios.PAPER_FIG4["DRACO-d41"].n_devices == 82
+
+
+def test_run_grid_smoke(key):
+    """A small grid end-to-end through the engine: finite, comparable finals,
+    and the LAD row beats plain under the shared attack (paper's claim)."""
+    small = [
+        dataclasses.replace(s, n_devices=20, n_byz=4)
+        for s in scenarios.section7_grid(
+            methods=(("plain", 1), ("lad", 8)), attacks=("sign_flip",),
+            compressors=("none",), lr=1e-5,
+        )
+    ]
+    problem = linear_regression_problem(key, n=20, dim=16, sigma_h=0.5)
+    results = scenarios.run_grid(small, steps=60, problem=problem)
+    assert len(results) == 2
+    assert all(np.isfinite(m["final_loss"]) for m in results.values())
+    lad = results[scenarios.scenario_name("lad", 8, "cwtm", "sign_flip", "none", 0.3)]
+    plain = results[scenarios.scenario_name("plain", 1, "cwtm", "sign_flip", "none", 0.3)]
+    assert lad["final_loss"] <= plain["final_loss"]

@@ -1,12 +1,14 @@
-"""LAD / Com-LAD protocol-level behaviour (single-process round)."""
-import dataclasses
+"""LAD / Com-LAD protocol-level behaviour (single-process round).
 
+Statistical tests (bias/variance over hundreds of rounds) run through the
+scan-compiled ``protocol_rounds`` engine — one jit per estimate instead of
+one dispatch per round."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ProtocolConfig, protocol_round, theory
+from repro.core import ProtocolConfig, protocol_round, protocol_rounds, theory
 from repro.core.attacks import AttackSpec
 from repro.core.compression import CompressionSpec
 
@@ -26,10 +28,7 @@ def test_encoder_unbiased(key):
     mu = jnp.mean(g, axis=0)
     cfg = ProtocolConfig(n_devices=8, d=3, n_byz=0, aggregator="mean",
                          attack=AttackSpec("none"))
-    outs = []
-    for i in range(600):
-        outs.append(protocol_round(cfg, jax.random.fold_in(key, i), g))
-    est = jnp.mean(jnp.stack(outs), axis=0)
+    est = jnp.mean(protocol_rounds(cfg, key, g, 600), axis=0)
     assert float(jnp.linalg.norm(est - mu) / jnp.linalg.norm(mu)) < 0.02
 
 
@@ -39,16 +38,21 @@ def test_redundancy_reduces_variance(key):
     g = _grads(key, n=n, q=q, beta=2.0)
     mu = jnp.mean(g, axis=0)
 
-    def coded_var(d, rounds=400):
+    def coded_var(d, rounds=250):
+        from repro.core.byzantine import _device_coded_gradients
+
         cfg = ProtocolConfig(n_devices=n, d=d, n_byz=0, aggregator="mean",
                              attack=AttackSpec("none"))
-        vs = []
-        for i in range(rounds):
-            from repro.core.byzantine import _device_coded_gradients
 
-            coded, _ = _device_coded_gradients(cfg, jax.random.fold_in(key, i), g)
-            vs.append(jnp.mean(jnp.sum((coded - mu[None]) ** 2, axis=1)))
-        return float(jnp.mean(jnp.stack(vs)))
+        @jax.jit
+        def sweep(g):
+            def body(_, t):
+                coded, _ = _device_coded_gradients(cfg, jax.random.fold_in(key, t), g)
+                return None, jnp.mean(jnp.sum((coded - mu[None]) ** 2, axis=1))
+
+            return jax.lax.scan(body, None, jnp.arange(rounds))[1]
+
+        return float(jnp.mean(sweep(g)))
 
     v1, v4, v16 = coded_var(1), coded_var(4), coded_var(16)
     assert v4 < v1 * 0.5, (v1, v4)
@@ -81,11 +85,8 @@ def test_lad_beats_plain_under_attack(key):
     def err(d, rounds=150):
         cfg = ProtocolConfig(n_devices=n, d=d, n_byz=4, aggregator="cwtm",
                              trim_frac=0.25, attack=AttackSpec("sign_flip", n_byz=4))
-        es = []
-        for i in range(rounds):
-            out = protocol_round(cfg, jax.random.fold_in(key, 1000 + i), g)
-            es.append(jnp.sum((out - mu) ** 2))
-        return float(jnp.mean(jnp.stack(es)))
+        outs = protocol_rounds(cfg, key, g, rounds, key_offset=1000)
+        return float(jnp.mean(jnp.sum((outs - mu[None]) ** 2, axis=1)))
 
     assert err(8) < err(1) * 0.6
 
@@ -115,14 +116,37 @@ def test_com_lad_error_floor_under_compression(key):
             attack=AttackSpec("sign_flip", n_byz=3),
             compression=CompressionSpec("rand_sparse", q_hat_frac=0.5),
         )
-        outs = jnp.stack([
-            protocol_round(cfg, jax.random.fold_in(key, i), g) for i in range(300)
-        ])
+        outs = protocol_rounds(cfg, key, g, 200)
         return float(jnp.linalg.norm(jnp.mean(outs, axis=0) - mu) / jnp.linalg.norm(mu))
 
     err4 = run(4)
     assert err4 < 1.0, err4  # bounded floor (measured ~0.48)
     assert run(16) < err4, "d=N must shrink the compressed error floor"
+
+
+def test_kernel_backend_routes_server_aggregation(key, monkeypatch):
+    """backend="interpret" must actually execute the kernel cwtm for the
+    server aggregation, and agree with the pure-jnp path (regression: the
+    kernel routing was once dead code and nothing noticed)."""
+    from repro.core import byzantine
+    from repro.kernels import ops as kernel_ops
+
+    calls = []
+    real = kernel_ops.cwtm
+    monkeypatch.setattr(
+        byzantine.kernel_ops, "cwtm",
+        lambda *a, **k: (calls.append(1), real(*a, **k))[1],
+    )
+    g = jax.random.normal(key, (12, 64))
+    def cfg(backend):
+        return ProtocolConfig(n_devices=12, d=3, aggregator="cwtm", trim_frac=0.2,
+                              n_byz=2, attack=AttackSpec("sign_flip", n_byz=2),
+                              backend=backend)
+    out_kernel = protocol_round(cfg("interpret"), key, g)
+    assert calls, "kernel cwtm was not invoked on backend='interpret'"
+    out_ref = protocol_round(cfg("xla"), key, g)
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_ref),
+                               rtol=1e-5, atol=1e-6)
 
 
 @pytest.mark.parametrize("attack", ["sign_flip", "gaussian", "zero", "alie", "ipm", "label_shift"])

@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, strategies as st
 
 from repro.core import theory
 from repro.core.theory import TheoryParams
