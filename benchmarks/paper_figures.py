@@ -7,9 +7,11 @@ z_k ~ N(0, 100 I_100), per-subset ground truth with variance 1 + k*sigma_H,
 sign-flipping attack with coefficient -2.
 
 Every experimental curve comes from the declarative scenario registry
-(``repro.core.scenarios.PAPER_FIG4/5/6``) executed through the scan-compiled
-engine: one compile + one device->host transfer per curve, instead of the
-per-iteration dispatch loop this file used to hand-wire.
+(``repro.core.scenarios.PAPER_FIG4/5/6``) executed through the vmapped grid
+engine: each compile bucket of a registry runs as ONE on-device program
+(``scenarios.run_grid``), instead of the per-scenario dispatch loop this
+file used to hand-wire.  ``grid_timing`` records the wall-clock of the
+whole-grid path against that per-scenario loop.
 
 Scale notes: iteration counts are reduced (CPU, one core) but all protocol
 parameters (N=100, H, d values, learning rates, trim fraction, Q_hat) match
@@ -28,13 +30,11 @@ RECORD_EVERY = 10
 
 
 def _curves(registry, steps, problem, seed=0):
-    """Run every scenario of a registry dict on a shared problem."""
-    return {
-        label: scenarios.run_scenario(scn, steps, seed=seed, problem=problem).curve(
-            every=RECORD_EVERY
-        )
-        for label, scn in registry.items()
-    }
+    """Run every scenario of a registry dict on a shared problem — the whole
+    registry goes through the vmapped grid engine (one compiled program per
+    compile bucket, bit-identical to per-scenario ``run_scenario``)."""
+    results = scenarios.run_grid(registry.values(), steps, seed=seed, problem=problem)
+    return {label: results[label].curve(every=RECORD_EVERY) for label in registry}
 
 
 def _rows(curves):
@@ -132,11 +132,55 @@ def fig6_compressed(steps: int = 700):
 
 def section7_sweep(steps: int = 200):
     """The full Section-VII comparison matrix (>= 3 methods x >= 3 attacks x
-    >= 2 compressors) from one registry call through the engine."""
+    >= 2 compressors), vmapped: one compiled program per compile bucket."""
     grid = scenarios.section7_grid()
-    results = scenarios.run_grid(grid, steps)
-    assert len(results) == len(grid)
-    return [("grid", name, m["final_loss"]) for name, m in results.items()]
+    finals = scenarios.grid_finals(scenarios.run_grid(grid, steps))
+    assert len(finals) == len(grid)
+    return [("grid", name, m["final_loss"]) for name, m in finals.items()]
+
+
+def grid_timing(steps: int = 300):
+    """End-to-end wall-clock of the whole-grid on-device engine vs the PR-1
+    per-scenario dispatch loop, on the full ``section7_grid()``.
+
+    Two regimes per mode: *cold* (first sweep in the process — compile +
+    run + readback) and *warm* (the sweep repeated — the figure-driver /
+    notebook / parameter-study regime).  The vmapped engine caches its
+    compiled programs across calls, so a warm whole-grid sweep makes zero
+    compilations and zero per-scenario Python dispatches; the per-scenario
+    loop re-dispatches and re-traces every scenario each sweep.
+
+    Rows: (mode_regime, n_scenarios, seconds) + the cold/warm speedups.
+    """
+    import time
+
+    import numpy as np
+
+    grid = scenarios.section7_grid()
+
+    def timed(mode):
+        t0 = time.perf_counter()
+        results = scenarios.run_grid(grid, steps, mode=mode)
+        jax.block_until_ready([r.x for r in results.values()])
+        return time.perf_counter() - t0, results
+
+    t_grid_cold, res_grid = timed("grid")
+    t_grid_warm, _ = timed("grid")
+    t_loop_cold, res_loop = timed("scan")
+    t_loop_warm, _ = timed("scan")
+    # the two paths must agree bitwise — the timing compares equal work
+    for name in res_loop:
+        assert np.array_equal(
+            np.asarray(res_grid[name].x), np.asarray(res_loop[name].x)
+        ), f"grid != per-scenario for {name}"
+    return [
+        ("grid_vmapped_cold", len(grid), t_grid_cold),
+        ("grid_vmapped_warm", len(grid), t_grid_warm),
+        ("per_scenario_cold", len(grid), t_loop_cold),
+        ("per_scenario_warm", len(grid), t_loop_warm),
+        ("speedup_cold", len(grid), t_loop_cold / t_grid_cold),
+        ("speedup_warm", len(grid), t_loop_warm / t_grid_warm),
+    ]
 
 
 FIGURES = {
@@ -146,4 +190,5 @@ FIGURES = {
     "fig5_heterogeneity": fig5_heterogeneity,
     "fig6_compressed": fig6_compressed,
     "section7_sweep": section7_sweep,
+    "grid_timing": grid_timing,
 }

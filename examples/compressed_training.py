@@ -2,8 +2,8 @@
 
 Random sparsification (Q_hat = 30% of coordinates), 30 Byzantine devices,
 sign-flipping attack applied before compression, CWTM/CWTM-NNM servers —
-plus the wire-byte accounting that motivates Com-LAD.  Each method is a row
-of the Fig.-6 scenario registry and runs as one scan-compiled trajectory:
+plus the wire-byte accounting that motivates Com-LAD.  The Fig.-6 registry
+rows sweep through the vmapped grid engine in one call:
 
     PYTHONPATH=src python examples/compressed_training.py
 """
@@ -26,17 +26,21 @@ def main():
         bits = wire_bits(spec, 100)
         print(f"  {spec.name:20s} {bits / 8:7.0f} B  ({bits / dense_bits:.0%} of dense)")
 
-    print(f"\n{'method':22s} final-loss")
-    results = {}
-    for name, label in {
+    curves = {
         "Com-VA": "Com-VA",
         "Com-CWTM": "Com-CWTM",
         "Com-TGN": "Com-TGN",
         "Com-LAD-CWTM d=3": "Com-LAD-CWTM",
         "Com-LAD-CWTM-NNM d=3": "Com-LAD-CWTM-NNM",
-    }.items():
-        res = scenarios.run_scenario(scenarios.PAPER_FIG6[label], steps=250, problem=problem)
-        results[name] = float(res.metrics["loss"][-1])
+    }
+    grid = scenarios.run_grid(
+        [scenarios.PAPER_FIG6[label] for label in curves.values()],
+        steps=250, problem=problem,
+    )
+    print(f"\n{'method':22s} final-loss")
+    results = {}
+    for name, label in curves.items():
+        results[name] = float(grid[label].metrics["loss"][-1])
         print(f"{name:22s} {results[name]:.4g}")
 
     assert results["Com-LAD-CWTM d=3"] < results["Com-CWTM"]

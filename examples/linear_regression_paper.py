@@ -2,9 +2,8 @@
 
 Reproduces the Fig. 4 comparison at full protocol scale (N=100 devices,
 20 Byzantine, sign-flipping attack x(-2)) with reduced iteration count.
-Each method is one row of the declarative scenario registry and runs as a
-single scan-compiled trajectory (one jit compile per curve, no per-round
-dispatch):
+The whole comparison set runs through the vmapped grid engine — compile
+buckets + on-device lanes, each bit-identical to its standalone trajectory:
 
     PYTHONPATH=src python examples/linear_regression_paper.py
 """
@@ -13,23 +12,28 @@ import jax
 from repro.core import scenarios
 from repro.data.synthetic import linear_regression_problem
 
+CURVES = {
+    "VA (mean)": "VA",
+    "CWTM": "CWTM",
+    "CWTM-NNM": "CWTM-NNM",
+    "LAD-CWTM d=5": "LAD-CWTM-d5",
+    "LAD-CWTM d=10": "LAD-CWTM-d10",
+    "LAD-CWTM d=20": "LAD-CWTM-d20",
+    "LAD-CWTM-NNM d=10": "LAD-CWTM-NNM-d10",
+}
+
 
 def main():
     problem = linear_regression_problem(jax.random.PRNGKey(0), n=100, dim=100, sigma_h=0.3)
 
+    grid = scenarios.run_grid(
+        [scenarios.PAPER_FIG4[label] for label in CURVES.values()],
+        steps=200, problem=problem,
+    )
     print(f"{'method':24s} final-loss")
     results = {}
-    for name, scn in {
-        "VA (mean)": scenarios.PAPER_FIG4["VA"],
-        "CWTM": scenarios.PAPER_FIG4["CWTM"],
-        "CWTM-NNM": scenarios.PAPER_FIG4["CWTM-NNM"],
-        "LAD-CWTM d=5": scenarios.PAPER_FIG4["LAD-CWTM-d5"],
-        "LAD-CWTM d=10": scenarios.PAPER_FIG4["LAD-CWTM-d10"],
-        "LAD-CWTM d=20": scenarios.PAPER_FIG4["LAD-CWTM-d20"],
-        "LAD-CWTM-NNM d=10": scenarios.PAPER_FIG4["LAD-CWTM-NNM-d10"],
-    }.items():
-        res = scenarios.run_scenario(scn, steps=200, problem=problem)
-        results[name] = float(res.metrics["loss"][-1])
+    for name, label in CURVES.items():
+        results[name] = float(grid[label].metrics["loss"][-1])
         print(f"{name:24s} {results[name]:.4g}")
 
     assert results["LAD-CWTM d=10"] < results["CWTM"]

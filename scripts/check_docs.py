@@ -1,0 +1,63 @@
+"""Execute every fenced ``python`` snippet in the user-facing docs.
+
+Documentation drifts the moment it stops being executed: this script pulls
+each ```` ```python ```` block out of README.md and docs/*.md and runs the
+blocks of a file sequentially in one namespace (so a later snippet may use
+names a former one defined, exactly as a reader would).  Any raising snippet
+fails the run with the file and block index.
+
+Wired into tier-1 via tests/test_docs.py; also runnable standalone:
+
+    PYTHONPATH=src python scripts/check_docs.py
+
+Blocks fenced as anything other than ``python`` (e.g. ``bash``) are ignored.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = ("README.md", "docs/paper_map.md")
+_FENCE = re.compile(r"^```python[ \t]*\n(.*?)^```", re.S | re.M)
+
+
+def snippets(path: pathlib.Path) -> list[str]:
+    """The ``python``-fenced code blocks of a markdown file, in order."""
+    return _FENCE.findall(path.read_text())
+
+
+def run_file(relpath: str) -> int:
+    """Execute all snippets of one doc file in a shared namespace.
+
+    Returns the number of executed blocks; raises on the first failure with
+    the offending file/block in the message.
+    """
+    path = REPO_ROOT / relpath
+    blocks = snippets(path)
+    ns: dict = {"__name__": f"docsnippet:{relpath}"}
+    for i, code in enumerate(blocks):
+        try:
+            exec(compile(code, f"{relpath}[block {i}]", "exec"), ns)
+        except Exception as e:  # noqa: BLE001 - reraise with location
+            raise AssertionError(
+                f"doc snippet failed: {relpath} block {i}: {type(e).__name__}: {e}"
+            ) from e
+    return len(blocks)
+
+
+def main() -> int:
+    total = 0
+    for rel in DOC_FILES:
+        n = run_file(rel)
+        print(f"{rel}: {n} snippet(s) OK")
+        total += n
+    if total == 0:
+        print("no python snippets found — check the fence regex", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

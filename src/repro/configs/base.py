@@ -145,6 +145,21 @@ class TrainConfig:
     shape: str = "train_4k"
     # LAD protocol
     protocol: str = "lad"  # lad | plain | none (none = honest mean all-reduce)
+    # Protocol realization:
+    #   "protomath" — per-parameter robust exchange inside the backward pass
+    #                 (custom_vjp rules of core.protomath; the GSPMD-sharded
+    #                 production path: all-to-all / all-gather servers)
+    #   "engine"    — whole-model protocol round via core.byzantine: per-subset
+    #                 gradients are computed explicitly (vmap over the device
+    #                 blocks of the batch), flattened, and pushed through the
+    #                 same assignment -> eq.-(5) encode -> compress -> attack ->
+    #                 robust-aggregate pipeline as the paper's linear-regression
+    #                 runs (Algorithm 1/2 verbatim, incl. the randomized cyclic
+    #                 task matrix that protomath approximates with data rolls)
+    protocol_impl: str = "protomath"
+    # logical LAD device count for the engine path (None: the mesh's data
+    # size); the global batch's leading dim must be divisible by it
+    n_subsets: int | None = None
     d: int = 2  # computational load (subsets per device)
     aggregator: str = "cwtm"
     trim_frac: float = 0.125

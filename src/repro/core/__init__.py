@@ -18,7 +18,13 @@ Layout:
 from repro.core import aggregators, attacks, coding, compression, task_matrix, theory
 from repro.core.byzantine import ProtocolConfig, protocol_round
 from repro.core.engine import TrajectoryResult, protocol_rounds, run_trajectory
-from repro.core.scenarios import Scenario, run_grid, run_scenario, section7_grid
+from repro.core.scenarios import (
+    Scenario,
+    grid_finals,
+    run_grid,
+    run_scenario,
+    section7_grid,
+)
 
 __all__ = [
     "aggregators",
@@ -33,6 +39,7 @@ __all__ = [
     "protocol_rounds",
     "run_trajectory",
     "Scenario",
+    "grid_finals",
     "run_grid",
     "run_scenario",
     "section7_grid",

@@ -23,6 +23,7 @@ Two execution styles are provided:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
@@ -34,11 +35,54 @@ from repro.core import compression as comp_lib
 from repro.core import task_matrix as tm
 from repro.kernels import ops as kernel_ops
 
-__all__ = ["ProtocolConfig", "lad_round", "protocol_round"]
+__all__ = [
+    "ProtocolConfig",
+    "lad_round",
+    "protocol_round",
+    "make_attack_fn",
+    "make_server_fn",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class ProtocolConfig:
+    """Static configuration of one protocol condition (Algorithms 1 and 2).
+
+    This is the engine's compile-time contract: every field here shapes the
+    compiled program (array sizes, branch structure, kernel choice), which is
+    why the vmapped grid engine groups configs that differ in these fields
+    into separate compile buckets.
+
+    Attributes:
+      n_devices: ``N`` — logical devices == data subsets (Section II).
+      d: computational load — subsets computed per device per round (the
+        cyclic task matrix's ones-per-row).  Ignored for ``method="plain"``
+        (forced to 1) and the group size for ``method="draco"`` (needs
+        ``d | N``).
+      method: ``"lad"`` (Algorithm 1/2; Com-LAD when compression is on),
+        ``"plain"`` (non-redundant baselines, d=1), or ``"draco"``
+        (fractional repetition + majority-vote exact decode [13]).
+      aggregator: any key of ``aggregators.AGGREGATORS``, optionally with the
+        ``"-nnm"`` suffix for nearest-neighbor-mixing pre-aggregation.
+      trim_frac: CWTM trim fraction (``f = floor(trim_frac * N)`` per side).
+      n_byz: number of Byzantine devices ``N - H``.
+      attack: the corruption model (see ``attacks.AttackSpec``).
+      compression: the Com-LAD wire compression (Definition 2).
+      backend: hot-path kernel backend for the server/device inner ops
+        (kernels/ops.py) — the eq.-(5) combine, CWTM, the NNM gram matrix
+        and QSGD quantization:
+
+          * ``"xla"``       — pure-jnp reference path (CPU default);
+          * ``"interpret"`` — Pallas interpret mode (CPU-correct kernel
+                              semantics, used by the parity tests);
+          * ``"pallas"``    — compiled Pallas kernels (TPU target).
+
+        The ops wrappers own the tiling contract: any ``Q`` is accepted —
+        non-divisible lengths are zero-padded to the tile boundary and
+        sliced back, bit-identical to the unpadded math on the real
+        coordinates (zero columns are exact no-ops for every kernel).
+    """
+
     n_devices: int
     d: int = 1  # computational load (subsets per device)
     method: str = "lad"  # lad | plain | draco
@@ -51,10 +95,6 @@ class ProtocolConfig:
     compression: comp_lib.CompressionSpec = dataclasses.field(
         default_factory=comp_lib.CompressionSpec
     )
-    # Hot-path kernel backend for the server/device inner ops (kernels/ops.py):
-    #   "xla"       — pure-jnp reference path (CPU default)
-    #   "interpret" — Pallas interpret mode (CPU-correct kernel semantics)
-    #   "pallas"    — compiled Pallas kernels (TPU target)
     backend: str = "xla"
 
     def make_aggregator(self):
@@ -93,29 +133,60 @@ def _device_coded_gradients(cfg: ProtocolConfig, key: jax.Array, subset_grads: j
     return coded, assignment.subsets
 
 
-def _server_aggregate(cfg: ProtocolConfig, transmitted: jax.Array) -> jax.Array:
-    """Robust aggregation, routed through the Pallas kernels when the config
-    selects a kernel backend and the rule has a kernel realization (CWTM and
-    its NNM-premixed variant — the paper's main rules); other rules fall back
-    to the pure-jnp aggregators on every backend."""
+@functools.lru_cache(maxsize=256)
+def make_server_fn(cfg: ProtocolConfig) -> Callable[[jax.Array], jax.Array]:
+    """Build the server aggregation ``(N, Q) -> (Q,)`` for ``cfg``.
+
+    Routed through the Pallas kernels when the config selects a kernel
+    backend and the rule has a kernel realization (CWTM and its NNM-premixed
+    variant — the paper's main rules); other rules fall back to the pure-jnp
+    aggregators on every backend.  For DRACO the server is the group
+    majority-vote decoder (compression-free exact recovery).
+
+    This is the branch unit of the vmapped grid engine: ``run_grid`` builds
+    one server fn per distinct aggregator in a compile bucket and selects
+    per-lane with ``lax.switch``.
+    """
+    if cfg.method == "draco":
+        return lambda transmitted: coded_draco_decode(transmitted, cfg.d)
     if cfg.backend != "xla":
         name, nnm = cfg.aggregator, False
         if name.endswith("-nnm"):
             name, nnm = name[: -len("-nnm")], True
         if name == "cwtm":
-            msgs = transmitted
-            if nnm:
-                d2 = kernel_ops.pairwise_sqdist(msgs, backend=cfg.backend)
-                msgs = agg_lib.nnm_mix(msgs, cfg.n_byz, d2=d2)
-            trim = int(cfg.trim_frac * msgs.shape[0])
-            return kernel_ops.cwtm(msgs, trim, backend=cfg.backend)
-    return cfg.make_aggregator()(transmitted)
+
+            def kernel_server(transmitted: jax.Array) -> jax.Array:
+                msgs = transmitted
+                if nnm:
+                    d2 = kernel_ops.pairwise_sqdist(msgs, backend=cfg.backend)
+                    msgs = agg_lib.nnm_mix(msgs, cfg.n_byz, d2=d2)
+                trim = int(cfg.trim_frac * msgs.shape[0])
+                return kernel_ops.cwtm(msgs, trim, backend=cfg.backend)
+
+            return kernel_server
+    return cfg.make_aggregator()
+
+
+@functools.lru_cache(maxsize=256)
+def make_attack_fn(cfg: ProtocolConfig) -> attack_lib.Attack:
+    """The corruption map ``(key, msgs, mask) -> transmitted`` of ``cfg``
+    (attack spec with the config's Byzantine count folded in) — the second
+    branch unit of the vmapped grid engine.
+
+    Both factories are lru-cached on the (hashable, frozen) config so equal
+    configs return the *same function object* across calls — the identity
+    the grid engine's program cache keys its compiled executables on.
+    """
+    return dataclasses.replace(cfg.attack, n_byz=cfg.n_byz).make()
 
 
 def protocol_round(
     cfg: ProtocolConfig,
     key: jax.Array,
     subset_grads: jax.Array,
+    *,
+    attack_fn: attack_lib.Attack | None = None,
+    server_fn: Callable[[jax.Array], jax.Array] | None = None,
 ) -> jax.Array:
     """One full protocol round.
 
@@ -124,6 +195,12 @@ def protocol_round(
       key: round PRNG key (folds in the step index at the caller).
       subset_grads: ``(N, Q)`` — gradient of every logical data subset at the
         current iterate (the simulation's stand-in for devices' local compute).
+      attack_fn / server_fn: optional overrides for the corruption map and the
+        server aggregation.  ``None`` (the default) derives both from ``cfg``
+        via ``make_attack_fn`` / ``make_server_fn``; the vmapped grid engine
+        passes ``lax.switch``-dispatched versions so the attack/aggregator
+        axes of a sweep become *traced* (one compile per static bucket, not
+        per cell).
 
     Returns:
       ``(Q,)`` the aggregated global update direction ``g^t``.
@@ -162,15 +239,14 @@ def protocol_round(
     mask = attack_lib.sample_byzantine_mask(
         k_mask, n, cfg.n_byz, fixed=cfg.attack.fixed_identity
     )
-    attack = dataclasses.replace(cfg.attack, n_byz=cfg.n_byz).make()
+    attack = attack_fn if attack_fn is not None else make_attack_fn(cfg)
     transmitted = attack(k_attack, coded, mask)
 
-    # --- Server aggregation --------------------------------------------------
-    if cfg.method == "draco":
-        # DRACO ignores compression (incompatible, per Section VII.B) and
-        # decodes exactly via group majority vote.
-        return coded_draco_decode(transmitted, cfg.d)
-    return _server_aggregate(cfg, transmitted)
+    # --- Server aggregation ------------------------------------------------
+    # (For DRACO the server is the majority-vote decoder; it ignores
+    # compression — incompatible, per Section VII.B.)
+    server = server_fn if server_fn is not None else make_server_fn(cfg)
+    return server(transmitted)
 
 
 def coded_draco_decode(transmitted: jax.Array, d: int) -> jax.Array:

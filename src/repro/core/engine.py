@@ -9,11 +9,15 @@ keys, optimizer state and the iterate thread through the scan carry; per-
 round metrics (loss, solution error, aggregation distance) come back as
 stacked ``(steps,)`` arrays in a single device->host transfer at the end.
 
-Two execution modes share the identical round body:
+Three execution modes share the identical round body:
 
   * ``mode="scan"`` — the compiled ``lax.scan`` hot path (default);
   * ``mode="loop"`` — the legacy per-round jitted Python loop, kept as the
-    bit-exactness reference (tests assert scan == loop on the same keys).
+    bit-exactness reference (tests assert scan == loop on the same keys);
+  * ``run_grid``   — whole-grid on-device: ``jax.vmap`` over a scenario-lane
+    axis with the attack/aggregator axes dispatched per lane by
+    ``lax.switch``; compiled programs are cached across calls and every lane
+    is bitwise equal to its standalone trajectory.
 
 The per-round randomness is ``jax.random.fold_in(key, t)`` — exactly the
 convention of the previous hand-written loops in benchmarks/ and examples/,
@@ -26,27 +30,36 @@ keys, again as one compiled scan.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.byzantine import ProtocolConfig, protocol_round
+from repro.core.byzantine import (
+    ProtocolConfig,
+    make_attack_fn,
+    make_server_fn,
+    protocol_round,
+)
 from repro.optim import make_optimizer
 
-__all__ = ["TrajectoryResult", "run_trajectory", "protocol_rounds"]
+__all__ = ["TrajectoryResult", "run_trajectory", "run_grid", "protocol_rounds"]
 
 
 @dataclasses.dataclass(frozen=True)
 class TrajectoryResult:
-    """Output of ``run_trajectory``.
+    """Output of ``run_trajectory`` (one trajectory) or ``run_grid`` (a
+    batched stack of trajectories).
 
     Attributes:
-      x: final iterate ``(Q,)`` (or pytree matching ``x0``).
+      x: final iterate ``(Q,)`` (or pytree matching ``x0``).  From
+        ``run_grid``: ``(S, Q)`` with a leading scenario-lane axis.
       metrics: dict of per-round ``(steps,)`` arrays — always ``loss`` (if a
         ``loss_fn`` was given), ``agg_dist`` (||aggregate - honest subset
         mean||, the round's aggregation error) and ``grad_norm``; plus
-        ``sol_err`` (||x_t - x*||) when ``x_star`` is supplied.
+        ``sol_err`` (||x_t - x*||) when ``x_star`` is supplied.  From
+        ``run_grid``: ``(S, steps)`` arrays.
     """
 
     x: Any
@@ -54,14 +67,32 @@ class TrajectoryResult:
 
     def curve(self, name: str = "loss", every: int = 1) -> list[tuple[int, float]]:
         """(iteration, value) pairs thinned to ``every`` (always keeps the
-        last round) — the row format of benchmarks/paper_figures.py."""
+        last round) — the row format of benchmarks/paper_figures.py.
+
+        Only defined for a single trajectory (1-D metric arrays); on a
+        batched ``run_grid`` result select a lane first: ``res.lane(i)``.
+        """
         vals = jax.device_get(self.metrics[name])
+        if getattr(vals, "ndim", 1) != 1:
+            raise ValueError(
+                "curve() needs a single trajectory; this result is batched "
+                f"(metric {name!r} has shape {vals.shape}) — use .lane(i) first"
+            )
         n = len(vals)
         return [
             (i, float(v))
             for i, v in enumerate(vals)
             if i % every == 0 or i == n - 1
         ]
+
+    def lane(self, i: int) -> "TrajectoryResult":
+        """Extract scenario lane ``i`` of a batched ``run_grid`` result as a
+        plain single-trajectory result (indexes the leading axis of ``x`` and
+        every metric)."""
+        return TrajectoryResult(
+            x=jax.tree.map(lambda a: a[i], self.x),
+            metrics={k: v[i] for k, v in self.metrics.items()},
+        )
 
 
 def _round_body(
@@ -73,14 +104,16 @@ def _round_body(
     x_star: jax.Array | None,
     lr: float | Callable[[jax.Array], jax.Array],
     grad_scale: float,
+    attack_fn=None,
+    server_fn=None,
 ):
-    """The single round used by both engine modes (shared => bit-identical)."""
+    """The single round used by every engine mode (shared => bit-identical)."""
 
     def body(carry, t):
         x, opt_state = carry
         k = jax.random.fold_in(key, t)
         grads = subset_grad_fn(x)  # (N, Q)
-        g = protocol_round(cfg, k, grads)
+        g = protocol_round(cfg, k, grads, attack_fn=attack_fn, server_fn=server_fn)
         lr_t = lr(t) if callable(lr) else lr
         new_x, new_state = opt.update(x, grad_scale * g, opt_state, lr_t)
         metrics = {
@@ -112,6 +145,19 @@ def run_trajectory(
 ) -> TrajectoryResult:
     """Run ``steps`` full protocol rounds from ``x0``.
 
+    Bit-exactness guarantee: both modes (and the vmapped ``run_grid``) share
+    the identical round body, and the step size / gradient scale enter every
+    compiled program as runtime operands, so ``mode="scan"`` equals
+    ``mode="loop"`` BITWISE on the same key (asserted per method by the
+    tests), and a ``run_grid`` lane equals the corresponding single
+    trajectory bitwise.  Per-round randomness is ``fold_in(key, t)`` — the
+    convention of the original hand-written benchmark loops, so trajectories
+    reproduce across engine modes and across the pre-engine code.
+
+    The iterate length ``Q`` is unconstrained: on kernel backends the ops
+    wrappers zero-pad non-divisible ``Q`` up to the tile boundary and slice
+    back (exact on the real coordinates — see ``kernels/ops.py``).
+
     Args:
       cfg: protocol configuration (method/attack/aggregator/compression).
       key: trajectory PRNG key; round ``t`` uses ``fold_in(key, t)``.
@@ -130,27 +176,262 @@ def run_trajectory(
         raise ValueError(f"unknown engine mode {mode!r}")
     opt = make_optimizer(optimizer)
     opt_state0 = opt.init(x0)
-    body = _round_body(cfg, key, opt, subset_grad_fn, loss_fn, x_star, lr, grad_scale)
+
+    # lr and grad_scale enter the compiled programs as *runtime operands*,
+    # never baked constants: as constants XLA may fold them through the
+    # aggregator's own constants (e.g. the mean's 1/N) in one compilation
+    # but not another (single vs vmapped grid) — a 1-ulp drift that would
+    # break the engine's bit-exactness guarantee between modes.  Non-constant
+    # float multiplies are never reassociated, so traced scalars pin the
+    # evaluation order everywhere.
+    gs = jnp.float32(grad_scale)
+    lr_arg = 0.0 if callable(lr) else jnp.float32(lr)
+
+    def make_body(lr_op, gs_op):
+        return _round_body(
+            cfg, key, opt, subset_grad_fn, loss_fn, x_star,
+            lr if callable(lr) else lr_op, gs_op,
+        )
 
     if mode == "scan":
 
         @jax.jit
-        def trajectory(x0, opt_state0):
+        def trajectory(x0, opt_state0, lr_op, gs_op):
             return jax.lax.scan(
-                body, (x0, opt_state0), jnp.arange(steps, dtype=jnp.int32)
+                make_body(lr_op, gs_op),
+                (x0, opt_state0),
+                jnp.arange(steps, dtype=jnp.int32),
             )
 
-        (x, _), metrics = trajectory(x0, opt_state0)
+        (x, _), metrics = trajectory(x0, opt_state0, lr_arg, gs)
         return TrajectoryResult(x=x, metrics=metrics)
 
-    step_fn = jax.jit(body)
+    @jax.jit
+    def step_fn(carry, t, lr_op, gs_op):
+        return make_body(lr_op, gs_op)(carry, t)
+
     carry = (x0, opt_state0)
     per_round = []
     for t in range(steps):
-        carry, m = step_fn(carry, jnp.asarray(t, jnp.int32))
+        carry, m = step_fn(carry, jnp.asarray(t, jnp.int32), lr_arg, gs)
         per_round.append(m)
     metrics = jax.tree.map(lambda *ms: jnp.stack(ms), *per_round)
     return TrajectoryResult(x=carry[0], metrics=metrics)
+
+
+def _branch_select(branches, ids):
+    """One callable from a static branch table: direct call when the table is
+    a singleton, else a per-lane ``lax.switch`` on the traced branch id."""
+    branches = list(branches)
+    if len(branches) == 1:
+        return branches[0], None
+    if ids is None:
+        raise ValueError(f"{len(branches)} branches need per-lane ids")
+
+    def make(lane_id):
+        def dispatch(*operands):
+            return jax.lax.switch(lane_id, branches, *operands)
+
+        return dispatch
+
+    return None, make
+
+
+def run_grid(
+    cfg: ProtocolConfig,
+    keys: jax.Array,
+    x0: Any,
+    subset_grad_fn: Callable[[Any, Any], jax.Array],
+    *,
+    steps: int,
+    lr: float | jax.Array | Callable[[jax.Array], jax.Array],
+    data: Any = None,
+    data_batched: bool = True,
+    attack_branches: tuple | None = None,
+    attack_ids: jax.Array | None = None,
+    server_branches: tuple | None = None,
+    server_ids: jax.Array | None = None,
+    optimizer: str = "sgd",
+    grad_scale: float = 1.0,
+    loss_fn: Callable[[Any, Any], jax.Array] | None = None,
+    x_star: jax.Array | None = None,
+    x0_batched: bool = False,
+) -> TrajectoryResult:
+    """Run a whole *batch of trajectories* as ONE compiled on-device program.
+
+    ``jax.vmap`` lifts the scan-compiled round body of ``run_trajectory`` over
+    a leading scenario axis of size ``S``: the entire sweep — every lane's
+    assignment, eq.-(5) encode, compression, attack, robust aggregation and
+    optimizer step, for all ``steps`` rounds — compiles once and runs without
+    any per-scenario Python dispatch.  Lane ``i`` is bit-identical to
+    ``run_trajectory`` called with lane ``i``'s key/data/lr (tests assert
+    this), because both modes share the exact same round body.
+
+    Static protocol structure (``method``, ``d``, ``n_devices``, compressor
+    family and sizes, backend) is fixed by ``cfg`` for all lanes — callers
+    with heterogeneous static fields must group lanes into compile buckets
+    (``repro.core.scenarios.run_grid`` does this).  The *attack* and
+    *aggregator* axes, by contrast, may vary per lane: pass a static branch
+    table plus per-lane int32 ids and the engine dispatches with
+    ``lax.switch`` (under vmap every branch is computed and selected per
+    lane, trading a few cheap aggregator evaluations for not re-compiling).
+
+    Args:
+      cfg: shared static protocol template.  Its ``attack``/``aggregator``
+        fields are ignored when the corresponding branch table is given.
+      keys: ``(S, ...)`` stacked per-lane trajectory PRNG keys.
+      x0: initial iterate, shared ``(Q,)`` (default) or per-lane ``(S, Q)``
+        with ``x0_batched=True``.
+      subset_grad_fn: ``(data_lane, x) -> (N, Q)`` per-subset gradients; the
+        first argument receives this lane's slice of ``data`` (or ``data``
+        itself when ``data_batched=False``, or ``None``).
+      steps: number of rounds (static scan length, shared).
+      lr: step size — a shared float, a per-lane ``(S,)`` array, or a shared
+        ``t -> lr`` schedule.
+      data: optional pytree of per-lane problem data with leading ``(S, ...)``
+        leaves (``data_batched=True``) or a single shared pytree.
+      attack_branches / attack_ids: static tuple of corruption maps
+        ``(key, msgs, mask) -> msgs`` (build with
+        ``byzantine.make_attack_fn``) + per-lane ``(S,)`` indices.  ``None``
+        derives a single branch from ``cfg``.
+      server_branches / server_ids: static tuple of server aggregations
+        ``(N, Q) -> (Q,)`` (build with ``byzantine.make_server_fn``) +
+        per-lane indices.  ``None`` derives a single branch from ``cfg``.
+      optimizer / grad_scale: as in ``run_trajectory`` (shared).
+      loss_fn: optional ``(data_lane, x) -> scalar`` per-round metric hook.
+      x_star: optional shared ``(Q,)`` solution for the ``sol_err`` metric.
+
+    Returns:
+      A batched ``TrajectoryResult``: ``x`` has a leading ``(S,)`` lane axis
+      and every metric is ``(S, steps)``.  Use ``.lane(i)`` to recover the
+      per-scenario result.
+
+    Compiled programs are cached across calls, keyed on the *object identity*
+    of ``subset_grad_fn`` / ``loss_fn`` / the branch functions / a callable
+    ``lr`` (plus ``cfg``, ``steps``, ``optimizer`` and the batching shape).
+    To benefit from the cache in repeated sweeps, pass module-level functions
+    (and build branches with the lru-cached ``make_attack_fn`` /
+    ``make_server_fn``) rather than fresh lambdas — a fresh closure per call
+    recompiles every time and pins its captured arrays in the cache.
+    """
+    if attack_ids is not None and (attack_branches is None or len(attack_branches) < 2):
+        raise ValueError(
+            "attack_ids given but attack_branches has fewer than 2 entries — "
+            "the ids would be silently ignored"
+        )
+    if server_ids is not None and (server_branches is None or len(server_branches) < 2):
+        raise ValueError(
+            "server_ids given but server_branches has fewer than 2 entries — "
+            "the ids would be silently ignored"
+        )
+    attack_branches = (
+        attack_branches if attack_branches is not None else (make_attack_fn(cfg),)
+    )
+    server_branches = (
+        server_branches if server_branches is not None else (make_server_fn(cfg),)
+    )
+    lr_batched = not callable(lr) and getattr(jnp.asarray(lr), "ndim", 0) == 1
+    axes_sig = (
+        lr_batched,
+        attack_ids is not None,
+        server_ids is not None,
+        data is not None and data_batched,
+        x0_batched,
+        x_star is not None,
+    )
+    program = _grid_program(
+        cfg,
+        steps,
+        tuple(attack_branches),
+        tuple(server_branches),
+        subset_grad_fn,
+        loss_fn,
+        lr if callable(lr) else None,
+        optimizer,
+        axes_sig,
+    )
+    # a shared schedule rides the closure; numeric lr is a traced f32 operand
+    # exactly as in run_trajectory (bit-exactness across modes)
+    lr_arg = 0.0 if callable(lr) else jnp.asarray(lr, jnp.float32)
+    x, metrics = program(
+        keys, lr_arg, attack_ids, server_ids, data, x0, x_star,
+        jnp.float32(grad_scale),
+    )
+    return TrajectoryResult(x=x, metrics=metrics)
+
+
+@functools.lru_cache(maxsize=128)
+def _grid_program(
+    cfg: ProtocolConfig,
+    steps: int,
+    attack_branches: tuple,
+    server_branches: tuple,
+    subset_grad_fn,
+    loss_fn,
+    lr_schedule,
+    optimizer: str,
+    axes_sig: tuple,
+):
+    """Build (and cache) the jitted vmapped-scan program for one bucket.
+
+    The cache key is entirely static structure: config, scan length, branch
+    *function identities* (stable across calls via the lru-cached
+    ``make_attack_fn``/``make_server_fn``), the gradient/loss callables and
+    the batching signature.  All numeric inputs — keys, lr, branch ids,
+    problem data, x0, x_star, grad_scale — are runtime operands, so repeated
+    sweeps (figure drivers, notebooks, parameter studies) reuse the compiled
+    executable: a warm whole-grid sweep makes zero compilations and zero
+    per-scenario dispatches.
+    """
+    (lr_batched, has_attack_ids, has_server_ids, data_batched,
+     x0_batched, has_x_star) = axes_sig
+    attack_fn0, make_attack = _branch_select(
+        attack_branches, True if has_attack_ids else None
+    )
+    server_fn0, make_server = _branch_select(
+        server_branches, True if has_server_ids else None
+    )
+    opt = make_optimizer(optimizer)
+
+    def one_lane(key, lr_lane, attack_id, server_id, data_lane, x0_lane,
+                 x_star_op, gs_op):
+        attack_fn = attack_fn0 if make_attack is None else make_attack(attack_id)
+        server_fn = server_fn0 if make_server is None else make_server(server_id)
+        body = _round_body(
+            cfg,
+            key,
+            opt,
+            lambda x: subset_grad_fn(data_lane, x),
+            None if loss_fn is None else (lambda x: loss_fn(data_lane, x)),
+            x_star_op if has_x_star else None,
+            lr_schedule if lr_schedule is not None else lr_lane,
+            gs_op,
+            attack_fn=attack_fn,
+            server_fn=server_fn,
+        )
+        (x, _), metrics = jax.lax.scan(
+            body, (x0_lane, opt.init(x0_lane)), jnp.arange(steps, dtype=jnp.int32)
+        )
+        return x, metrics
+
+    in_axes = (
+        0,
+        0 if lr_batched else None,
+        0 if has_attack_ids else None,
+        0 if has_server_ids else None,
+        0 if data_batched else None,
+        0 if x0_batched else None,
+        None,  # x_star: shared solution (sol_err metric)
+        None,  # grad_scale: shared runtime operand (see run_trajectory)
+    )
+
+    @jax.jit
+    def grid(keys, lr, attack_ids, server_ids, data, x0, x_star, gs_op):
+        return jax.vmap(one_lane, in_axes=in_axes)(
+            keys, lr, attack_ids, server_ids, data, x0, x_star, gs_op
+        )
+
+    return grid
 
 
 def protocol_rounds(

@@ -17,8 +17,13 @@ Entry points:
   * ``PAPER_FIG4/5/6``      — the exact named curves of Figs. 4-6.
   * ``run_scenario()``      — scenario -> scan-compiled trajectory on the
                               Section-VII linear-regression problem.
-  * ``run_grid()``          — sweep a list of scenarios, returning per-
-                              scenario final metrics.
+  * ``run_grid()``          — whole-grid on-device: scenarios are grouped
+                              into compile buckets by their *static* protocol
+                              structure and each bucket runs as ONE vmapped
+                              scan (``engine.run_grid``); per-lane results are
+                              bit-identical to ``run_scenario``.
+  * ``grid_finals()``       — flatten a grid result to per-scenario final
+                              metrics (the benchmark CSV row format).
 """
 from __future__ import annotations
 
@@ -28,8 +33,9 @@ from typing import Iterable, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine as engine_lib
 from repro.core.attacks import AttackSpec
-from repro.core.byzantine import ProtocolConfig
+from repro.core.byzantine import ProtocolConfig, make_attack_fn, make_server_fn
 from repro.core.compression import CompressionSpec
 from repro.core.engine import TrajectoryResult, run_trajectory
 from repro.data.synthetic import linear_regression_problem, linreg_loss, linreg_subset_grads
@@ -43,6 +49,7 @@ __all__ = [
     "PAPER_FIG6",
     "run_scenario",
     "run_grid",
+    "grid_finals",
 ]
 
 
@@ -106,6 +113,10 @@ def section7_grid(
     (Section VII.B), so draco rows only appear with ``compressor="none"``,
     and its ``N`` is rounded down to a multiple of ``d`` (fractional
     repetition needs d | N).
+
+    Under ``run_grid`` the resulting 15 rows collapse into 5 compile buckets
+    (method x compressor; the attack axis is traced), each a single vmapped
+    on-device program.
     """
     rows = []
     seen = set()
@@ -204,19 +215,7 @@ def run_scenario(
     curves compare on identical data); it is truncated to ``scn.n_devices``
     subsets (the DRACO rows use N=82 of the common N=100 problem).
     """
-    if problem is None:
-        z, y = linear_regression_problem(
-            jax.random.PRNGKey(seed), n=scn.n_devices, dim=dim, sigma_h=scn.sigma_h
-        )
-    else:
-        z, y = problem
-        if z.shape[0] < scn.n_devices:
-            raise ValueError(
-                f"shared problem has {z.shape[0]} subsets < n_devices="
-                f"{scn.n_devices} of scenario {scn.name!r} (truncation only "
-                f"shrinks, and out-of-bounds gathers would clamp silently)"
-            )
-        z, y = z[: scn.n_devices], y[: scn.n_devices]
+    z, y = _lane_problem(scn, seed=seed, problem=problem, dim=dim)
     x_star = None
     if with_sol_err:
         x_star, *_ = jnp.linalg.lstsq(z, y)
@@ -235,20 +234,185 @@ def run_scenario(
     )
 
 
+def _lane_problem(scn: Scenario, *, seed: int, problem, dim: int):
+    """The (Z, y) data a scenario trains on — shared-and-truncated or
+    freshly generated at the scenario's own heterogeneity level.  One code
+    path for ``run_scenario`` and the grid lanes keeps them bit-identical."""
+    if problem is None:
+        return linear_regression_problem(
+            jax.random.PRNGKey(seed), n=scn.n_devices, dim=dim, sigma_h=scn.sigma_h
+        )
+    z, y = problem
+    if z.shape[0] < scn.n_devices:
+        raise ValueError(
+            f"shared problem has {z.shape[0]} subsets < n_devices="
+            f"{scn.n_devices} of scenario {scn.name!r} (truncation only "
+            f"shrinks, and out-of-bounds gathers would clamp silently)"
+        )
+    return z[: scn.n_devices], y[: scn.n_devices]
+
+
+def _bucket_signature(scn: Scenario, exact: bool = True) -> tuple:
+    """Everything that changes *compiled structure*: scenarios agreeing on
+    this tuple share shapes and static protocol wiring, so they can ride the
+    same vmapped program; attack / lr / sigma_h always stay per-lane.
+
+    ``exact=True`` (the default) additionally pins the aggregator per bucket.
+    A per-lane *server* switch is supported by the engine, but on the CPU
+    backend the fused multiply-add clustering around the switch differs from
+    the single-scenario program by ~1 ulp — keeping the aggregator static is
+    what upgrades "allclose" to the bit-exactness guarantee.  (The *attack*
+    switch shows no such drift and is always per-lane.)
+    """
+    return (
+        scn.method,
+        scn.d,
+        scn.n_devices,
+        scn.n_byz,
+        scn.trim_frac,
+        scn.compressor,
+        scn.q_hat_frac,
+        scn.quant_levels,
+        scn.backend,
+    ) + ((scn.aggregator,) if exact else ())
+
+
+def _run_bucket(
+    group: list[Scenario],
+    steps: int,
+    *,
+    seed: int,
+    problem,
+    dim: int,
+) -> dict[str, TrajectoryResult]:
+    """One compile bucket -> one vmapped ``engine.run_grid`` call."""
+    tmpl = group[0].protocol()
+    attack_names = list(dict.fromkeys(s.attack for s in group))
+    agg_names = list(dict.fromkeys(s.aggregator for s in group))
+    attack_branches = tuple(
+        make_attack_fn(
+            dataclasses.replace(tmpl, attack=AttackSpec(a, n_byz=tmpl.n_byz))
+        )
+        for a in attack_names
+    )
+    server_branches = tuple(
+        make_server_fn(dataclasses.replace(tmpl, aggregator=g)) for g in agg_names
+    )
+    attack_ids = (
+        None
+        if len(attack_names) == 1
+        else jnp.array([attack_names.index(s.attack) for s in group], jnp.int32)
+    )
+    server_ids = (
+        None
+        if len(agg_names) == 1
+        else jnp.array([agg_names.index(s.aggregator) for s in group], jnp.int32)
+    )
+    if problem is not None:
+        data = _lane_problem(group[0], seed=seed, problem=problem, dim=dim)
+        data_batched = False
+    else:
+        lanes = [_lane_problem(s, seed=seed, problem=None, dim=dim) for s in group]
+        data = tuple(jnp.stack(parts) for parts in zip(*lanes))
+        data_batched = True
+    lrs = [s.lr for s in group]
+    lr = lrs[0] if len(set(lrs)) == 1 else jnp.array(lrs, jnp.float32)
+    keys = jnp.stack([jax.random.PRNGKey(seed)] * len(group))
+    q = data[0].shape[-1]
+    res = engine_lib.run_grid(
+        tmpl,
+        keys,
+        jnp.zeros((q,)),
+        _grid_subset_grads,  # module-level: stable identity -> program cache hits
+        steps=steps,
+        lr=lr,
+        data=data,
+        data_batched=data_batched,
+        attack_branches=attack_branches,
+        attack_ids=attack_ids,
+        server_branches=server_branches,
+        server_ids=server_ids,
+        # the engine's aggregate estimates (1/N) grad F; eq. (7) steps on F
+        grad_scale=float(tmpl.n_devices),
+        loss_fn=_grid_loss,
+    )
+    return {s.name: res.lane(i) for i, s in enumerate(group)}
+
+
+def _grid_subset_grads(data, x):
+    z, y = data
+    return linreg_subset_grads(z, y, x)
+
+
+def _grid_loss(data, x):
+    z, y = data
+    return linreg_loss(z, y, x)
+
+
 def run_grid(
     scenarios: Iterable[Scenario],
     steps: int,
     *,
     seed: int = 0,
     problem: tuple[jax.Array, jax.Array] | None = None,
-    mode: str = "scan",
-) -> dict[str, dict[str, float]]:
-    """Sweep scenarios; returns {name: {final_loss, final_agg_dist}}."""
-    out = {}
-    for scn in scenarios:
-        res = run_scenario(scn, steps, seed=seed, problem=problem, mode=mode)
-        out[scn.name] = {
+    dim: int = 100,
+    mode: str = "grid",
+    exact: bool = True,
+) -> dict[str, TrajectoryResult]:
+    """Sweep scenarios through the engine; returns ``{name: TrajectoryResult}``
+    in input order (use ``grid_finals`` for the final-metric summary).
+
+    ``mode="grid"`` (default) is the whole-grid on-device path: scenarios are
+    grouped into compile buckets by their static structure (method, d, N,
+    compressor sizes, backend, aggregator) and each bucket executes as a
+    single vmapped+scanned program, with the attack axis dispatched per lane
+    via ``lax.switch``.  The default ``section7_grid()`` (15 cells) compiles
+    5 programs instead of 15 and makes zero per-scenario Python dispatches.
+    Every lane is **bit-identical** to running its scenario alone (tests
+    assert equality against ``mode="scan"``/``"loop"``).
+
+    ``exact=False`` additionally dispatches the *aggregator* per lane (fewest
+    possible compiles — e.g. all of ``PAPER_FIG6`` in 2 programs), at the
+    cost of weakening bit-exactness to ~1-ulp agreement: the CPU backend
+    clusters fused multiply-adds around the server switch differently than
+    in the single-scenario program.
+
+    ``mode="scan"`` / ``mode="loop"`` fall back to one ``run_scenario`` call
+    per row (the bit-exactness references).  Buckets on a kernel backend
+    (``backend != "xla"``) also take the per-scenario scan path: the Pallas
+    hot path is tuned for single-trajectory dispatch and ``pallas_call``
+    batching is not exercised by this repo yet.
+    """
+    scns = list(scenarios)
+    if mode in ("scan", "loop"):
+        return {
+            s.name: run_scenario(s, steps, seed=seed, problem=problem, dim=dim, mode=mode)
+            for s in scns
+        }
+    if mode != "grid":
+        raise ValueError(f"unknown grid mode {mode!r}")
+    buckets: dict[tuple, list[Scenario]] = {}
+    for s in scns:
+        buckets.setdefault(_bucket_signature(s, exact=exact), []).append(s)
+    out: dict[str, TrajectoryResult] = {}
+    for group in buckets.values():
+        if group[0].backend != "xla":  # kernel backends: per-scenario dispatch
+            for s in group:
+                out[s.name] = run_scenario(
+                    s, steps, seed=seed, problem=problem, dim=dim, mode="scan"
+                )
+        else:
+            out.update(_run_bucket(group, steps, seed=seed, problem=problem, dim=dim))
+    return {s.name: out[s.name] for s in scns}
+
+
+def grid_finals(results: dict[str, TrajectoryResult]) -> dict[str, dict[str, float]]:
+    """Flatten a ``run_grid`` result to ``{name: {final_loss,
+    final_agg_dist}}`` — the summary-row format of the benchmark drivers."""
+    return {
+        name: {
             "final_loss": float(res.metrics["loss"][-1]),
             "final_agg_dist": float(res.metrics["agg_dist"][-1]),
         }
-    return out
+        for name, res in results.items()
+    }

@@ -33,14 +33,24 @@ def linear_regression_problem(key, n: int = 100, dim: int = 100, sigma_h: float 
     return z, y
 
 
+# The residual is written as an elementwise product + sum reduction, NOT
+# ``z @ x``: XLA lowers a batched dot_general with a different accumulation
+# order than the unbatched matvec, so the ``@`` form breaks the engine's
+# grid==single-trajectory bit-exactness guarantee under ``jax.vmap``.  The
+# sum form lowers to the same reduction with or without a leading batch axis.
+def linreg_resid(z: jax.Array, y: jax.Array, x: jax.Array) -> jax.Array:
+    """Per-subset residuals ``<z_k, x> - y_k``: (N,)."""
+    return jnp.sum(z * x[None, :], axis=-1) - y
+
+
 def linreg_subset_grads(z: jax.Array, y: jax.Array, x: jax.Array) -> jax.Array:
     """All N subset gradients of f_k(x) = 0.5 (<x, z_k> - y_k)^2: (N, dim)."""
-    resid = z @ x - y  # (N,)
-    return resid[:, None] * z
+    return linreg_resid(z, y, x)[:, None] * z
 
 
 def linreg_loss(z: jax.Array, y: jax.Array, x: jax.Array) -> jax.Array:
-    return 0.5 * jnp.sum((z @ x - y) ** 2)
+    r = linreg_resid(z, y, x)
+    return 0.5 * jnp.sum(r * r)
 
 
 @dataclasses.dataclass(frozen=True)

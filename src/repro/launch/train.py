@@ -1,6 +1,9 @@
-"""The LAD train step (pure pjit/GSPMD) + training driver.
+"""The LAD train step + training driver — two protocol realizations.
 
-``build_train_step`` assembles the full production step:
+``build_train_step`` assembles one of two full training steps, selected by
+``TrainConfig.protocol_impl``:
+
+``"protomath"`` — the pure pjit/GSPMD production step:
 
   1. cyclic microbatch redundancy — ``d``-fold replication of the device-
      blocked batch via rolls over the (data-sharded) device axis; GSPMD
@@ -11,8 +14,22 @@
      Byzantine-corrupted and robustly aggregated (the paper's server),
   3. ZeRO optimizer update on (data x model)-sharded params/state.
 
-Everything is GSPMD-sharded from the parameter/batch shardings; there is no
-shard_map — the protocol lives in the custom_vjp rules of protomath.
+  Everything is GSPMD-sharded from the parameter/batch shardings; there is
+  no shard_map — the protocol lives in the custom_vjp rules of protomath.
+
+``"engine"`` — the protocol-engine step (``build_engine_step``): the LM
+  workload runs through core.byzantine's ``protocol_round``, i.e. *exactly*
+  the assignment -> eq.-(5) encode -> compress -> attack -> robust-aggregate
+  pipeline of the paper's linear-regression experiments, at whole-model
+  granularity.  Per-subset gradients are computed explicitly (``jax.vmap``
+  over the N device blocks of the batch), flattened to an ``(N, P)`` stack,
+  aggregated by the protocol, and unflattened into the optimizer.  This is
+  Algorithm 1/2 verbatim — including the per-round randomized cyclic task
+  matrix, which the protomath path only approximates with deterministic data
+  rolls — making the transformer LM directly comparable to the Section-VII
+  scenario grid.  It materializes an (N, d, P) gather, so it is the
+  simulation/verification path for small-to-mid models, not the
+  production-scale step.
 """
 from __future__ import annotations
 
@@ -27,6 +44,8 @@ from repro import models
 from repro.configs.base import ArchConfig, TrainConfig
 from repro.core import attacks as attack_lib
 from repro.core import compression as comp_lib
+from repro.core.byzantine import ProtocolConfig, protocol_round
+from repro.core.coding import flatten_pytree, unflatten_pytree
 from repro.core.protomath import BlockedProtocol, protocol_context
 from repro.launch.mesh import data_axes, n_data_devices
 from repro.models.module import logical_to_mesh
@@ -51,6 +70,125 @@ def make_protocol(tcfg: TrainConfig, mesh) -> BlockedProtocol:
         honest_mean=(tcfg.protocol == "none"),
         model_size=mesh.shape.get("model", 1),
     )
+
+
+def make_round_config(tcfg: TrainConfig, n_subsets: int) -> ProtocolConfig:
+    """Lower a ``TrainConfig`` to the core ``ProtocolConfig`` the engine path
+    feeds to ``protocol_round`` (the same lowering a ``Scenario`` performs for
+    the linear-regression grid)."""
+    if tcfg.protocol == "none":
+        return ProtocolConfig(
+            n_devices=n_subsets,
+            d=1,
+            method="plain",
+            aggregator="mean",
+            n_byz=0,
+            attack=attack_lib.AttackSpec(name="none"),
+        )
+    method = "plain" if tcfg.protocol == "plain" else tcfg.protocol
+    return ProtocolConfig(
+        n_devices=n_subsets,
+        d=1 if method == "plain" else tcfg.d,
+        method=method,
+        aggregator=tcfg.aggregator,
+        trim_frac=tcfg.trim_frac,
+        n_byz=tcfg.n_byz,
+        attack=attack_lib.AttackSpec(name=tcfg.attack, n_byz=tcfg.n_byz),
+        compression=comp_lib.CompressionSpec(
+            name=tcfg.compression, q_hat_frac=tcfg.q_hat_frac, levels=tcfg.quant_levels
+        ),
+    )
+
+
+def build_engine_step(cfg: ArchConfig, tcfg: TrainConfig, mesh, specs):
+    """The protocol-engine train step: LM gradients through ``protocol_round``.
+
+    Returns ``(step_fn, optimizer)`` with the same
+    ``step(params, opt_state, batch, idx)`` signature as the protomath step,
+    so ``Trainer`` drives either transparently.  Per microbatch:
+
+      1. the global batch's leading dim is blocked into ``N = n_subsets``
+         logical LAD devices (``tcfg.n_subsets`` or the mesh's data size);
+      2. ``jax.vmap`` computes every subset's full-model gradient;
+      3. gradients flatten to an ``(N, P)`` stack and one ``protocol_round``
+         runs the paper's pipeline — randomized cyclic assignment, eq.-(5)
+         encode, Com-LAD compression, Byzantine attack, robust aggregation;
+      4. the aggregated flat gradient un-flattens into the optimizer step.
+
+    With ``microbatches > 1`` the robust exchange runs once per microbatch
+    (the aggregation granularity of the protomath path) and the aggregated
+    gradients average in fp32.
+    """
+    n_sub = tcfg.n_subsets or n_data_devices(mesh)
+    pcfg = make_round_config(tcfg, n_sub)
+    opt = make_optimizer(tcfg.optimizer, momentum_dtype=tcfg.momentum_dtype)
+    schedule = linear_warmup_cosine(tcfg.lr, warmup=max(tcfg.steps // 20, 1),
+                                    total_steps=tcfg.steps)
+    base_key = jax.random.PRNGKey(tcfg.seed)
+
+    def step(params, opt_state, batch, step_idx):
+        round_key = jax.random.fold_in(base_key, step_idx)
+        _, flat_spec = flatten_pytree(params)
+        m = tcfg.microbatches
+
+        def blocked(x):  # (B, ...) -> (N, B/N, ...)
+            assert x.shape[0] % n_sub == 0, (x.shape, n_sub)
+            return x.reshape((n_sub, x.shape[0] // n_sub) + x.shape[1:])
+
+        blocks = jax.tree.map(blocked, batch)
+
+        def subset_grads(mb_blocks):
+            """(N, rows, ...) blocks -> per-subset losses/metrics/(N, P) grads."""
+
+            def one(sub_batch):
+                def loss_fn(pp):
+                    return models.loss_fn(pp, specs, cfg, sub_batch, remat=tcfg.remat)
+
+                (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+                flat, _ = flatten_pytree(
+                    jax.tree.map(lambda a: a.astype(jnp.float32), g)
+                )
+                return loss, metrics, flat
+
+            return jax.vmap(one)(mb_blocks)
+
+        def micro_round(j, mb_blocks):
+            losses, metricses, stack = subset_grads(mb_blocks)
+            g = protocol_round(pcfg, jax.random.fold_in(round_key, j), stack)
+            return jnp.mean(losses), jax.tree.map(jnp.mean, metricses), g
+
+        if m <= 1:
+            loss, metrics, g_flat = micro_round(jnp.int32(0), blocks)
+        else:
+            rows = jax.tree.leaves(blocks)[0].shape[1]
+            assert rows % m == 0, (rows, m)
+            sl = rows // m
+
+            def micro_step(acc, j):
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(x, j * sl, sl, axis=1),
+                    blocks,
+                )
+                l, met, g = micro_round(j, mb)
+                return acc + g, (l, met)
+
+            p_total = sum(l.size for l in jax.tree.leaves(params))
+            g_sum, (losses, metricses) = jax.lax.scan(
+                micro_step,
+                jnp.zeros((p_total,), jnp.float32),
+                jnp.arange(m, dtype=jnp.int32),
+            )
+            g_flat = g_sum / m
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metricses)
+
+        grads = unflatten_pytree(g_flat, flat_spec)
+        lr = schedule(step_idx)
+        new_params, new_opt = opt.update(params, grads, opt_state, lr,
+                                         weight_decay=tcfg.weight_decay)
+        return new_params, new_opt, loss, metrics
+
+    return step, opt
 
 
 def param_mesh_rules(mesh) -> dict:
@@ -97,7 +235,16 @@ def redundant_batch(batch: Any, d: int, n_devices: int) -> Any:
 
 
 def build_train_step(cfg: ArchConfig, tcfg: TrainConfig, mesh, specs):
-    """Returns (step_fn, optimizer).  step(params, opt_state, batch, idx)."""
+    """Returns (step_fn, optimizer).  step(params, opt_state, batch, idx).
+
+    ``tcfg.protocol_impl`` selects the realization: ``"protomath"`` (default,
+    the GSPMD per-parameter exchange below) or ``"engine"`` (whole-model
+    ``protocol_round`` — see ``build_engine_step``).
+    """
+    if tcfg.protocol_impl == "engine":
+        return build_engine_step(cfg, tcfg, mesh, specs)
+    if tcfg.protocol_impl != "protomath":
+        raise ValueError(f"unknown protocol_impl {tcfg.protocol_impl!r}")
     n_dev = n_data_devices(mesh)
     protocol = make_protocol(tcfg, mesh)
     opt = make_optimizer(tcfg.optimizer, momentum_dtype=tcfg.momentum_dtype)

@@ -1,0 +1,25 @@
+"""Docs stay executable: run every README/docs ```python snippet (tier-1).
+
+Uses scripts/check_docs.py — the same extractor the standalone CI entry
+runs — so a drifting snippet fails here with its file and block index.
+"""
+import pathlib
+import sys
+
+import pytest
+
+SCRIPTS = pathlib.Path(__file__).resolve().parent.parent / "scripts"
+sys.path.insert(0, str(SCRIPTS))
+
+import check_docs  # noqa: E402
+
+
+@pytest.mark.parametrize("relpath", check_docs.DOC_FILES)
+def test_doc_snippets_execute(relpath):
+    n = check_docs.run_file(relpath)
+    assert n > 0, f"{relpath}: no python snippets found (fence drift?)"
+
+
+def test_all_doc_files_exist():
+    for rel in check_docs.DOC_FILES:
+        assert (check_docs.REPO_ROOT / rel).is_file(), rel
