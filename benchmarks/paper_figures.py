@@ -139,26 +139,27 @@ def section7_sweep(steps: int = 200):
     return [("grid", name, m["final_loss"]) for name, m in finals.items()]
 
 
-def grid_timing(steps: int = 300):
-    """End-to-end wall-clock of the whole-grid on-device engine vs the PR-1
-    per-scenario dispatch loop, on the full ``section7_grid()``.
+def _timed_grid_rows(grid, steps, prefix):
+    """cold/warm grid-vs-per-scenario wall clock + bitwise-equality check.
 
-    Two regimes per mode: *cold* (first sweep in the process — compile +
-    run + readback) and *warm* (the sweep repeated — the figure-driver /
-    notebook / parameter-study regime).  The vmapped engine caches its
-    compiled programs across calls, so a warm whole-grid sweep makes zero
-    compilations and zero per-scenario Python dispatches; the per-scenario
-    loop re-dispatches and re-traces every scenario each sweep.
-
-    Rows: (mode_regime, n_scenarios, seconds) + the cold/warm speedups.
+    Three regimes: the vmapped whole-grid path, today's per-scenario scan
+    (which since PR 3 hits the cached trajectory programs on warm calls),
+    and ``per_scenario_uncached`` — the program caches cleared before every
+    sweep, reproducing the pre-cache fallback that re-traced and re-compiled
+    every scenario each call (the path kernel backends used to be forced
+    onto).
     """
     import time
 
     import numpy as np
 
-    grid = scenarios.section7_grid()
+    from repro.core import engine
 
-    def timed(mode):
+    def timed(mode, clear_caches=False):
+        if clear_caches:
+            engine._trajectory_program.cache_clear()
+            engine._step_program.cache_clear()
+            engine._finalize_program.cache_clear()
         t0 = time.perf_counter()
         results = scenarios.run_grid(grid, steps, mode=mode)
         jax.block_until_ready([r.x for r in results.values()])
@@ -168,19 +169,58 @@ def grid_timing(steps: int = 300):
     t_grid_warm, _ = timed("grid")
     t_loop_cold, res_loop = timed("scan")
     t_loop_warm, _ = timed("scan")
+    t_uncached, _ = timed("scan", clear_caches=True)
     # the two paths must agree bitwise — the timing compares equal work
     for name in res_loop:
         assert np.array_equal(
             np.asarray(res_grid[name].x), np.asarray(res_loop[name].x)
-        ), f"grid != per-scenario for {name}"
+        ), f"{prefix}: grid != per-scenario for {name}"
     return [
-        ("grid_vmapped_cold", len(grid), t_grid_cold),
-        ("grid_vmapped_warm", len(grid), t_grid_warm),
-        ("per_scenario_cold", len(grid), t_loop_cold),
-        ("per_scenario_warm", len(grid), t_loop_warm),
-        ("speedup_cold", len(grid), t_loop_cold / t_grid_cold),
-        ("speedup_warm", len(grid), t_loop_warm / t_grid_warm),
+        (f"{prefix}grid_vmapped_cold", len(grid), t_grid_cold),
+        (f"{prefix}grid_vmapped_warm", len(grid), t_grid_warm),
+        (f"{prefix}per_scenario_cold", len(grid), t_loop_cold),
+        (f"{prefix}per_scenario_warm", len(grid), t_loop_warm),
+        (f"{prefix}per_scenario_uncached", len(grid), t_uncached),
+        (f"{prefix}speedup_cold", len(grid), t_loop_cold / t_grid_cold),
+        (f"{prefix}speedup_warm", len(grid), t_loop_warm / t_grid_warm),
+        (f"{prefix}speedup_warm_vs_uncached", len(grid), t_uncached / t_grid_warm),
     ]
+
+
+def grid_timing(steps: int = 300, kernel_steps: int = 60):
+    """End-to-end wall-clock of the whole-grid on-device engine vs the PR-1
+    per-scenario dispatch loop, on the full ``section7_grid()`` — for the
+    XLA backend AND the Pallas kernel backend (``backend="interpret"``;
+    rows prefixed ``kernel_``), which since PR 3 rides the same lru-cached
+    one-program-per-bucket path via the lane-batched kernels.
+
+    Two regimes per mode: *cold* (first sweep in the process — compile +
+    run + readback) and *warm* (the sweep repeated — the figure-driver /
+    notebook / parameter-study regime).  The vmapped engine caches its
+    compiled programs across calls, so a warm whole-grid sweep makes zero
+    compilations and zero per-scenario Python dispatches; the per-scenario
+    loop re-dispatches every scenario each sweep.  Both sections assert the
+    two paths agree BITWISE before comparing times.
+
+    Rows: (mode_regime, n_scenarios, seconds) + the cold/warm speedups.
+    The kernel section runs fewer steps and N=32 devices: interpret mode is
+    CPU-slow, and N=32 is inside the verified bitwise envelope of the
+    interpret backend (residual LLVM fma discretion makes a few *other*
+    device counts disagree by 1 ulp between program shapes — see
+    repro/numerics.py); the relative grid-vs-dispatch shape is what matters.
+    """
+    import dataclasses
+
+    rows = _timed_grid_rows(scenarios.section7_grid(), steps, "")
+    kernel_grid = [
+        dataclasses.replace(s, n_devices=32, n_byz=6, backend="interpret")
+        for s in scenarios.section7_grid(
+            methods=(("plain", 1), ("lad", 10)), attacks=("sign_flip", "alie", "ipm"),
+            compressors=("none", "rand_sparse"),
+        )
+    ]
+    rows += _timed_grid_rows(kernel_grid, kernel_steps, "kernel_")
+    return rows
 
 
 FIGURES = {

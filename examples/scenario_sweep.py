@@ -12,7 +12,9 @@ per-scenario Python dispatch:
 
 ``--backend interpret`` routes the server/device hot path through the Pallas
 kernels (interpret mode on CPU; ``pallas`` compiles them on TPU) — kernel
-backends fall back to per-scenario scan dispatch inside ``run_grid``.
+backends ride the same vmapped one-program-per-bucket grid path as XLA: the
+lane-batched kernels map the scenario axis onto their 2-D ``(lane, q_tile)``
+grid (see ``kernels/ops.py``), bitwise-equal per lane to the standalone run.
 ``--per-scenario`` forces the PR-1 dispatch loop (the bit-exactness
 reference; useful for timing the vmapped path against it).
 """

@@ -1,0 +1,104 @@
+"""Tiny-shape smoke run of the benchmark drivers + BENCH_kernels.json schema
+validation.
+
+Benchmark code rots silently: it only runs when someone benchmarks.  This
+script executes the kernel microbenches and a miniature grid-timing sweep at
+toy shapes (seconds, not minutes) and validates the machine-readable
+``BENCH_kernels.json`` the real driver emits, so a drifting bench driver or
+schema fails tier-1 (tests/test_bench_smoke.py) instead of the next perf
+investigation.
+
+Standalone:
+
+    PYTHONPATH=src:. python scripts/bench_smoke.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import tempfile
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (REPO_ROOT, os.path.join(REPO_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+
+def validate_kernel_json(payload: dict) -> None:
+    """Assert the BENCH_kernels.json schema (see kernel_bench.SCHEMA_VERSION)."""
+    from benchmarks.kernel_bench import SCHEMA_VERSION
+
+    assert isinstance(payload, dict), type(payload)
+    assert payload.get("schema_version") == SCHEMA_VERSION, payload.get("schema_version")
+    rows = payload.get("rows")
+    assert isinstance(rows, list) and rows, "rows must be a non-empty list"
+    names = set()
+    for row in rows:
+        assert set(row) == {"name", "us_per_call", "derived"}, sorted(row)
+        assert isinstance(row["name"], str) and row["name"], row
+        assert isinstance(row["us_per_call"], float) and row["us_per_call"] > 0, row
+        assert isinstance(row["derived"], float), row
+        names.add(row["name"])
+    assert len(names) == len(rows), "duplicate row names"
+
+
+def smoke_kernel_bench() -> dict:
+    """Run every kernel-bench family at tiny shapes and round-trip the JSON."""
+    from benchmarks.kernel_bench import (
+        aggregator_bench,
+        compression_bench,
+        kernel_vs_ref_bench,
+        lane_batched_bench,
+        write_kernel_json,
+    )
+
+    rows = []
+    rows += aggregator_bench(n=8, q=512, iters=1, names=("mean", "cwtm", "tgn"))
+    rows += compression_bench(q=2048, iters=1)
+    rows += kernel_vs_ref_bench(n=8, q=512, iters=1)
+    rows += lane_batched_bench(lanes=3, n=6, d=3, q=256, iters=1)
+    lane_names = {r[0] for r in rows}
+    for op in ("cwtm", "coded_combine", "quantize", "pairwise_sqdist"):
+        assert f"{op}_lanes_batched" in lane_names, f"missing lane row for {op}"
+        assert f"{op}_per_lane_loop" in lane_names, f"missing loop row for {op}"
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "BENCH_kernels.json")
+        write_kernel_json(rows, path)
+        with open(path) as f:
+            payload = json.load(f)
+    validate_kernel_json(payload)
+    return payload
+
+
+def smoke_grid_timing() -> list:
+    """Miniature whole-grid-vs-per-scenario timing (with its bitwise check),
+    on both the XLA and the kernel backend."""
+    from benchmarks.paper_figures import _timed_grid_rows
+    from repro.core import scenarios
+
+    tiny = [
+        dataclasses.replace(s, n_devices=8, n_byz=2)
+        for s in scenarios.section7_grid(
+            methods=(("lad", 4),), attacks=("sign_flip",),
+            compressors=("none",), lr=1e-5,
+        )
+    ]
+    rows = _timed_grid_rows(tiny, steps=3, prefix="smoke_")
+    kernel_tiny = [dataclasses.replace(s, backend="interpret") for s in tiny]
+    rows += _timed_grid_rows(kernel_tiny, steps=3, prefix="smoke_kernel_")
+    assert len(rows) == 16
+    return rows
+
+
+def main() -> int:
+    payload = smoke_kernel_bench()
+    print(f"kernel bench smoke: {len(payload['rows'])} rows, schema OK")
+    rows = smoke_grid_timing()
+    print(f"grid timing smoke: {len(rows)} rows, bitwise check OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

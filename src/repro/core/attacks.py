@@ -19,6 +19,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.numerics import tree_sum
+
 Attack = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
 # signature: (key, honest_msgs (N,Q), byz_mask (N,)) -> transmitted (N,Q)
 
@@ -54,23 +56,30 @@ def zero_attack(key, msgs, mask):
 def alie(key, msgs, mask, z: float = 1.5):
     """A-Little-Is-Enough: byzantine devices send mean - z * std of the honest
     set, staying just inside the plausible spread so distance-based rules
-    accept them."""
+    accept them.
+
+    The honest mean/variance use the fixed-tree sums of ``repro/numerics``:
+    the attack runs inside the engine's compiled trajectory, where an XLA
+    ``reduce`` may accumulate in a different order per program shape and
+    break the cross-mode bitwise guarantee.
+    """
     del key
     honest_w = (1.0 - mask)[:, None]
-    h = jnp.maximum(jnp.sum(1.0 - mask), 1.0)
-    mu = jnp.sum(msgs * honest_w, axis=0) / h
-    var = jnp.sum(((msgs - mu[None]) ** 2) * honest_w, axis=0) / h
+    h = jnp.maximum(tree_sum(1.0 - mask, axis=0), 1.0)
+    mu = tree_sum(msgs * honest_w, axis=0) / h
+    var = tree_sum(((msgs - mu[None]) ** 2) * honest_w, axis=0) / h
     adv = mu - z * jnp.sqrt(var + 1e-12)
     return jnp.where(mask[:, None] > 0, adv[None, :], msgs)
 
 
 def ipm(key, msgs, mask, eps: float = 0.5):
     """Inner-product manipulation: send -eps * honest mean, dragging the
-    aggregate's inner product with the true gradient negative."""
+    aggregate's inner product with the true gradient negative.  Fixed-tree
+    mean for the same reason as ``alie``."""
     del key
     honest_w = (1.0 - mask)[:, None]
-    h = jnp.maximum(jnp.sum(1.0 - mask), 1.0)
-    mu = jnp.sum(msgs * honest_w, axis=0) / h
+    h = jnp.maximum(tree_sum(1.0 - mask, axis=0), 1.0)
+    mu = tree_sum(msgs * honest_w, axis=0) / h
     adv = -eps * mu
     return jnp.where(mask[:, None] > 0, adv[None, :], msgs)
 

@@ -112,9 +112,9 @@ def _encode(cfg: ProtocolConfig, stacked: jax.Array) -> jax.Array:
         return jnp.mean(stacked, axis=1)
     d = stacked.shape[1]
     w = jnp.full((d,), 1.0 / d, jnp.float32)
-    return jax.vmap(
-        lambda g: kernel_ops.coded_combine(g, w, backend=cfg.backend)
-    )(stacked)
+    # one lane-batched kernel launch over the device axis (and, under the
+    # grid engine's vmap, over scenario x device folded into one lane axis)
+    return kernel_ops.coded_combine(stacked, w, backend=cfg.backend)
 
 
 def _device_coded_gradients(cfg: ProtocolConfig, key: jax.Array, subset_grads: jax.Array):
@@ -216,16 +216,13 @@ def protocol_round(
     if spec.name not in ("none", "identity"):
         if spec.name == "quant" and cfg.backend != "xla":
             # kernel hot path: the rounding randomness u is drawn per device
-            # from its round key and fed to the fused quantize kernel
+            # from its round key and fed to the fused quantize kernel — one
+            # lane-batched launch over the device axis
             dev_keys = jax.random.split(k_comp, n)
-
-            def quant_one(k, g):
-                u = jax.random.uniform(k, g.shape)
-                return kernel_ops.stochastic_quantize(
-                    g, u, spec.levels, spec.chunk, backend=cfg.backend
-                )
-
-            coded = jax.vmap(quant_one)(dev_keys, coded)
+            u = jax.vmap(lambda k: jax.random.uniform(k, (q,)))(dev_keys)
+            coded = kernel_ops.stochastic_quantize(
+                coded, u, spec.levels, spec.chunk, backend=cfg.backend
+            )
         else:
             compressor = spec.make(q)
             if spec.name == "rand_sparse_shared":

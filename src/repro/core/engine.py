@@ -42,6 +42,7 @@ from repro.core.byzantine import (
     make_server_fn,
     protocol_round,
 )
+from repro.numerics import stable_mean0, stable_norm
 from repro.optim import make_optimizer
 
 __all__ = ["TrajectoryResult", "run_trajectory", "run_grid", "protocol_rounds"]
@@ -100,14 +101,28 @@ def _round_body(
     key: jax.Array,
     opt,
     subset_grad_fn: Callable[[Any], jax.Array],
-    loss_fn: Callable[[Any], jax.Array] | None,
-    x_star: jax.Array | None,
     lr: float | Callable[[jax.Array], jax.Array],
     grad_scale: float,
     attack_fn=None,
     server_fn=None,
+    with_metrics: bool = True,
 ):
-    """The single round used by every engine mode (shared => bit-identical)."""
+    """The single round used by every engine mode (shared => bit-identical).
+
+    The body emits RAW per-round vectors (aggregate, honest mean, iterate)
+    rather than scalar metrics: scalar reductions computed inside the round
+    would share fusions with the protocol subgraph, and XLA freely
+    duplicates producers into consumer fusions where a copy may compile with
+    different reduce/fma choices per program shape — a 1-ulp drift that
+    breaks the scan == loop == grid-lane bitwise guarantee once a
+    Pallas-interpret subgraph is in the module.  Scan outputs, by contrast,
+    are materialized buffers XLA never recomputes, so the metric math runs
+    AFTER the scan on bit-stable inputs (``_finalize_metrics``).
+
+    The raw stacks cost ``3 x steps x Q`` floats of scan output;
+    ``with_metrics=False`` emits nothing (final-iterate-only runs at large
+    ``Q`` — see ``run_trajectory``).
+    """
 
     def body(carry, t):
         x, opt_state = carry
@@ -116,32 +131,54 @@ def _round_body(
         g = protocol_round(cfg, k, grads, attack_fn=attack_fn, server_fn=server_fn)
         lr_t = lr(t) if callable(lr) else lr
         new_x, new_state = opt.update(x, grad_scale * g, opt_state, lr_t)
-        metrics = {
-            "agg_dist": jnp.linalg.norm(g - jnp.mean(grads, axis=0)),
-            "grad_norm": jnp.linalg.norm(g),
-        }
-        if loss_fn is not None:
-            metrics["loss"] = loss_fn(new_x)
-        if x_star is not None:
-            metrics["sol_err"] = jnp.linalg.norm(new_x - x_star)
-        return (new_x, new_state), metrics
+        raw = (
+            {"g": g, "gmean": stable_mean0(grads), "x": new_x}
+            if with_metrics
+            else {}
+        )
+        return (new_x, new_state), raw
 
     return body
+
+
+def _finalize_metrics(
+    raw: dict[str, jax.Array],
+    loss_fn: Callable[[Any], jax.Array] | None,
+    x_star: jax.Array | None,
+) -> dict[str, jax.Array]:
+    """Per-round metrics from the stacked ``(steps, ...)`` raw trajectory.
+
+    Runs on materialized scan outputs in Pallas-free fusions, with the
+    reductions in the fixed-tree forms of ``repro/numerics.py`` — both
+    conditions the cross-program bitwise guarantee needs (see
+    ``_round_body``).
+    """
+    metrics = {
+        "agg_dist": stable_norm(raw["g"] - raw["gmean"]),
+        "grad_norm": stable_norm(raw["g"]),
+    }
+    if loss_fn is not None:
+        metrics["loss"] = jax.vmap(loss_fn)(raw["x"])
+    if x_star is not None:
+        metrics["sol_err"] = stable_norm(raw["x"] - x_star)
+    return metrics
 
 
 def run_trajectory(
     cfg: ProtocolConfig,
     key: jax.Array,
     x0: jax.Array,
-    subset_grad_fn: Callable[[Any], jax.Array],
+    subset_grad_fn: Callable[..., jax.Array],
     *,
     steps: int,
     lr: float | Callable[[jax.Array], jax.Array],
     optimizer: str = "sgd",
     grad_scale: float = 1.0,
-    loss_fn: Callable[[Any], jax.Array] | None = None,
+    loss_fn: Callable[..., jax.Array] | None = None,
     x_star: jax.Array | None = None,
     mode: str = "scan",
+    data: Any = None,
+    with_metrics: bool = True,
 ) -> TrajectoryResult:
     """Run ``steps`` full protocol rounds from ``x0``.
 
@@ -158,24 +195,44 @@ def run_trajectory(
     wrappers zero-pad non-divisible ``Q`` up to the tile boundary and slice
     back (exact on the real coordinates — see ``kernels/ops.py``).
 
+    Compiled programs are cached across calls (both modes), keyed on the
+    static structure: ``cfg``, ``steps``, the *identities* of
+    ``subset_grad_fn`` / ``loss_fn`` / a callable ``lr``, ``optimizer`` and
+    the data/x_star presence flags.  ``key``, ``x0``, numeric ``lr``,
+    ``grad_scale``, ``data`` and ``x_star`` are runtime operands, so a warm
+    repeated call — the figure-driver / sweep regime — makes ZERO retraces
+    and zero compiles.  To benefit, pass module-level functions and thread
+    problem arrays through ``data`` instead of closing over them: a fresh
+    closure per call misses the cache every time and pins its captured
+    arrays in it.
+
     Args:
       cfg: protocol configuration (method/attack/aggregator/compression).
       key: trajectory PRNG key; round ``t`` uses ``fold_in(key, t)``.
       x0: initial iterate.
-      subset_grad_fn: ``x -> (N, Q)`` per-subset gradients at ``x``.
+      subset_grad_fn: ``x -> (N, Q)`` per-subset gradients at ``x`` — or,
+        when ``data`` is given, ``(data, x) -> (N, Q)``.
       steps: number of rounds (static; the scan length).
       lr: step size, a float or a ``t -> lr`` schedule.
       optimizer: any ``repro.optim.make_optimizer`` name.
       grad_scale: multiplies the aggregate before the optimizer step (the
         paper's eq.-(7) sum-loss F needs ``N x`` the mean-gradient estimate).
-      loss_fn / x_star: optional per-round metric hooks.
+      loss_fn / x_star: optional per-round metric hooks (``loss_fn`` takes
+        ``(data, x)`` when ``data`` is given, else ``x``).
       mode: ``"scan"`` (one compiled trajectory) or ``"loop"`` (per-round
         jitted dispatch; the bit-exactness reference).
+      data: optional pytree of problem arrays, passed to ``subset_grad_fn``
+        and ``loss_fn`` as a runtime operand (program-cache friendly).
+      with_metrics: ``False`` skips the per-round raw stacks entirely (the
+        metric pipeline materializes ``3 x steps x Q`` floats of scan
+        output — prohibitive for final-iterate-only runs at LM-scale ``Q``);
+        the result's ``metrics`` is empty and ``loss_fn``/``x_star`` must be
+        ``None``.
     """
     if mode not in ("scan", "loop"):
         raise ValueError(f"unknown engine mode {mode!r}")
-    opt = make_optimizer(optimizer)
-    opt_state0 = opt.init(x0)
+    if not with_metrics and (loss_fn is not None or x_star is not None):
+        raise ValueError("with_metrics=False is incompatible with loss_fn/x_star")
 
     # lr and grad_scale enter the compiled programs as *runtime operands*,
     # never baked constants: as constants XLA may fold them through the
@@ -183,40 +240,142 @@ def run_trajectory(
     # but not another (single vs vmapped grid) — a 1-ulp drift that would
     # break the engine's bit-exactness guarantee between modes.  Non-constant
     # float multiplies are never reassociated, so traced scalars pin the
-    # evaluation order everywhere.
+    # evaluation order everywhere.  The PRNG key, problem data and x_star are
+    # operands for the same reason — plus they must not bake into the cached
+    # program (the cache would otherwise never hit across seeds/problems).
     gs = jnp.float32(grad_scale)
     lr_arg = 0.0 if callable(lr) else jnp.float32(lr)
-
-    def make_body(lr_op, gs_op):
-        return _round_body(
-            cfg, key, opt, subset_grad_fn, loss_fn, x_star,
-            lr if callable(lr) else lr_op, gs_op,
-        )
+    static = (
+        cfg,
+        subset_grad_fn,
+        loss_fn,
+        lr if callable(lr) else None,
+        optimizer,
+        data is not None,
+        x_star is not None,
+        with_metrics,
+    )
 
     if mode == "scan":
-
-        @jax.jit
-        def trajectory(x0, opt_state0, lr_op, gs_op):
-            return jax.lax.scan(
-                make_body(lr_op, gs_op),
-                (x0, opt_state0),
-                jnp.arange(steps, dtype=jnp.int32),
-            )
-
-        (x, _), metrics = trajectory(x0, opt_state0, lr_arg, gs)
+        program = _trajectory_program(steps, *static)
+        x, metrics = program(key, x0, lr_arg, gs, data, x_star)
         return TrajectoryResult(x=x, metrics=metrics)
 
-    @jax.jit
-    def step_fn(carry, t, lr_op, gs_op):
-        return make_body(lr_op, gs_op)(carry, t)
-
-    carry = (x0, opt_state0)
+    step_fn = _step_program(
+        cfg, subset_grad_fn, lr if callable(lr) else None, optimizer,
+        data is not None, with_metrics,
+    )
+    carry = (x0, make_optimizer(optimizer).init(x0))
     per_round = []
     for t in range(steps):
-        carry, m = step_fn(carry, jnp.asarray(t, jnp.int32), lr_arg, gs)
-        per_round.append(m)
-    metrics = jax.tree.map(lambda *ms: jnp.stack(ms), *per_round)
-    return TrajectoryResult(x=carry[0], metrics=metrics)
+        carry, r = step_fn(key, carry, jnp.asarray(t, jnp.int32), lr_arg, gs, data)
+        per_round.append(r)
+    if not with_metrics:
+        return TrajectoryResult(x=carry[0], metrics={})
+    raw = jax.tree.map(lambda *rs: jnp.stack(rs), *per_round)
+    finalize = _finalize_program(loss_fn, data is not None, x_star is not None)
+    return TrajectoryResult(x=carry[0], metrics=finalize(raw, data, x_star))
+
+
+def _trajectory_body(cfg, opt, subset_grad_fn, lr_schedule, takes_data, with_metrics):
+    """Round-body factory shared by the cached scan and loop programs: binds
+    the per-call operands (key, lr, grad_scale, data) into the static
+    structure the program was cached on."""
+
+    def bind(key, lr_op, gs_op, data_op):
+        sgf = (
+            (lambda x: subset_grad_fn(data_op, x)) if takes_data else subset_grad_fn
+        )
+        return _round_body(
+            cfg,
+            key,
+            opt,
+            sgf,
+            lr_schedule if lr_schedule is not None else lr_op,
+            gs_op,
+            with_metrics=with_metrics,
+        )
+
+    return bind
+
+
+def _bind_loss(loss_fn, takes_data, data_op):
+    if loss_fn is None:
+        return None
+    return (lambda x: loss_fn(data_op, x)) if takes_data else loss_fn
+
+
+@functools.lru_cache(maxsize=64)
+def _trajectory_program(
+    steps, cfg, subset_grad_fn, loss_fn, lr_schedule, optimizer, takes_data,
+    has_x_star, with_metrics,
+):
+    """Build (and cache) the jitted whole-trajectory scan program.
+
+    Cache key = static structure only (see ``run_trajectory``); everything
+    numeric is an operand, so repeated warm calls reuse both this Python-level
+    program object and jit's compiled executable: zero retraces.  The cache
+    is deliberately small (64): a caller passing fresh closures per call gets
+    no hits, and each retained entry pins its captured arrays + executable —
+    pass module-level functions with ``data`` operands instead.
+    """
+    opt = make_optimizer(optimizer)
+    bind = _trajectory_body(cfg, opt, subset_grad_fn, lr_schedule, takes_data,
+                            with_metrics)
+
+    @jax.jit
+    def trajectory(key, x0, lr_op, gs_op, data_op, x_star_op):
+        (x, _), raw = jax.lax.scan(
+            bind(key, lr_op, gs_op, data_op),
+            (x0, opt.init(x0)),
+            jnp.arange(steps, dtype=jnp.int32),
+        )
+        if not with_metrics:
+            return x, {}
+        metrics = _finalize_metrics(
+            raw,
+            _bind_loss(loss_fn, takes_data, data_op),
+            x_star_op if has_x_star else None,
+        )
+        return x, metrics
+
+    return trajectory
+
+
+@functools.lru_cache(maxsize=64)
+def _step_program(cfg, subset_grad_fn, lr_schedule, optimizer, takes_data,
+                  with_metrics):
+    """The cached jitted single-round step of ``mode="loop"`` — same cache
+    contract as ``_trajectory_program`` (minus ``steps``/metric hooks: the
+    loop length lives in Python and metrics finalize post-loop, so one
+    cached step serves every horizon)."""
+    opt = make_optimizer(optimizer)
+    bind = _trajectory_body(cfg, opt, subset_grad_fn, lr_schedule, takes_data,
+                            with_metrics)
+
+    @jax.jit
+    def step(key, carry, t, lr_op, gs_op, data_op):
+        return bind(key, lr_op, gs_op, data_op)(carry, t)
+
+    return step
+
+
+@functools.lru_cache(maxsize=64)
+def _finalize_program(loss_fn, takes_data, has_x_star):
+    """Cached jitted post-loop metric finalizer of ``mode="loop"``.  The scan
+    mode fuses the identical ``_finalize_metrics`` into its trajectory
+    program; both consume the same materialized raw stacks, which keeps the
+    modes bitwise-equal."""
+
+    @jax.jit
+    def finalize(raw, data_op, x_star_op):
+        return _finalize_metrics(
+            raw,
+            _bind_loss(loss_fn, takes_data, data_op),
+            x_star_op if has_x_star else None,
+        )
+
+    return finalize
 
 
 def _branch_select(branches, ids):
@@ -402,15 +561,18 @@ def _grid_program(
             key,
             opt,
             lambda x: subset_grad_fn(data_lane, x),
-            None if loss_fn is None else (lambda x: loss_fn(data_lane, x)),
-            x_star_op if has_x_star else None,
             lr_schedule if lr_schedule is not None else lr_lane,
             gs_op,
             attack_fn=attack_fn,
             server_fn=server_fn,
         )
-        (x, _), metrics = jax.lax.scan(
+        (x, _), raw = jax.lax.scan(
             body, (x0_lane, opt.init(x0_lane)), jnp.arange(steps, dtype=jnp.int32)
+        )
+        metrics = _finalize_metrics(
+            raw,
+            None if loss_fn is None else (lambda x_t: loss_fn(data_lane, x_t)),
+            x_star_op if has_x_star else None,
         )
         return x, metrics
 

@@ -223,14 +223,15 @@ def run_scenario(
         scn.protocol(),
         jax.random.PRNGKey(seed),
         jnp.zeros((z.shape[1],)),
-        lambda x: linreg_subset_grads(z, y, x),
+        _grid_subset_grads,  # module-level + data operand: stable program-cache key
         steps=steps,
         lr=scn.lr,
         # the engine's aggregate estimates (1/N) grad F; eq. (7) steps on F
         grad_scale=float(scn.n_devices),
-        loss_fn=lambda x: linreg_loss(z, y, x),
+        loss_fn=_grid_loss,
         x_star=x_star,
         mode=mode,
+        data=(z, y),
     )
 
 
@@ -377,11 +378,16 @@ def run_grid(
     clusters fused multiply-adds around the server switch differently than
     in the single-scenario program.
 
+    Kernel backends (``backend="interpret"``/``"pallas"``) ride the exact
+    same path: the ops wrappers batch every Pallas kernel over scenario
+    lanes (``jax.custom_vmap`` maps the engine's lane vmap onto the kernels'
+    2-D ``(lane, q_tile)`` grid — see ``kernels/ops.py``), so a kernel
+    bucket compiles to the same lru-cached one-program-per-bucket form as an
+    XLA bucket: zero per-scenario dispatches on a warm sweep, every lane
+    bitwise equal to its standalone trajectory.
+
     ``mode="scan"`` / ``mode="loop"`` fall back to one ``run_scenario`` call
-    per row (the bit-exactness references).  Buckets on a kernel backend
-    (``backend != "xla"``) also take the per-scenario scan path: the Pallas
-    hot path is tuned for single-trajectory dispatch and ``pallas_call``
-    batching is not exercised by this repo yet.
+    per row (the bit-exactness references).
     """
     scns = list(scenarios)
     if mode in ("scan", "loop"):
@@ -396,13 +402,7 @@ def run_grid(
         buckets.setdefault(_bucket_signature(s, exact=exact), []).append(s)
     out: dict[str, TrajectoryResult] = {}
     for group in buckets.values():
-        if group[0].backend != "xla":  # kernel backends: per-scenario dispatch
-            for s in group:
-                out[s.name] = run_scenario(
-                    s, steps, seed=seed, problem=problem, dim=dim, mode="scan"
-                )
-        else:
-            out.update(_run_bucket(group, steps, seed=seed, problem=problem, dim=dim))
+        out.update(_run_bucket(group, steps, seed=seed, problem=problem, dim=dim))
     return {s.name: out[s.name] for s in scns}
 
 

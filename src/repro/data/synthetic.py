@@ -21,6 +21,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.numerics import tree_sum
+
 
 def linear_regression_problem(key, n: int = 100, dim: int = 100, sigma_h: float = 0.3):
     """Returns (Z (N, dim), y (N,)) — one sample per subset, per Section VII."""
@@ -33,14 +35,16 @@ def linear_regression_problem(key, n: int = 100, dim: int = 100, sigma_h: float 
     return z, y
 
 
-# The residual is written as an elementwise product + sum reduction, NOT
-# ``z @ x``: XLA lowers a batched dot_general with a different accumulation
-# order than the unbatched matvec, so the ``@`` form breaks the engine's
-# grid==single-trajectory bit-exactness guarantee under ``jax.vmap``.  The
-# sum form lowers to the same reduction with or without a leading batch axis.
+# The residual is an elementwise product + FIXED-TREE sum, not ``z @ x`` and
+# not ``jnp.sum``: a batched dot_general accumulates in a different order
+# than the unbatched matvec, and even a plain reduce op may change its
+# accumulation order between program shapes once a Pallas-interpret subgraph
+# shares the module (see repro/numerics.py).  The tree form is an elementwise
+# add DAG — bitwise-identical in every program, which is what keeps the
+# engine's grid == single-trajectory guarantee exact on every backend.
 def linreg_resid(z: jax.Array, y: jax.Array, x: jax.Array) -> jax.Array:
     """Per-subset residuals ``<z_k, x> - y_k``: (N,)."""
-    return jnp.sum(z * x[None, :], axis=-1) - y
+    return tree_sum(z * x[None, :], axis=-1) - y
 
 
 def linreg_subset_grads(z: jax.Array, y: jax.Array, x: jax.Array) -> jax.Array:
@@ -49,8 +53,11 @@ def linreg_subset_grads(z: jax.Array, y: jax.Array, x: jax.Array) -> jax.Array:
 
 
 def linreg_loss(z: jax.Array, y: jax.Array, x: jax.Array) -> jax.Array:
+    # fixed-tree sum, not jnp.sum: the loss is a per-round engine metric and
+    # a scalar reduce may accumulate in a different order per program shape
+    # (see repro/numerics.py) — the tree form is bitwise-stable everywhere
     r = linreg_resid(z, y, x)
-    return 0.5 * jnp.sum(r * r)
+    return 0.5 * tree_sum(r * r)
 
 
 @dataclasses.dataclass(frozen=True)

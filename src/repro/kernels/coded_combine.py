@@ -3,8 +3,13 @@
 The device-side encoder reduces its ``d`` stacked subset gradients with
 weights ``1/d`` (kept general: arbitrary weights support fractional-repetition
 codes too).  Fusing the weighted reduce avoids writing the stacked gradients
-back to HBM between accumulation steps: one ``(d, q_block)`` tile per program,
-fp32 accumulation on the VPU.
+back to HBM between accumulation steps.
+
+The canonical entry point is **lane-batched**: ``(L, d, Q)`` stacks (a lane
+is one device of one scenario — the grid engine folds scenario x device into
+one lane axis) over a 2-D ``(lane, q_tile)`` grid, one ``(d, q_block)`` tile
+per program, fp32 accumulation on the VPU.  The unbatched ``(d, Q)`` entry is
+the ``L=1`` special case, bitwise equal per lane.
 """
 from __future__ import annotations
 
@@ -16,27 +21,37 @@ from jax.experimental import pallas as pl
 
 
 def _combine_kernel(grads_ref, w_ref, out_ref):
-    g = grads_ref[...].astype(jnp.float32)  # (d, q_block)
-    w = w_ref[...].astype(jnp.float32)  # (d,)
-    out_ref[...] = jnp.einsum("dq,d->q", g, w).astype(out_ref.dtype)
+    g = grads_ref[0].astype(jnp.float32)  # (d, q_block)
+    w = w_ref[0].astype(jnp.float32)  # (d,)
+    out_ref[0] = jnp.einsum("dq,d->q", g, w).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("q_block", "interpret"))
-def coded_combine_pallas(
+def coded_combine_pallas_lanes(
     grads: jax.Array, weights: jax.Array, q_block: int = 2048, interpret: bool = True
 ) -> jax.Array:
-    """grads: (d, Q), weights: (d,) -> (Q,)."""
-    d, q = grads.shape
+    """grads: (L, d, Q), weights: (L, d) -> (L, Q)."""
+    lanes, d, q = grads.shape
+    assert weights.shape == (lanes, d), (weights.shape, grads.shape)
     q_block = min(q_block, q)
     assert q % q_block == 0, (q, q_block)
     return pl.pallas_call(
         _combine_kernel,
-        grid=(q // q_block,),
+        grid=(lanes, q // q_block),
         in_specs=[
-            pl.BlockSpec((d, q_block), lambda i: (0, i)),
-            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1, d, q_block), lambda l, i: (l, 0, i)),
+            pl.BlockSpec((1, d), lambda l, i: (l, 0)),
         ],
-        out_specs=pl.BlockSpec((q_block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((q,), grads.dtype),
+        out_specs=pl.BlockSpec((1, q_block), lambda l, i: (l, i)),
+        out_shape=jax.ShapeDtypeStruct((lanes, q), grads.dtype),
         interpret=interpret,
     )(grads, weights)
+
+
+def coded_combine_pallas(
+    grads: jax.Array, weights: jax.Array, q_block: int = 2048, interpret: bool = True
+) -> jax.Array:
+    """grads: (d, Q), weights: (d,) -> (Q,) — the L=1 lane."""
+    return coded_combine_pallas_lanes(
+        grads[None], weights[None], q_block=q_block, interpret=interpret
+    )[0]

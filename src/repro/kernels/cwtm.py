@@ -9,9 +9,15 @@ traffic for a jnp.sort-based implementation: read + sorted write + read).
 The per-coordinate sort over the tiny static ``N`` axis (16/32 devices) is an
 odd-even transposition network: ``N`` compare-exchange passes on vectors of
 width ``q_block`` — each pass is a vectorized min/max on the VPU, no data-
-dependent control flow.  Tiling: grid over ``Q / q_block``; each program
-holds an ``(N, q_block)`` tile in VMEM (default q_block 2048: 32 x 2048 x 4 B
-= 256 KB, comfortably inside the ~16 MB VMEM budget with double buffering).
+dependent control flow.
+
+Tiling: the canonical entry point is **lane-batched** — ``(L, N, Q)`` stacks
+of independent scenario lanes over a 2-D ``(lane, q_tile)`` grid, each program
+holding one lane's ``(N, q_block)`` tile in VMEM (default q_block 2048:
+32 x 2048 x 4 B = 256 KB, comfortably inside the ~16 MB VMEM budget with
+double buffering).  The unbatched ``(N, Q)`` entry is the ``L=1`` special
+case, so batched and single calls run the identical per-tile math and agree
+bitwise lane-for-lane.
 """
 from __future__ import annotations
 
@@ -20,6 +26,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.numerics import tree_sum
 
 
 def _sort_rows(x: jax.Array) -> jax.Array:
@@ -48,28 +56,41 @@ def _sort_rows(x: jax.Array) -> jax.Array:
 
 
 def _cwtm_kernel(msgs_ref, out_ref, *, trim: int):
-    x = msgs_ref[...]
+    x = msgs_ref[0]  # (N, q_block): this lane's tile
     n = x.shape[0]
     srt = _sort_rows(x.astype(jnp.float32))
     kept = srt[trim : n - trim] if trim > 0 else srt
-    out_ref[...] = jnp.mean(kept, axis=0).astype(out_ref.dtype)
+    # fixed-tree mean, not jnp.mean: a reduce op may accumulate in a
+    # different order per program shape, breaking the engine's cross-mode
+    # bitwise guarantee (see repro/numerics.py)
+    mean = tree_sum(kept, axis=0) * jnp.float32(1.0 / kept.shape[0])
+    out_ref[0] = mean.astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("trim", "q_block", "interpret"))
-def cwtm_pallas(
+def cwtm_pallas_lanes(
     msgs: jax.Array, trim: int, q_block: int = 2048, interpret: bool = True
 ) -> jax.Array:
-    """msgs: (N, Q) -> (Q,) trimmed mean.  Q % q_block == 0."""
-    n, q = msgs.shape
+    """msgs: (L, N, Q) -> (L, Q) per-lane trimmed mean.  Q % q_block == 0."""
+    lanes, n, q = msgs.shape
     if 2 * trim >= n:
         raise ValueError(f"trim={trim} too large for N={n}")
     q_block = min(q_block, q)
     assert q % q_block == 0, (q, q_block)
     return pl.pallas_call(
         functools.partial(_cwtm_kernel, trim=trim),
-        grid=(q // q_block,),
-        in_specs=[pl.BlockSpec((n, q_block), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((q_block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((q,), msgs.dtype),
+        grid=(lanes, q // q_block),
+        in_specs=[pl.BlockSpec((1, n, q_block), lambda l, i: (l, 0, i))],
+        out_specs=pl.BlockSpec((1, q_block), lambda l, i: (l, i)),
+        out_shape=jax.ShapeDtypeStruct((lanes, q), msgs.dtype),
         interpret=interpret,
     )(msgs)
+
+
+def cwtm_pallas(
+    msgs: jax.Array, trim: int, q_block: int = 2048, interpret: bool = True
+) -> jax.Array:
+    """msgs: (N, Q) -> (Q,) trimmed mean — the L=1 lane of the batched grid."""
+    return cwtm_pallas_lanes(
+        msgs[None], trim, q_block=q_block, interpret=interpret
+    )[0]

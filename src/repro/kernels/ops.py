@@ -13,17 +13,30 @@ for every kernel (they are sliced off for cwtm/combine, contribute 0 to the
 gram/row-norm accumulators, and cannot raise a max-abs quantization scale),
 so padded and unpadded calls agree bitwise on the real coordinates.  Both
 backends see the same padded operands, keeping xla/interpret/pallas parity.
+
+Lane batching: every wrapper also accepts operands with extra *leading* lane
+axes (e.g. ``(S, N, Q)`` messages) and runs them through ONE lane-batched
+kernel launch over a 2-D ``(lane, q_tile)`` grid, bitwise equal lane-for-lane
+to the unbatched call.  ``jax.vmap`` of a wrapper maps onto the same kernel
+lane axis instead of falling back or unrolling: each kernel invocation is a
+``jax.custom_vmap`` whose batching rule promotes the call to the lane-batched
+kernel (and the lane-batched call's own rule *folds* further batch axes into
+the lane axis, so nested vmaps — scenario lanes over device lanes, as in the
+grid engine — collapse into a single ``(S*N,)`` launch).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+from jax.custom_batching import custom_vmap
 
 from repro.kernels import ref
-from repro.kernels.coded_combine import coded_combine_pallas
-from repro.kernels.cwtm import cwtm_pallas
-from repro.kernels.nnm_dist import gram_pallas
-from repro.kernels.quantize import stochastic_quantize_pallas
+from repro.kernels.coded_combine import coded_combine_pallas_lanes
+from repro.kernels.cwtm import cwtm_pallas_lanes
+from repro.kernels.nnm_dist import gram_pallas_lanes
+from repro.kernels.quantize import stochastic_quantize_pallas_lanes
 
 DEFAULT_BACKEND = "xla"
 
@@ -50,26 +63,134 @@ def _tile(q: int, q_block: int) -> int:
     return min(q_block, q)
 
 
+# --------------------------------------------------------------- vmap plumbing
+#
+# Two custom_vmap layers per kernel, built by one generic factory and
+# lru-cached per kernel on the static kernel parameters (so the function
+# identities — and with them jax's tracing caches — are stable across
+# calls):
+#
+#   single — the unbatched call; its vmap rule PROMOTES to the lanes call
+#            (a new leading axis becomes the kernel lane axis);
+#   lanes  — the lane-batched call; its vmap rule FOLDS any further batch
+#            axis into the existing lane axis and recurses, so arbitrarily
+#            nested vmaps stay one kernel launch.
+#
+# Rules broadcast unbatched operands to the lane axis first (`in_batched`
+# may be False for e.g. shared combine weights).
+
+
+def _ensure_batched(axis_size, args, in_batched):
+    return tuple(
+        a if b else jnp.broadcast_to(a, (axis_size,) + a.shape)
+        for a, b in zip(args, in_batched)
+    )
+
+
+def _lane_vmap_pair(lanes_kernel):
+    """(single, lanes) custom_vmap callables for a lane-batched kernel.
+
+    ``lanes_kernel`` takes operands with one leading lane axis each and
+    returns an array or tuple of arrays with a leading lane axis.
+    """
+
+    def batched_flags(out):
+        return jax.tree.map(lambda _: True, out)
+
+    @custom_vmap
+    def lanes(*args):
+        return lanes_kernel(*args)
+
+    @lanes.def_vmap
+    def _fold(axis_size, in_batched, *args):
+        args = _ensure_batched(axis_size, args, in_batched)
+        flat = tuple(a.reshape((-1,) + a.shape[2:]) for a in args)
+        out = lanes(*flat)
+        out = jax.tree.map(lambda o: o.reshape((axis_size, -1) + o.shape[1:]), out)
+        return out, batched_flags(out)
+
+    @custom_vmap
+    def single(*args):
+        return jax.tree.map(lambda o: o[0], lanes(*(a[None] for a in args)))
+
+    @single.def_vmap
+    def _promote(axis_size, in_batched, *args):
+        out = lanes(*_ensure_batched(axis_size, args, in_batched))
+        return out, batched_flags(out)
+
+    return single, lanes
+
+
+@functools.lru_cache(maxsize=None)
+def _cwtm_fns(trim: int, q_block: int, interpret: bool):
+    return _lane_vmap_pair(
+        lambda m: cwtm_pallas_lanes(m, trim, q_block=q_block, interpret=interpret)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _combine_fns(q_block: int, interpret: bool):
+    return _lane_vmap_pair(
+        lambda g, w: coded_combine_pallas_lanes(
+            g, w, q_block=q_block, interpret=interpret
+        )
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _quantize_fns(levels: int, q_block: int, interpret: bool):
+    return _lane_vmap_pair(
+        lambda g, u: stochastic_quantize_pallas_lanes(
+            g, u, levels, q_block=q_block, interpret=interpret
+        )
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _gram_fns(q_block: int, interpret: bool):
+    return _lane_vmap_pair(
+        lambda m: tuple(gram_pallas_lanes(m, q_block=q_block, interpret=interpret))
+    )
+
+
+def _flatten_lanes(x: jax.Array, event_ndim: int):
+    """Collapse all leading lane axes of ``x`` down to one."""
+    lead = x.shape[: x.ndim - event_ndim]
+    return x.reshape((-1,) + x.shape[x.ndim - event_ndim :]), lead
+
+
+# -------------------------------------------------------------- public wrappers
+
+
 def cwtm(msgs: jax.Array, trim: int, backend: str = DEFAULT_BACKEND, q_block: int = 2048) -> jax.Array:
+    """Coordinate-wise trimmed mean.  msgs: (..., N, Q) -> (..., Q)."""
     if backend == "xla":
         return ref.cwtm_ref(msgs, trim)
-    q = msgs.shape[1]
+    q = msgs.shape[-1]
     qb = _tile(q, q_block)
-    out = cwtm_pallas(_pad_last(msgs, qb), trim, q_block=qb, interpret=_interp(backend))
-    return out[:q]
+    padded = _pad_last(msgs, qb)
+    if msgs.ndim == 2:
+        return _cwtm_fns(trim, qb, _interp(backend))[0](padded)[:q]
+    flat, lead = _flatten_lanes(padded, 2)
+    out = _cwtm_fns(trim, qb, _interp(backend))[1](flat)
+    return out.reshape(lead + out.shape[-1:])[..., :q]
 
 
 def coded_combine(
     grads: jax.Array, weights: jax.Array, backend: str = DEFAULT_BACKEND, q_block: int = 2048
 ) -> jax.Array:
+    """eq.-(5) combine.  grads: (..., d, Q), weights: (d,) or (..., d)."""
     if backend == "xla":
         return ref.coded_combine_ref(grads, weights)
-    q = grads.shape[1]
+    q = grads.shape[-1]
     qb = _tile(q, q_block)
-    out = coded_combine_pallas(
-        _pad_last(grads, qb), weights, q_block=qb, interpret=_interp(backend)
-    )
-    return out[:q]
+    padded = _pad_last(grads, qb)
+    if grads.ndim == 2:
+        return _combine_fns(qb, _interp(backend))[0](padded, weights)[:q]
+    flat, lead = _flatten_lanes(padded, 2)
+    w = jnp.broadcast_to(weights, grads.shape[:-1]).reshape(flat.shape[:-1])
+    out = _combine_fns(qb, _interp(backend))[1](flat, w)
+    return out.reshape(lead + out.shape[-1:])[..., :q]
 
 
 def stochastic_quantize(
@@ -79,21 +200,35 @@ def stochastic_quantize(
     block: int = 1024,
     backend: str = DEFAULT_BACKEND,
 ) -> jax.Array:
+    """QSGD quantize-dequantize.  g, u: (..., Q) -> (..., Q)."""
     # Pad BEFORE dispatch so both backends quantize identical blocks: the
     # tail block's scale is the max-abs of its real entries (zeros never win).
-    q = g.shape[0]
+    q = g.shape[-1]
     qb = _tile(q, block)
     gp, up = _pad_last(g, qb), _pad_last(u, qb)
     if backend == "xla":
-        return ref.stochastic_quantize_ref(gp, up, levels, qb)[:q]
-    return stochastic_quantize_pallas(
-        gp, up, levels, q_block=qb, interpret=_interp(backend)
-    )[:q]
+        return ref.stochastic_quantize_ref(gp, up, levels, qb)[..., :q]
+    if g.ndim == 1:
+        return _quantize_fns(levels, qb, _interp(backend))[0](gp, up)[:q]
+    gf, lead = _flatten_lanes(gp, 1)
+    uf, _ = _flatten_lanes(up, 1)
+    out = _quantize_fns(levels, qb, _interp(backend))[1](gf, uf)
+    return out.reshape(lead + out.shape[-1:])[..., :q]
 
 
 def pairwise_sqdist(msgs: jax.Array, backend: str = DEFAULT_BACKEND, q_block: int = 2048) -> jax.Array:
+    """Pairwise squared distances.  msgs: (..., N, Q) -> (..., N, N)."""
     if backend == "xla":
         return ref.pairwise_sqdist_ref(msgs)
-    qb = _tile(msgs.shape[1], q_block)
-    gram, sq = gram_pallas(_pad_last(msgs, qb), q_block=qb, interpret=_interp(backend))
-    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
+    qb = _tile(msgs.shape[-1], q_block)
+    padded = _pad_last(msgs, qb)
+    if msgs.ndim == 2:
+        gram, sq = _gram_fns(qb, _interp(backend))[0](padded)
+    else:
+        flat, lead = _flatten_lanes(padded, 2)
+        gram, sq = _gram_fns(qb, _interp(backend))[1](flat)
+        gram = gram.reshape(lead + gram.shape[-2:])
+        sq = sq.reshape(lead + sq.shape[-1:])
+    return jnp.maximum(
+        sq[..., :, None] + sq[..., None, :] - 2.0 * gram, 0.0
+    )

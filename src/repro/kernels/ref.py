@@ -1,4 +1,10 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Like the kernels, every oracle accepts extra *leading* lane axes (the
+lane-batched entry points and the grid engine's vmap both produce them);
+the unbatched call is the zero-leading-axes special case of the same code
+path, so batched and single calls agree bitwise per lane.
+"""
 from __future__ import annotations
 
 import jax
@@ -6,17 +12,18 @@ import jax.numpy as jnp
 
 
 def cwtm_ref(msgs: jax.Array, trim: int) -> jax.Array:
-    """Coordinate-wise trimmed mean.  msgs: (N, Q) -> (Q,)."""
-    n = msgs.shape[0]
-    srt = jnp.sort(msgs, axis=0)
-    kept = srt[trim : n - trim] if trim > 0 else srt
-    return jnp.mean(kept.astype(jnp.float32), axis=0).astype(msgs.dtype)
+    """Coordinate-wise trimmed mean.  msgs: (..., N, Q) -> (..., Q)."""
+    n = msgs.shape[-2]
+    srt = jnp.sort(msgs, axis=-2)
+    kept = srt[..., trim : n - trim, :] if trim > 0 else srt
+    return jnp.mean(kept.astype(jnp.float32), axis=-2).astype(msgs.dtype)
 
 
 def coded_combine_ref(grads: jax.Array, weights: jax.Array) -> jax.Array:
-    """eq.-(5) weighted combine.  grads: (d, Q), weights: (d,) -> (Q,)."""
+    """eq.-(5) weighted combine.  grads: (..., d, Q), weights: (d,) or
+    (..., d) -> (..., Q)."""
     return jnp.einsum(
-        "dq,d->q", grads.astype(jnp.float32), weights.astype(jnp.float32)
+        "...dq,...d->...q", grads.astype(jnp.float32), weights.astype(jnp.float32)
     ).astype(grads.dtype)
 
 
@@ -25,8 +32,9 @@ def stochastic_quantize_ref(
 ) -> jax.Array:
     """QSGD per-block stochastic quantization (dequantized output).
 
-    g, u: (Q,) with Q % block == 0; u ~ Uniform[0,1) supplies the rounding
-    randomness (passed in so kernel and oracle share it bit-for-bit).
+    g, u: (..., Q) with Q % block == 0; u ~ Uniform[0,1) supplies the
+    rounding randomness (passed in so kernel and oracle share it
+    bit-for-bit).
     """
     gc = g.reshape(-1, block).astype(jnp.float32)
     uc = u.reshape(-1, block)
@@ -36,12 +44,14 @@ def stochastic_quantize_ref(
     lo = jnp.floor(y)
     yq = lo + (uc < (y - lo)).astype(jnp.float32)
     out = jnp.where(scale > 0, yq / levels * safe, 0.0)
-    return out.reshape(-1).astype(g.dtype)
+    return out.reshape(g.shape).astype(g.dtype)
 
 
 def pairwise_sqdist_ref(msgs: jax.Array) -> jax.Array:
-    """(N, Q) -> (N, N) squared euclidean distances (fp32)."""
+    """(..., N, Q) -> (..., N, N) squared euclidean distances (fp32)."""
     m = msgs.astype(jnp.float32)
-    sq = jnp.sum(m * m, axis=1)
-    gram = m @ m.T
-    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
+    sq = jnp.sum(m * m, axis=-1)
+    gram = m @ jnp.swapaxes(m, -1, -2)
+    return jnp.maximum(
+        sq[..., :, None] + sq[..., None, :] - 2.0 * gram, 0.0
+    )

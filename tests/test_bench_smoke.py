@@ -1,0 +1,50 @@
+"""Benchmark drivers stay runnable: tiny-shape smoke of the kernel benches,
+the BENCH_kernels.json schema, and the grid-timing sweep (tier-1).
+
+Uses scripts/bench_smoke.py — the same entry the standalone CI check runs —
+so a drifting bench driver or JSON schema fails here, not during the next
+perf investigation.
+"""
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+for p in (str(ROOT), str(ROOT / "scripts")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+import bench_smoke  # noqa: E402
+
+
+def test_kernel_bench_rows_and_json_schema():
+    payload = bench_smoke.smoke_kernel_bench()
+    bench_smoke.validate_kernel_json(payload)  # idempotent re-check
+    names = {r["name"] for r in payload["rows"]}
+    # one batched + one loop row per Pallas kernel
+    for op in ("cwtm", "coded_combine", "quantize", "pairwise_sqdist"):
+        assert {f"{op}_lanes_batched", f"{op}_per_lane_loop"} <= names
+
+
+def test_validate_kernel_json_rejects_drift():
+    good = {"schema_version": 1,
+            "rows": [{"name": "x", "us_per_call": 1.0, "derived": 0.0}]}
+    bench_smoke.validate_kernel_json(good)
+    with pytest.raises(AssertionError):
+        bench_smoke.validate_kernel_json({"schema_version": 999, "rows": good["rows"]})
+    with pytest.raises(AssertionError):
+        bench_smoke.validate_kernel_json({"schema_version": 1, "rows": []})
+    with pytest.raises(AssertionError):
+        bench_smoke.validate_kernel_json(
+            {"schema_version": 1, "rows": [{"name": "x", "us_per_call": 1.0}]}
+        )
+
+
+def test_grid_timing_smoke():
+    rows = bench_smoke.smoke_grid_timing()
+    names = [n for n, _, _ in rows]
+    assert "smoke_grid_vmapped_warm" in names
+    assert "smoke_kernel_grid_vmapped_warm" in names
+    for name, _, value in rows:
+        assert value > 0, (name, value)

@@ -240,6 +240,136 @@ def test_grid_shared_problem_and_finals(key):
         assert np.isfinite(m["final_loss"])
 
 
+def test_kernel_backend_grid_bit_identical(key):
+    """run_grid on backend="interpret" must ride the same vmapped one-
+    program-per-bucket path as XLA (no per-scenario fallback), with every
+    lane BITWISE equal to its standalone scan AND loop trajectories — the
+    lane-batched Pallas kernels + the engine's deterministic metric path."""
+    rows = [
+        dataclasses.replace(s, n_devices=10, n_byz=2, lr=1e-5, backend="interpret")
+        for s in scenarios.section7_grid(
+            methods=(("plain", 1), ("lad", 4)),
+            attacks=("sign_flip", "alie"),
+            compressors=("none", "rand_sparse"),
+        )
+    ]
+    grid = scenarios.run_grid(rows, steps=8, dim=12)
+    _grid_matches(grid, scenarios.run_grid(rows, steps=8, dim=12, mode="scan"))
+    sf = [s for s in rows if s.attack == "sign_flip" and s.method == "lad"][:1]
+    _grid_matches(
+        {s.name: grid[s.name] for s in sf},
+        scenarios.run_grid(sf, steps=8, dim=12, mode="loop"),
+    )
+
+
+@pytest.mark.slow
+def test_kernel_backend_grid_bit_identical_full_matrix(key):
+    """Full kernel-backend matrix (draco, quant, cwtm-nnm rows included)."""
+    rows = [
+        dataclasses.replace(s, n_devices=16, n_byz=3, lr=1e-5, backend="interpret")
+        for s in scenarios.section7_grid(
+            methods=(("plain", 1), ("lad", 4), ("draco", 4)),
+            attacks=("sign_flip", "alie", "ipm"),
+            compressors=("none", "rand_sparse"),
+        )
+    ]
+    rows += [
+        dataclasses.replace(s, compressor="quant", name=s.name + "+q")
+        for s in rows if s.method == "lad"
+    ]
+    rows += [
+        dataclasses.replace(s, aggregator="cwtm-nnm", name=s.name + "+nnm")
+        for s in rows if s.method == "plain"
+    ]
+    grid = scenarios.run_grid(rows, steps=12, dim=20)
+    _grid_matches(grid, scenarios.run_grid(rows, steps=12, dim=20, mode="scan"))
+
+
+def test_kernel_backend_grid_zero_dispatch_and_compiles_warm(key, monkeypatch):
+    """A warm kernel-backend sweep must make zero per-scenario dispatches
+    (run_scenario is never called from mode="grid") and zero program-cache
+    misses — the acceptance criterion of the lane-batched kernel path."""
+    from repro.core import engine
+
+    rows = [
+        dataclasses.replace(s, n_devices=16, n_byz=3, lr=1e-5, backend="interpret")
+        for s in scenarios.section7_grid(
+            methods=(("lad", 4),), attacks=("sign_flip", "alie"),
+            compressors=("none",),
+        )
+    ]
+    scenarios.run_grid(rows, steps=5, dim=16)  # cold: compiles + caches
+    misses0 = engine._grid_program.cache_info().misses
+
+    def _boom(*a, **kw):  # any per-scenario dispatch would be a regression
+        raise AssertionError("run_grid(mode='grid') dispatched per-scenario")
+
+    monkeypatch.setattr(scenarios, "run_scenario", _boom)
+    scenarios.run_grid(rows, steps=5, dim=16)  # warm
+    assert engine._grid_program.cache_info().misses == misses0
+
+
+def test_run_trajectory_program_cache_zero_retrace(key):
+    """Repeated warm run_trajectory calls (both modes) must reuse the cached
+    compiled program: the subset-grad fn is traced on the cold call only."""
+    z, y, _, _ = _problem(key)
+    cfg = ProtocolConfig(n_devices=N, d=4, aggregator="cwtm", trim_frac=0.2,
+                         n_byz=4, attack=AttackSpec("sign_flip", n_byz=4))
+    traces = {"n": 0}
+
+    def counting_grad_fn(data, x):
+        traces["n"] += 1  # runs only while tracing
+        zz, yy = data
+        from repro.data.synthetic import linreg_subset_grads
+        return linreg_subset_grads(zz, yy, x)
+
+    for mode in ("scan", "loop"):
+        kw = dict(steps=6, lr=1e-6, grad_scale=float(N), mode=mode, data=(z, y))
+        cold = run_trajectory(cfg, key, jnp.zeros((DIM,)), counting_grad_fn, **kw)
+        n_cold = traces["n"]
+        assert n_cold > 0
+        warm = run_trajectory(
+            cfg, jax.random.fold_in(key, 1), jnp.ones((DIM,)), counting_grad_fn, **kw
+        )
+        assert traces["n"] == n_cold, f"{mode}: warm call retraced"
+        # different key/x0 operands really were used (not a stale cache hit)
+        assert not np.array_equal(np.asarray(cold.x), np.asarray(warm.x))
+
+
+def test_run_trajectory_without_metrics(key):
+    """with_metrics=False skips the raw metric stacks (large-Q runs) while
+    keeping the final iterate bitwise-equal across modes."""
+    z, y, _, _ = _problem(key)
+    cfg = ProtocolConfig(n_devices=N, d=4, aggregator="cwtm", trim_frac=0.2,
+                         n_byz=4, attack=AttackSpec("sign_flip", n_byz=4))
+    sgf = lambda d, x: linreg_subset_grads(d[0], d[1], x)
+    kw = dict(steps=5, lr=1e-6, grad_scale=float(N), data=(z, y))
+    bare = run_trajectory(cfg, key, jnp.zeros((DIM,)), sgf, with_metrics=False, **kw)
+    assert bare.metrics == {}
+    full = run_trajectory(cfg, key, jnp.zeros((DIM,)), sgf, **kw)
+    np.testing.assert_array_equal(np.asarray(bare.x), np.asarray(full.x))
+    loop = run_trajectory(cfg, key, jnp.zeros((DIM,)), sgf, mode="loop",
+                          with_metrics=False, **kw)
+    np.testing.assert_array_equal(np.asarray(bare.x), np.asarray(loop.x))
+    with pytest.raises(ValueError):
+        run_trajectory(cfg, key, jnp.zeros((DIM,)), sgf, with_metrics=False,
+                       loss_fn=lambda d, x: 0.0, **kw)
+
+
+def test_run_scenario_warm_zero_program_misses(key):
+    """run_scenario routes through module-level fns + the data operand, so a
+    repeated scenario run hits the trajectory-program cache."""
+    from repro.core import engine
+
+    scn = scenarios.section7_grid(methods=(("lad", 4),), attacks=("sign_flip",),
+                                  compressors=("none",))[0]
+    scn = dataclasses.replace(scn, n_devices=16, n_byz=3)
+    scenarios.run_scenario(scn, 4, dim=16)  # cold
+    misses0 = engine._trajectory_program.cache_info().misses
+    scenarios.run_scenario(scn, 4, dim=16)  # warm
+    assert engine._trajectory_program.cache_info().misses == misses0
+
+
 def test_engine_run_grid_api(key):
     """Direct engine-level run_grid: batched lr, schedule freezing, lane()."""
     from repro.core import engine

@@ -127,6 +127,101 @@ def test_gram_non_divisible_tiling(n, q, q_block, key):
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-2)
 
 
+# ------------------------------------------- lane batching (2-D (lane, q_tile))
+
+
+LANE_CASES = [  # (lanes, q, q_block): odd lane counts x non-divisible tilings
+    (1, 2048, 2048),
+    (3, 100, 512),
+    (7, 333, 128),
+]
+
+
+@pytest.mark.parametrize("lanes,q,q_block", LANE_CASES)
+def test_cwtm_batched_vs_single_bitwise(lanes, q, q_block, key):
+    """The lane-batched kernel must equal per-lane single calls BITWISE (the
+    grid engine's lane == standalone guarantee starts here)."""
+    msgs = jax.random.normal(key, (lanes, 9, q)) * 2
+    out = ops.cwtm(msgs, 2, backend="interpret", q_block=q_block)
+    want = jnp.stack(
+        [ops.cwtm(msgs[i], 2, backend="interpret", q_block=q_block) for i in range(lanes)]
+    )
+    assert out.shape == (lanes, q)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("lanes,q,q_block", LANE_CASES)
+def test_coded_combine_batched_vs_single_bitwise(lanes, q, q_block, key):
+    grads = jax.random.normal(key, (lanes, 4, q))
+    w = jnp.full((4,), 0.25, jnp.float32)
+    out = ops.coded_combine(grads, w, backend="interpret", q_block=q_block)
+    want = jnp.stack(
+        [ops.coded_combine(grads[i], w, backend="interpret", q_block=q_block) for i in range(lanes)]
+    )
+    assert out.shape == (lanes, q)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("lanes,q,q_block", LANE_CASES)
+def test_quantize_batched_vs_single_bitwise(lanes, q, q_block, key):
+    g = jax.random.normal(key, (lanes, q))
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (lanes, q))
+    out = ops.stochastic_quantize(g, u, 8, q_block, backend="interpret")
+    want = jnp.stack(
+        [ops.stochastic_quantize(g[i], u[i], 8, q_block, backend="interpret") for i in range(lanes)]
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    # padded tail blocks must also agree with the xla oracle bitwise
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ops.stochastic_quantize(g, u, 8, q_block, backend="xla"))
+    )
+
+
+@pytest.mark.parametrize("lanes,q,q_block", LANE_CASES)
+def test_pairwise_sqdist_batched_vs_single_bitwise(lanes, q, q_block, key):
+    msgs = jax.random.normal(key, (lanes, 6, q))
+    out = ops.pairwise_sqdist(msgs, backend="interpret", q_block=q_block)
+    want = jnp.stack(
+        [ops.pairwise_sqdist(msgs[i], backend="interpret", q_block=q_block) for i in range(lanes)]
+    )
+    assert out.shape == (lanes, 6, 6)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_vmap_maps_onto_kernel_lane_axis(key):
+    """jax.vmap of every wrapper must hit the lane-batched kernel (via the
+    custom_vmap rules) and agree BITWISE with the explicit batched entry —
+    the contract that lets kernel backends ride engine.run_grid."""
+    lanes, n, q = 3, 8, 300
+    msgs = jax.random.normal(key, (lanes, n, q))
+    np.testing.assert_array_equal(
+        np.asarray(jax.vmap(lambda m: ops.cwtm(m, 2, backend="interpret", q_block=128))(msgs)),
+        np.asarray(ops.cwtm(msgs, 2, backend="interpret", q_block=128)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(jax.vmap(lambda m: ops.pairwise_sqdist(m, backend="interpret", q_block=128))(msgs)),
+        np.asarray(ops.pairwise_sqdist(msgs, backend="interpret", q_block=128)),
+    )
+    g = jax.random.normal(key, (lanes, q))
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (lanes, q))
+    np.testing.assert_array_equal(
+        np.asarray(jax.vmap(lambda a, b: ops.stochastic_quantize(a, b, 8, 64, backend="interpret"))(g, u)),
+        np.asarray(ops.stochastic_quantize(g, u, 8, 64, backend="interpret")),
+    )
+
+
+def test_nested_vmap_folds_into_one_lane_axis(key):
+    """Nested vmaps (scenario x device, as in the vmapped grid engine) must
+    fold into a single kernel lane axis, bitwise-equal to the flat batch."""
+    s, n, d, q = 2, 3, 4, 200
+    grads = jax.random.normal(key, (s, n, d, q))
+    w = jnp.full((d,), 1.0 / d, jnp.float32)
+    fn = lambda g: ops.coded_combine(g, w, backend="interpret", q_block=128)
+    nested = jax.vmap(jax.vmap(fn))(grads)
+    flat = ops.coded_combine(grads.reshape(s * n, d, q), w, backend="interpret", q_block=128)
+    np.testing.assert_array_equal(np.asarray(nested), np.asarray(flat.reshape(s, n, q)))
+
+
 # ------------------------------------------------------------- DRACO decoding
 
 
