@@ -187,6 +187,127 @@ def _timed_grid_rows(grid, steps, prefix):
     ]
 
 
+def _timed_sharded_rows(
+    rows_scn, steps, prefix, *, shard="shard_map", max_lanes_per_device=None,
+    dim=100, problem=None,
+):
+    """Sharded-vs-unsharded grid wall clock + bitwise-equality check.
+
+    Times the unsharded vmapped grid against the device-sharded grid (and,
+    when ``max_lanes_per_device`` is given, the chunked streaming mode),
+    asserting every lane bitwise-equal between all paths before comparing
+    times.  On a 1-device host the sharded path degenerates to the unsharded
+    math plus partitioning overhead; the CI determinism job re-runs the smoke
+    version under 8 forced host devices.
+    """
+    import time
+
+    import numpy as np
+
+    def timed(**kw):
+        t0 = time.perf_counter()
+        res = scenarios.run_grid(rows_scn, steps, dim=dim, problem=problem, **kw)
+        jax.block_until_ready([r.x for r in res.values()])
+        return time.perf_counter() - t0, res
+
+    t_single_cold, res_single = timed()
+    t_single_warm, _ = timed()
+    t_shard_cold, res_shard = timed(shard=shard)
+    t_shard_warm, _ = timed(shard=shard)
+
+    def check(res, label):
+        for name in res_single:
+            ref = res_single[name]
+            assert np.array_equal(
+                np.asarray(res[name].x), np.asarray(ref.x)
+            ), f"{prefix}{label}: sharded != unsharded for {name}"
+            for k in ref.metrics:  # every lane bitwise, metrics included
+                assert np.array_equal(
+                    np.asarray(res[name].metrics[k]), np.asarray(ref.metrics[k])
+                ), f"{prefix}{label}: sharded != unsharded for {name}: {k}"
+
+    check(res_shard, "sharded")
+    n = len(rows_scn)
+    rows = [
+        (f"{prefix}unsharded_cold", n, t_single_cold),
+        (f"{prefix}unsharded_warm", n, t_single_warm),
+        (f"{prefix}sharded_cold", n, t_shard_cold),
+        (f"{prefix}sharded_warm", n, t_shard_warm),
+        (f"{prefix}speedup_warm_sharded_vs_unsharded", n, t_single_warm / t_shard_warm),
+    ]
+    if max_lanes_per_device is not None:
+        from repro.core import engine
+
+        kw = dict(shard=shard, max_lanes_per_device=max_lanes_per_device)
+        timed(**kw)  # cold: the chunk shape compiles its own executable
+        misses0 = engine._grid_program.cache_info().misses
+        t_chunk_warm, res_chunk = timed(**kw)
+        # the lru-cached one-program-per-bucket contract extends to the
+        # sharded+chunked path: the warm sweep may not miss the program cache
+        assert engine._grid_program.cache_info().misses == misses0, (
+            f"{prefix}: warm sharded sweep missed the grid-program cache"
+        )
+        check(res_chunk, "sharded_chunked")
+        rows.append((f"{prefix}sharded_chunked_warm", n, t_chunk_warm))
+    return rows
+
+
+GRID_SHARDED_SCHEMA_VERSION = 1
+
+
+def write_grid_sharded_json(payload: dict, path: str) -> None:
+    import json
+    import os
+
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def grid_sharded(
+    lanes: int = 1000,
+    steps: int = 12,
+    n_devices: int = 16,
+    dim: int = 32,
+    shard: str = "shard_map",
+    max_lanes_per_device: int = 64,
+    out_path: str = "benchmarks/out/BENCH_grid_sharded.json",
+):
+    """The 1000-row device-sharded synthetic sweep (the DRACO-scale
+    redundancy-study regime): one compile bucket (``scenarios.
+    synthetic_sweep``), lane axis partitioned over every visible device and
+    streamed in ``max_lanes_per_device``-sized chunks of one cached program.
+
+    Asserts every lane bitwise-equal to the unsharded grid (iterates AND
+    metrics) and that the warm sharded sweep makes zero program-cache misses
+    (both inside ``_timed_sharded_rows``), then records the timing rows
+    machine-readably to ``BENCH_grid_sharded.json`` (schema validated in
+    tier-1 by scripts/bench_smoke.py) as well as to the figure CSV.
+    """
+    rows_scn = scenarios.synthetic_sweep(lanes, n_devices=n_devices, n_byz=3)
+    rows = _timed_sharded_rows(
+        rows_scn, steps, "grid1k_", shard=shard,
+        max_lanes_per_device=max_lanes_per_device, dim=dim,
+    )
+    payload = {
+        "schema_version": GRID_SHARDED_SCHEMA_VERSION,
+        "device_count": jax.device_count(),
+        "shard": shard,
+        "lanes": lanes,
+        "max_lanes_per_device": max_lanes_per_device,
+        "steps": steps,
+        "n_devices": n_devices,
+        "dim": dim,
+        "rows": [
+            {"name": name, "lanes": n, "value": float(value)}
+            for name, n, value in rows
+        ],
+    }
+    write_grid_sharded_json(payload, out_path)
+    return rows
+
+
 def grid_timing(steps: int = 300, kernel_steps: int = 60):
     """End-to-end wall-clock of the whole-grid on-device engine vs the PR-1
     per-scenario dispatch loop, on the full ``section7_grid()`` — for the
@@ -220,6 +341,13 @@ def grid_timing(steps: int = 300, kernel_steps: int = 60):
         )
     ]
     rows += _timed_grid_rows(kernel_grid, kernel_steps, "kernel_")
+    # device-sharded vs unsharded on a single-bucket synthetic sweep (the
+    # sharded rows are the per-machine record; BENCH_grid_sharded.json from
+    # the grid_sharded figure is the machine-readable 1000-row version)
+    rows += _timed_sharded_rows(
+        scenarios.synthetic_sweep(48, n_devices=16, n_byz=3), 60, "sharded48_",
+        max_lanes_per_device=8, dim=32,
+    )
     return rows
 
 
@@ -231,4 +359,5 @@ FIGURES = {
     "fig6_compressed": fig6_compressed,
     "section7_sweep": section7_sweep,
     "grid_timing": grid_timing,
+    "grid_sharded": grid_sharded,
 }

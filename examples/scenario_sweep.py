@@ -17,6 +17,14 @@ lane-batched kernels map the scenario axis onto their 2-D ``(lane, q_tile)``
 grid (see ``kernels/ops.py``), bitwise-equal per lane to the standalone run.
 ``--per-scenario`` forces the PR-1 dispatch loop (the bit-exactness
 reference; useful for timing the vmapped path against it).
+
+``--shard shard_map`` partitions every compile bucket's scenario-lane axis
+over the visible devices (pad-to-device-count semantics; see README "Engine
+guarantees"), and ``--max-lanes-per-device`` streams large sweeps through
+equal-shaped chunks of one compiled program:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python examples/scenario_sweep.py --shard shard_map --steps 100
 """
 import argparse
 import dataclasses
@@ -38,6 +46,13 @@ def main() -> None:
     parser.add_argument("--per-scenario", action="store_true",
                         help="run the PR-1 per-scenario dispatch loop instead "
                              "of the vmapped whole-grid engine")
+    parser.add_argument("--shard", default="none",
+                        choices=["none", "pmap", "shard_map"],
+                        help="partition each bucket's scenario-lane axis over "
+                             "all visible devices")
+    parser.add_argument("--max-lanes-per-device", type=int, default=None,
+                        help="stream the sweep in chunks of this many lanes "
+                             "per device (memory-bounded 1000+-row sweeps)")
     args = parser.parse_args()
 
     grid = scenarios.section7_grid(
@@ -54,11 +69,14 @@ def main() -> None:
 
     mode = "scan" if args.per_scenario else "grid"
     print(f"{len(grid)} scenarios x {args.steps} rounds "
-          f"(backend={args.backend}, mode={mode})\n")
+          f"(backend={args.backend}, mode={mode}, shard={args.shard}, "
+          f"{jax.device_count()} device(s))\n")
     print(f"{'scenario':44s} {'final loss':>12s} {'agg dist':>10s}")
     t0 = time.perf_counter()
     results = scenarios.grid_finals(
-        scenarios.run_grid(grid, args.steps, problem=problem, mode=mode)
+        scenarios.run_grid(grid, args.steps, problem=problem, mode=mode,
+                           shard=args.shard,
+                           max_lanes_per_device=args.max_lanes_per_device)
     )
     elapsed = time.perf_counter() - t0
     for name, m in results.items():

@@ -1,12 +1,13 @@
-"""Tiny-shape smoke run of the benchmark drivers + BENCH_kernels.json schema
+"""Tiny-shape smoke run of the benchmark drivers + BENCH_*.json schema
 validation.
 
 Benchmark code rots silently: it only runs when someone benchmarks.  This
-script executes the kernel microbenches and a miniature grid-timing sweep at
-toy shapes (seconds, not minutes) and validates the machine-readable
-``BENCH_kernels.json`` the real driver emits, so a drifting bench driver or
-schema fails tier-1 (tests/test_bench_smoke.py) instead of the next perf
-investigation.
+script executes the kernel microbenches, a miniature grid-timing sweep and a
+miniature device-sharded sweep (``shard="shard_map"``, chunked) at toy shapes
+(seconds, not minutes) and validates the machine-readable
+``BENCH_kernels.json`` / ``BENCH_grid_sharded.json`` the real drivers emit,
+so a drifting bench driver or schema fails tier-1 (tests/test_bench_smoke.py)
+instead of the next perf investigation.
 
 Standalone:
 
@@ -72,6 +73,54 @@ def smoke_kernel_bench() -> dict:
     return payload
 
 
+def validate_grid_sharded_json(payload: dict) -> None:
+    """Assert the BENCH_grid_sharded.json schema (see
+    paper_figures.GRID_SHARDED_SCHEMA_VERSION)."""
+    from benchmarks.paper_figures import GRID_SHARDED_SCHEMA_VERSION
+
+    assert isinstance(payload, dict), type(payload)
+    assert payload.get("schema_version") == GRID_SHARDED_SCHEMA_VERSION, (
+        payload.get("schema_version")
+    )
+    assert payload.get("shard") in ("pmap", "shard_map"), payload.get("shard")
+    for field in ("device_count", "lanes", "max_lanes_per_device", "steps",
+                  "n_devices", "dim"):
+        v = payload.get(field)
+        assert isinstance(v, int) and v >= 1, (field, v)
+    rows = payload.get("rows")
+    assert isinstance(rows, list) and rows, "rows must be a non-empty list"
+    names = set()
+    for row in rows:
+        assert set(row) == {"name", "lanes", "value"}, sorted(row)
+        assert isinstance(row["name"], str) and row["name"], row
+        assert isinstance(row["lanes"], int) and row["lanes"] >= 1, row
+        assert isinstance(row["value"], float) and row["value"] > 0, row
+        names.add(row["name"])
+    assert len(names) == len(rows), "duplicate row names"
+    for req in ("unsharded_warm", "sharded_warm", "sharded_chunked_warm",
+                "speedup_warm_sharded_vs_unsharded"):
+        assert any(n.endswith(req) for n in names), f"missing {req} row"
+
+
+def smoke_grid_sharded() -> dict:
+    """Run the device-sharded sweep bench (``shard="shard_map"``, chunked
+    streaming) at tiny shapes — including its bitwise sharded-vs-unsharded
+    and zero-compile-warm assertions — and round-trip + validate the JSON."""
+    from benchmarks.paper_figures import grid_sharded
+
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "BENCH_grid_sharded.json")
+        rows = grid_sharded(
+            lanes=6, steps=3, n_devices=10, dim=12,
+            max_lanes_per_device=2, out_path=path,
+        )
+        with open(path) as f:
+            payload = json.load(f)
+    assert len(rows) == 6, [r[0] for r in rows]
+    validate_grid_sharded_json(payload)
+    return payload
+
+
 def smoke_grid_timing() -> list:
     """Miniature whole-grid-vs-per-scenario timing (with its bitwise check),
     on both the XLA and the kernel backend."""
@@ -97,6 +146,11 @@ def main() -> int:
     print(f"kernel bench smoke: {len(payload['rows'])} rows, schema OK")
     rows = smoke_grid_timing()
     print(f"grid timing smoke: {len(rows)} rows, bitwise check OK")
+    sharded = smoke_grid_sharded()
+    print(
+        f"grid sharded smoke: {len(sharded['rows'])} rows on "
+        f"{sharded['device_count']} device(s), schema + bitwise OK"
+    )
     return 0
 
 

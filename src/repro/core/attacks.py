@@ -112,13 +112,53 @@ class AttackSpec:
     z: float = 1.5  # alie
     eps: float = 0.5  # ipm
 
-    def make(self) -> Attack:
-        return make_attack(self)
+    def make(self, backend: str = "xla") -> Attack:
+        return make_attack(self, backend=backend)
 
 
-def make_attack(spec: AttackSpec) -> Attack:
+# the attacks with a lane-batched kernel realization, and their scalar knob
+# (imported from the kernels module so the two tables cannot drift)
+from repro.kernels.attacks import KERNEL_ATTACK_PARAMS as _KERNEL_ATTACKS  # noqa: E402
+
+
+def make_attack(spec: AttackSpec, backend: str = "xla") -> Attack:
+    """Build the corruption map of ``spec``.
+
+    ``backend`` selects the realization exactly like ``ProtocolConfig.backend``
+    does for the server/encode ops: on a kernel backend the paper's attack
+    menu (sign-flip and the ALIE/IPM collusion attacks) runs as one
+    lane-batched ``(lane, q_tile)`` kernel launch (``kernels/ops.py::attack``)
+    so the attack stage stays lane-resident under the grid engine's vmap;
+    attacks without a kernel realization (gaussian noise, zero, label_shift)
+    fall back to the pure-jnp forms on every backend.
+
+    Scope note for ``backend="interpret"``: only sign-flip rides the kernel.
+    The collusion attacks keep the plain-XLA fixed-tree forms there, because
+    ANY interpret-mode pallas wrapper in their path (statistics inside the
+    kernel, or outside feeding an elementwise kernel — both were measured)
+    re-rolls LLVM's fusion/fma choices between the standalone and grid
+    program shapes and flips low bits at scale-dependent (N, Q) combos,
+    which would break the engine's grid == standalone bitwise guarantee
+    that the XLA forms hold at every verified scale.  ``backend="pallas"``
+    (TPU/Mosaic — a different codegen pipeline, no CPU-LLVM fma discretion)
+    routes all three through the kernels; the interpret path still
+    *verifies* those kernels' semantics via the ops parity tests.
+    """
     if spec.name not in _ATTACKS:
         raise KeyError(f"unknown attack {spec.name!r}; have {sorted(_ATTACKS)}")
+    if backend != "xla" and spec.name in _KERNEL_ATTACKS and (
+        backend == "pallas" or spec.name == "sign_flip"
+    ):
+        from repro.kernels import ops as kernel_ops
+
+        name = spec.name
+        param = float(getattr(spec, _KERNEL_ATTACKS[name]))
+
+        def kernel_attack(key, msgs, mask):
+            del key
+            return kernel_ops.attack(msgs, mask, name, param, backend=backend)
+
+        return kernel_attack
     return _ATTACKS[spec.name](coeff=spec.coeff, std=spec.std, z=spec.z, eps=spec.eps)
 
 

@@ -107,14 +107,11 @@ class ProtocolConfig:
 
 
 def _encode(cfg: ProtocolConfig, stacked: jax.Array) -> jax.Array:
-    """eq.-(5) per-device combine of the gathered ``(N, d, Q)`` stack."""
-    if cfg.backend == "xla":
-        return jnp.mean(stacked, axis=1)
-    d = stacked.shape[1]
-    w = jnp.full((d,), 1.0 / d, jnp.float32)
-    # one lane-batched kernel launch over the device axis (and, under the
-    # grid engine's vmap, over scenario x device folded into one lane axis)
-    return kernel_ops.coded_combine(stacked, w, backend=cfg.backend)
+    """eq.-(5) per-device combine of the gathered ``(N, d, Q)`` stack (XLA
+    path; kernel backends fuse the gather into ``kernel_ops.gather_combine``
+    and never materialize the stacked gradients)."""
+    del cfg
+    return jnp.mean(stacked, axis=1)
 
 
 def _device_coded_gradients(cfg: ProtocolConfig, key: jax.Array, subset_grads: jax.Array):
@@ -127,10 +124,19 @@ def _device_coded_gradients(cfg: ProtocolConfig, key: jax.Array, subset_grads: j
         groups = jnp.arange(n) // d  # (N,)
         block_cols = groups[:, None] * d + jnp.arange(d)[None, :]  # (N, d)
         subsets = perm[block_cols]
-        return _encode(cfg, subset_grads[subsets]), subsets
-    assignment = tm.sample_assignment(key, n, d)
-    coded = _encode(cfg, subset_grads[assignment.subsets])  # (N, Q)
-    return coded, assignment.subsets
+    else:
+        subsets = tm.sample_assignment(key, n, d).subsets
+    if cfg.backend != "xla":
+        # kernel hot path: assignment gather + eq.-(5) combine fused into one
+        # lane-batched launch (under the grid engine's vmap a lane is one
+        # scenario; the device axis stays inside the kernel block), so no
+        # (N, d, Q) gathered stack ever materializes in XLA
+        w = jnp.full((d,), 1.0 / d, jnp.float32)
+        return (
+            kernel_ops.gather_combine(subset_grads, subsets, w, backend=cfg.backend),
+            subsets,
+        )
+    return _encode(cfg, subset_grads[subsets]), subsets
 
 
 @functools.lru_cache(maxsize=256)
@@ -176,8 +182,13 @@ def make_attack_fn(cfg: ProtocolConfig) -> attack_lib.Attack:
     Both factories are lru-cached on the (hashable, frozen) config so equal
     configs return the *same function object* across calls — the identity
     the grid engine's program cache keys its compiled executables on.
+
+    On kernel backends the paper's attack menu (sign-flip, ALIE, IPM) is
+    realized as lane-batched ``(lane, q_tile)`` kernels (see
+    ``attacks.make_attack`` — incl. the measured interpret-mode scope note:
+    collusion attacks ride the kernels on ``backend="pallas"`` only).
     """
-    return dataclasses.replace(cfg.attack, n_byz=cfg.n_byz).make()
+    return dataclasses.replace(cfg.attack, n_byz=cfg.n_byz).make(backend=cfg.backend)
 
 
 def protocol_round(

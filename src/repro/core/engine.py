@@ -35,6 +35,9 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
 
 from repro.core.byzantine import (
     ProtocolConfig,
@@ -378,6 +381,24 @@ def _finalize_program(loss_fn, takes_data, has_x_star):
     return finalize
 
 
+def _pad_lanes(tree: Any, pad: int) -> Any:
+    """Append ``pad`` copies of the last lane to every leaf's leading axis.
+
+    Replicated real lanes (not zeros): padding exists only to reach a
+    device-divisible lane count, and a replica is guaranteed to run the
+    exact math of a real lane — no risk of degenerate inputs (zero data,
+    zero keys) tripping NaN paths in a lane that is sliced off anyway.
+    """
+    if pad == 0:
+        return tree
+    return jax.tree.map(
+        lambda v: jnp.concatenate(
+            [v, jnp.broadcast_to(v[-1:], (pad,) + v.shape[1:])], axis=0
+        ),
+        tree,
+    )
+
+
 def _branch_select(branches, ids):
     """One callable from a static branch table: direct call when the table is
     a singleton, else a per-lane ``lax.switch`` on the traced branch id."""
@@ -415,6 +436,8 @@ def run_grid(
     loss_fn: Callable[[Any, Any], jax.Array] | None = None,
     x_star: jax.Array | None = None,
     x0_batched: bool = False,
+    shard: str = "none",
+    max_lanes_per_device: int | None = None,
 ) -> TrajectoryResult:
     """Run a whole *batch of trajectories* as ONE compiled on-device program.
 
@@ -459,6 +482,31 @@ def run_grid(
       optimizer / grad_scale: as in ``run_trajectory`` (shared).
       loss_fn: optional ``(data_lane, x) -> scalar`` per-round metric hook.
       x_star: optional shared ``(Q,)`` solution for the ``sol_err`` metric.
+      shard: device sharding of the scenario-lane axis —
+
+        * ``"none"``      — single-device vmap (the default; exactly the
+          pre-sharding path);
+        * ``"shard_map"``  — the lane axis is partitioned over every visible
+          device with ``jax.experimental.shard_map`` (each device runs the
+          identical vmapped scan on its lane shard; one jitted program);
+        * ``"pmap"``      — the same partition via ``jax.pmap`` (per-device
+          replica dispatch; kept as the second substrate / cross-check).
+
+        Lane counts are padded up to a multiple of ``jax.device_count()``
+        by replicating the last lane; padded lanes are sliced off before
+        returning, so results are shape-identical to ``shard="none"`` and
+        every real lane is bitwise equal to its unsharded value at the
+        clean simulation scales (see README "Engine guarantees").  On a
+        1-device host every mode degenerates to the unsharded math, so CPU
+        CI exercises the multi-device path with
+        ``--xla_force_host_platform_device_count=8``.
+      max_lanes_per_device: optional streaming chunk size: the sweep runs in
+        chunks of ``max_lanes_per_device * device_count`` lanes, bounding
+        device memory for 1000+-lane sweeps.  Every chunk (including the
+        padded tail chunk) has the same lane count, so all chunks share ONE
+        compiled program — a warm chunked sweep still makes zero compiles.
+        Results are concatenated in lane order; also valid with
+        ``shard="none"`` (chunked single-device streaming).
 
     Returns:
       A batched ``TrajectoryResult``: ``x`` has a leading ``(S,)`` lane axis
@@ -489,6 +537,10 @@ def run_grid(
     server_branches = (
         server_branches if server_branches is not None else (make_server_fn(cfg),)
     )
+    if shard not in ("none", "pmap", "shard_map"):
+        raise ValueError(f"unknown shard mode {shard!r}")
+    if max_lanes_per_device is not None and max_lanes_per_device < 1:
+        raise ValueError(f"max_lanes_per_device must be >= 1, got {max_lanes_per_device}")
     lr_batched = not callable(lr) and getattr(jnp.asarray(lr), "ndim", 0) == 1
     axes_sig = (
         lr_batched,
@@ -508,14 +560,49 @@ def run_grid(
         lr if callable(lr) else None,
         optimizer,
         axes_sig,
+        shard,
     )
     # a shared schedule rides the closure; numeric lr is a traced f32 operand
     # exactly as in run_trajectory (bit-exactness across modes)
     lr_arg = 0.0 if callable(lr) else jnp.asarray(lr, jnp.float32)
-    x, metrics = program(
+    operands = (
         keys, lr_arg, attack_ids, server_ids, data, x0, x_star,
         jnp.float32(grad_scale),
     )
+    lane_axes = (True,) + axes_sig[:5] + (False, False)  # which operands carry lanes
+    n_lanes = int(keys.shape[0])
+    devs = jax.device_count() if shard != "none" else 1
+    if max_lanes_per_device is None:
+        chunk = -(-n_lanes // devs) * devs  # pad up to a device multiple
+    else:
+        chunk = max_lanes_per_device * devs
+    outs = []
+    for start in range(0, n_lanes, chunk):
+        take = min(chunk, n_lanes - start)
+        if start == 0 and take == n_lanes == chunk:
+            chunk_ops = operands  # whole sweep, no padding: the as-is path
+        else:
+            chunk_ops = tuple(
+                _pad_lanes(
+                    jax.tree.map(lambda v: v[start : start + take], op),
+                    chunk - take,
+                )
+                if lanes
+                else op
+                for op, lanes in zip(operands, lane_axes)
+            )
+        x, metrics = program(*chunk_ops)
+        if take < chunk:  # drop the replicated padding lanes
+            x = jax.tree.map(lambda v: v[:take], x)
+            metrics = {k: v[:take] for k, v in metrics.items()}
+        outs.append((x, metrics))
+    if len(outs) == 1:
+        x, metrics = outs[0]
+    else:
+        x = jax.tree.map(lambda *vs: jnp.concatenate(vs, axis=0), *[o[0] for o in outs])
+        metrics = {
+            k: jnp.concatenate([o[1][k] for o in outs], axis=0) for k in outs[0][1]
+        }
     return TrajectoryResult(x=x, metrics=metrics)
 
 
@@ -530,17 +617,25 @@ def _grid_program(
     lr_schedule,
     optimizer: str,
     axes_sig: tuple,
+    shard: str = "none",
 ):
     """Build (and cache) the jitted vmapped-scan program for one bucket.
 
     The cache key is entirely static structure: config, scan length, branch
     *function identities* (stable across calls via the lru-cached
-    ``make_attack_fn``/``make_server_fn``), the gradient/loss callables and
-    the batching signature.  All numeric inputs — keys, lr, branch ids,
-    problem data, x0, x_star, grad_scale — are runtime operands, so repeated
-    sweeps (figure drivers, notebooks, parameter studies) reuse the compiled
-    executable: a warm whole-grid sweep makes zero compilations and zero
-    per-scenario dispatches.
+    ``make_attack_fn``/``make_server_fn``), the gradient/loss callables, the
+    batching signature and the shard mode.  All numeric inputs — keys, lr,
+    branch ids, problem data, x0, x_star, grad_scale — are runtime operands,
+    so repeated sweeps (figure drivers, notebooks, parameter studies) reuse
+    the compiled executable: a warm whole-grid sweep makes zero compilations
+    and zero per-scenario dispatches — sharded or not.
+
+    ``shard="shard_map"`` wraps the SAME vmapped lane program in a
+    ``shard_map`` over a 1-D ``("lanes",)`` device mesh (lane-carrying
+    operands partitioned, shared operands replicated); ``shard="pmap"``
+    reshapes the lane axis to ``(devices, lanes_per_device)`` and dispatches
+    per-device replicas.  Both reuse ``one_lane`` verbatim, which is what
+    keeps sharded lanes bitwise equal to the unsharded grid.
     """
     (lr_batched, has_attack_ids, has_server_ids, data_batched,
      x0_batched, has_x_star) = axes_sig
@@ -586,12 +681,45 @@ def _grid_program(
         None,  # x_star: shared solution (sol_err metric)
         None,  # grad_scale: shared runtime operand (see run_trajectory)
     )
+    vmapped = jax.vmap(one_lane, in_axes=in_axes)
 
-    @jax.jit
-    def grid(keys, lr, attack_ids, server_ids, data, x0, x_star, gs_op):
-        return jax.vmap(one_lane, in_axes=in_axes)(
-            keys, lr, attack_ids, server_ids, data, x0, x_star, gs_op
+    if shard == "none":
+        return jax.jit(vmapped)
+
+    if shard == "shard_map":
+        mesh = Mesh(np.array(jax.devices()), ("lanes",))
+        in_specs = tuple(
+            PartitionSpec("lanes") if ax == 0 else PartitionSpec()
+            for ax in in_axes
         )
+        # check_rep off: every output is lane-partitioned, there is nothing
+        # replicated for the static checker to prove — and the checker has no
+        # rules for some of the primitives the round body uses
+        return jax.jit(
+            shard_map(
+                vmapped,
+                mesh=mesh,
+                in_specs=in_specs,
+                out_specs=PartitionSpec("lanes"),
+                check_rep=False,
+            )
+        )
+
+    # shard == "pmap": per-device replica dispatch of the same lane program.
+    devs = jax.device_count()
+    pm = jax.pmap(vmapped, in_axes=in_axes)
+
+    def grid(*args):
+        split = tuple(
+            jax.tree.map(
+                lambda v: v.reshape((devs, v.shape[0] // devs) + v.shape[1:]), a
+            )
+            if ax == 0
+            else a
+            for a, ax in zip(args, in_axes)
+        )
+        out = pm(*split)
+        return jax.tree.map(lambda v: v.reshape((-1,) + v.shape[2:]), out)
 
     return grid
 

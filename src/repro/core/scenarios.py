@@ -43,6 +43,7 @@ from repro.data.synthetic import linear_regression_problem, linreg_loss, linreg_
 __all__ = [
     "Scenario",
     "section7_grid",
+    "synthetic_sweep",
     "scenario_name",
     "PAPER_FIG4",
     "PAPER_FIG5",
@@ -285,6 +286,8 @@ def _run_bucket(
     seed: int,
     problem,
     dim: int,
+    shard: str = "none",
+    max_lanes_per_device: int | None = None,
 ) -> dict[str, TrajectoryResult]:
     """One compile bucket -> one vmapped ``engine.run_grid`` call."""
     tmpl = group[0].protocol()
@@ -336,6 +339,8 @@ def _run_bucket(
         # the engine's aggregate estimates (1/N) grad F; eq. (7) steps on F
         grad_scale=float(tmpl.n_devices),
         loss_fn=_grid_loss,
+        shard=shard,
+        max_lanes_per_device=max_lanes_per_device,
     )
     return {s.name: res.lane(i) for i, s in enumerate(group)}
 
@@ -359,6 +364,8 @@ def run_grid(
     dim: int = 100,
     mode: str = "grid",
     exact: bool = True,
+    shard: str = "none",
+    max_lanes_per_device: int | None = None,
 ) -> dict[str, TrajectoryResult]:
     """Sweep scenarios through the engine; returns ``{name: TrajectoryResult}``
     in input order (use ``grid_finals`` for the final-metric summary).
@@ -386,11 +393,27 @@ def run_grid(
     XLA bucket: zero per-scenario dispatches on a warm sweep, every lane
     bitwise equal to its standalone trajectory.
 
+    ``shard="pmap"``/``"shard_map"`` partitions every compile bucket's lane
+    axis over the visible devices (lane counts padded to a device multiple;
+    see ``engine.run_grid``), and ``max_lanes_per_device`` streams a large
+    bucket through equal-sized chunks of one cached program — together they
+    are what makes 1000+-row sweeps practical.  Both keep every lane bitwise
+    equal to the unsharded grid at the clean simulation scales.
+
     ``mode="scan"`` / ``mode="loop"`` fall back to one ``run_scenario`` call
     per row (the bit-exactness references).
     """
     scns = list(scenarios)
     if mode in ("scan", "loop"):
+        if shard != "none" or max_lanes_per_device is not None:
+            # the per-scenario reference paths have no lane axis to shard;
+            # silently dropping the flags would hand back an unsharded
+            # "reference" timing that was never sharded in the first place
+            raise ValueError(
+                f"shard={shard!r} / max_lanes_per_device="
+                f"{max_lanes_per_device!r} are grid-mode options; "
+                f"mode={mode!r} dispatches per scenario"
+            )
         return {
             s.name: run_scenario(s, steps, seed=seed, problem=problem, dim=dim, mode=mode)
             for s in scns
@@ -402,8 +425,59 @@ def run_grid(
         buckets.setdefault(_bucket_signature(s, exact=exact), []).append(s)
     out: dict[str, TrajectoryResult] = {}
     for group in buckets.values():
-        out.update(_run_bucket(group, steps, seed=seed, problem=problem, dim=dim))
+        out.update(
+            _run_bucket(
+                group, steps, seed=seed, problem=problem, dim=dim,
+                shard=shard, max_lanes_per_device=max_lanes_per_device,
+            )
+        )
     return {s.name: out[s.name] for s in scns}
+
+
+def synthetic_sweep(
+    n_rows: int,
+    *,
+    method: str = "lad",
+    d: int = 4,
+    aggregator: str = "cwtm",
+    n_devices: int = 16,
+    n_byz: int = 3,
+    attacks: Sequence[str] = ("sign_flip", "alie", "ipm"),
+    compressor: str = "none",
+    base_lr: float = 1e-5,
+    backend: str = "xla",
+) -> list[Scenario]:
+    """A single-compile-bucket scenario list of arbitrary size — the workload
+    of the sharded-grid scaling studies (1000+-row sweeps).
+
+    Every row shares the full static protocol structure (method, d, N,
+    compressor, backend, aggregator), so the whole sweep rides ONE vmapped
+    program however long it is; rows vary only along the traced axes — the
+    attack (cycled), the learning rate and the data's heterogeneity level
+    (both swept densely), so every lane is a distinct trajectory.
+    """
+    if n_rows < 1:
+        raise ValueError(f"n_rows must be >= 1, got {n_rows}")
+    rows = []
+    for i in range(n_rows):
+        frac = i / max(1, n_rows - 1)
+        attack = attacks[i % len(attacks)]
+        rows.append(
+            Scenario(
+                name=f"syn{i:05d}/{attack}",
+                method=method,
+                d=d,
+                aggregator=aggregator,
+                attack=attack,
+                n_byz=n_byz,
+                compressor=compressor,
+                sigma_h=round(0.05 + 0.45 * frac, 6),
+                n_devices=n_devices,
+                lr=base_lr * (0.5 + frac),
+                backend=backend,
+            )
+        )
+    return rows
 
 
 def grid_finals(results: dict[str, TrajectoryResult]) -> dict[str, dict[str, float]]:

@@ -55,3 +55,66 @@ def coded_combine_pallas(
     return coded_combine_pallas_lanes(
         grads[None], weights[None], q_block=q_block, interpret=interpret
     )[0]
+
+
+def _gather_combine_kernel(grads_ref, subsets_ref, w_ref, out_ref):
+    g = grads_ref[0].astype(jnp.float32)  # (N, q_block): all subset grads
+    s = subsets_ref[0]  # (N, d) int32: per-device subset ids
+    w = w_ref[0].astype(jnp.float32)  # (d,)
+    # gather every device's d subset rows, then the eq.-(5) weighted combine
+    # — the same "dq,d" contraction as _combine_kernel, batched over devices
+    out_ref[0] = jnp.einsum("ndq,d->nq", g[s], w).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("q_block", "interpret"))
+def gather_combine_pallas_lanes(
+    grads: jax.Array,
+    subsets: jax.Array,
+    weights: jax.Array,
+    q_block: int = 2048,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused assignment gather + eq.-(5) combine, lane-batched.
+
+    grads: (L, N, Q) subset-gradient stacks, subsets: (L, N, d) int32 per-
+    device subset ids (the cyclic/fractional-repetition task assignment),
+    weights: (L, d) -> (L, N, Q) coded vectors.
+
+    Before this kernel the grid engine materialized the gathered
+    ``(S, N, d, Q)`` stack in XLA and only the combine ran on the kernel
+    lane path; fusing the gather keeps the whole encode stage lane-resident
+    (one launch over the ``(lane, q_tile)`` grid — here a lane is one
+    *scenario*; the device axis stays inside the block because the gather
+    indexes across all N subset rows).
+    """
+    lanes, n, q = grads.shape
+    d = subsets.shape[-1]
+    assert subsets.shape == (lanes, n, d), (subsets.shape, grads.shape)
+    assert weights.shape == (lanes, d), (weights.shape, subsets.shape)
+    q_block = min(q_block, q)
+    assert q % q_block == 0, (q, q_block)
+    return pl.pallas_call(
+        _gather_combine_kernel,
+        grid=(lanes, q // q_block),
+        in_specs=[
+            pl.BlockSpec((1, n, q_block), lambda l, i: (l, 0, i)),
+            pl.BlockSpec((1, n, d), lambda l, i: (l, 0, 0)),
+            pl.BlockSpec((1, d), lambda l, i: (l, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, q_block), lambda l, i: (l, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((lanes, n, q), grads.dtype),
+        interpret=interpret,
+    )(grads, subsets, weights)
+
+
+def gather_combine_pallas(
+    grads: jax.Array,
+    subsets: jax.Array,
+    weights: jax.Array,
+    q_block: int = 2048,
+    interpret: bool = True,
+) -> jax.Array:
+    """grads: (N, Q), subsets: (N, d), weights: (d,) -> (N, Q) — the L=1 lane."""
+    return gather_combine_pallas_lanes(
+        grads[None], subsets[None], weights[None], q_block=q_block, interpret=interpret
+    )[0]

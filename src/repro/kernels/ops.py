@@ -33,7 +33,11 @@ import jax.numpy as jnp
 from jax.custom_batching import custom_vmap
 
 from repro.kernels import ref
-from repro.kernels.coded_combine import coded_combine_pallas_lanes
+from repro.kernels.attacks import attack_pallas_lanes
+from repro.kernels.coded_combine import (
+    coded_combine_pallas_lanes,
+    gather_combine_pallas_lanes,
+)
 from repro.kernels.cwtm import cwtm_pallas_lanes
 from repro.kernels.nnm_dist import gram_pallas_lanes
 from repro.kernels.quantize import stochastic_quantize_pallas_lanes
@@ -153,6 +157,24 @@ def _gram_fns(q_block: int, interpret: bool):
     )
 
 
+@functools.lru_cache(maxsize=None)
+def _gather_combine_fns(q_block: int, interpret: bool):
+    return _lane_vmap_pair(
+        lambda g, s, w: gather_combine_pallas_lanes(
+            g, s, w, q_block=q_block, interpret=interpret
+        )
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _attack_fns(name: str, param: float, q_block: int, interpret: bool):
+    return _lane_vmap_pair(
+        lambda m, mk: attack_pallas_lanes(
+            m, mk, name, param, q_block=q_block, interpret=interpret
+        )
+    )
+
+
 def _flatten_lanes(x: jax.Array, event_ndim: int):
     """Collapse all leading lane axes of ``x`` down to one."""
     lead = x.shape[: x.ndim - event_ndim]
@@ -214,6 +236,62 @@ def stochastic_quantize(
     uf, _ = _flatten_lanes(up, 1)
     out = _quantize_fns(levels, qb, _interp(backend))[1](gf, uf)
     return out.reshape(lead + out.shape[-1:])[..., :q]
+
+
+def gather_combine(
+    grads: jax.Array,
+    subsets: jax.Array,
+    weights: jax.Array,
+    backend: str = DEFAULT_BACKEND,
+    q_block: int = 2048,
+) -> jax.Array:
+    """Fused assignment gather + eq.-(5) combine: every device's ``d``
+    assigned subset gradients are gathered and weight-combined in ONE
+    lane-batched launch.  grads: (..., N, Q), subsets: (..., N, d) int32,
+    weights: (d,) or (..., d) -> (..., N, Q) coded vectors."""
+    if backend == "xla":
+        return ref.gather_combine_ref(grads, subsets, weights)
+    q = grads.shape[-1]
+    qb = _tile(q, q_block)
+    padded = _pad_last(grads, qb)
+    if grads.ndim == 2:
+        return _gather_combine_fns(qb, _interp(backend))[0](
+            padded, subsets, weights
+        )[:, :q]
+    flat, lead = _flatten_lanes(padded, 2)
+    flat_s, _ = _flatten_lanes(jnp.broadcast_to(subsets, lead + subsets.shape[-2:]), 2)
+    w = jnp.broadcast_to(weights, lead + weights.shape[-1:]).reshape(
+        (flat.shape[0],) + weights.shape[-1:]
+    )
+    out = _gather_combine_fns(qb, _interp(backend))[1](flat, flat_s, w)
+    return out.reshape(lead + out.shape[-2:])[..., :q]
+
+
+def attack(
+    msgs: jax.Array,
+    mask: jax.Array,
+    name: str,
+    param: float,
+    backend: str = DEFAULT_BACKEND,
+    q_block: int = 2048,
+) -> jax.Array:
+    """Byzantine attack construction (sign_flip / alie / ipm) as one
+    lane-batched launch.  msgs: (..., N, Q), mask: (..., N) 0/1 Byzantine
+    indicator -> (..., N, Q) transmitted stacks; ``param`` is the attack's
+    scalar knob (coeff / z / eps).  The collusion attacks' honest mean and
+    variance reduce over ``N`` *inside* the kernel with the same fixed-tree
+    sums as the XLA attacks in ``core/attacks.py``."""
+    if backend == "xla":
+        return ref.attack_ref(msgs, mask, name, param)
+    q = msgs.shape[-1]
+    qb = _tile(q, q_block)
+    padded = _pad_last(msgs, qb)
+    if msgs.ndim == 2:
+        return _attack_fns(name, param, qb, _interp(backend))[0](padded, mask)[:, :q]
+    flat, lead = _flatten_lanes(padded, 2)
+    flat_mask, _ = _flatten_lanes(jnp.broadcast_to(mask, lead + mask.shape[-1:]), 1)
+    out = _attack_fns(name, param, qb, _interp(backend))[1](flat, flat_mask)
+    return out.reshape(lead + out.shape[-2:])[..., :q]
 
 
 def pairwise_sqdist(msgs: jax.Array, backend: str = DEFAULT_BACKEND, q_block: int = 2048) -> jax.Array:

@@ -10,6 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.numerics import tree_sum
+
 
 def cwtm_ref(msgs: jax.Array, trim: int) -> jax.Array:
     """Coordinate-wise trimmed mean.  msgs: (..., N, Q) -> (..., Q)."""
@@ -45,6 +47,53 @@ def stochastic_quantize_ref(
     yq = lo + (uc < (y - lo)).astype(jnp.float32)
     out = jnp.where(scale > 0, yq / levels * safe, 0.0)
     return out.reshape(g.shape).astype(g.dtype)
+
+
+def gather_combine_ref(
+    grads: jax.Array, subsets: jax.Array, weights: jax.Array
+) -> jax.Array:
+    """Fused assignment gather + eq.-(5) combine.
+
+    grads: (..., N, Q), subsets: (..., N, d) int32, weights: (d,) or
+    (..., d) -> (..., N, Q) coded vectors.
+    """
+    gathered = jnp.take_along_axis(
+        grads[..., None, :], subsets[..., :, :, None], axis=-3
+    )  # (..., N, d, Q)
+    return jnp.einsum(
+        "...ndq,...d->...nq",
+        gathered.astype(jnp.float32),
+        jnp.broadcast_to(weights, subsets.shape[:-2] + weights.shape[-1:]).astype(
+            jnp.float32
+        ),
+    ).astype(grads.dtype)
+
+
+def _honest_stats_ref(msgs: jax.Array, mask: jax.Array):
+    """(..., N, Q) msgs + (..., N) mask -> honest weights / count / mean,
+    in the fixed-tree forms of ``core/attacks.py`` (bitwise parity with the
+    attack kernels and the XLA attacks)."""
+    honest_w = (1.0 - mask)[..., :, None]
+    h = jnp.maximum(tree_sum(1.0 - mask, axis=-1), 1.0)[..., None]
+    mu = tree_sum(msgs * honest_w, axis=-2) / h
+    return honest_w, h, mu
+
+
+def attack_ref(msgs: jax.Array, mask: jax.Array, name: str, param: float) -> jax.Array:
+    """Lane-generic oracle for the attack kernels.  msgs: (..., N, Q),
+    mask: (..., N) -> (..., N, Q) transmitted."""
+    byz = mask[..., :, None] > 0
+    if name == "sign_flip":
+        return jnp.where(byz, param * msgs, msgs)
+    if name == "alie":
+        honest_w, h, mu = _honest_stats_ref(msgs, mask)
+        var = tree_sum(((msgs - mu[..., None, :]) ** 2) * honest_w, axis=-2) / h
+        adv = mu - param * jnp.sqrt(var + 1e-12)
+        return jnp.where(byz, adv[..., None, :], msgs)
+    if name == "ipm":
+        _, _, mu = _honest_stats_ref(msgs, mask)
+        return jnp.where(byz, (-param * mu)[..., None, :], msgs)
+    raise KeyError(f"no kernel attack {name!r}")
 
 
 def pairwise_sqdist_ref(msgs: jax.Array) -> jax.Array:

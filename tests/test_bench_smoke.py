@@ -48,3 +48,43 @@ def test_grid_timing_smoke():
     assert "smoke_kernel_grid_vmapped_warm" in names
     for name, _, value in rows:
         assert value > 0, (name, value)
+
+
+def test_grid_sharded_smoke_and_json_schema():
+    """The sharded-sweep bench runs shard="shard_map" (chunked) at tiny
+    shapes — with its bitwise + zero-compile assertions — and its JSON
+    validates."""
+    payload = bench_smoke.smoke_grid_sharded()
+    bench_smoke.validate_grid_sharded_json(payload)  # idempotent re-check
+    assert payload["shard"] == "shard_map"
+    names = {r["name"] for r in payload["rows"]}
+    assert "grid1k_sharded_chunked_warm" in names
+    assert "grid1k_unsharded_warm" in names
+
+
+def test_validate_grid_sharded_json_rejects_drift():
+    def base():
+        return {
+            "schema_version": 1, "device_count": 1, "shard": "shard_map",
+            "lanes": 6, "max_lanes_per_device": 2, "steps": 3,
+            "n_devices": 10, "dim": 12,
+            "rows": [
+                {"name": f"x_{suffix}", "lanes": 6, "value": 1.0}
+                for suffix in ("unsharded_warm", "sharded_warm",
+                               "sharded_chunked_warm",
+                               "speedup_warm_sharded_vs_unsharded")
+            ],
+        }
+
+    bench_smoke.validate_grid_sharded_json(base())
+    for breakage in (
+        {"schema_version": 999},
+        {"shard": "gspmd"},
+        {"device_count": 0},
+        {"rows": []},
+        {"rows": base()["rows"][:1]},  # missing required row names
+        {"rows": base()["rows"] + [{"name": "y", "lanes": 6}]},  # bad keys
+    ):
+        bad = {**base(), **breakage}
+        with pytest.raises(AssertionError):
+            bench_smoke.validate_grid_sharded_json(bad)

@@ -222,6 +222,85 @@ def test_nested_vmap_folds_into_one_lane_axis(key):
     np.testing.assert_array_equal(np.asarray(nested), np.asarray(flat.reshape(s, n, q)))
 
 
+# ------------------------------------- attack + gather_combine lane kernels
+
+
+@pytest.mark.parametrize("lanes,q,q_block", LANE_CASES)
+def test_gather_combine_batched_vs_single_bitwise(lanes, q, q_block, key):
+    """Fused gather+combine: lane-batched == per-lane single == xla oracle
+    (the gather only permutes rows; the combine math is the coded_combine
+    contraction, exact on zero-padded columns)."""
+    n, d = 9, 3
+    grads = jax.random.normal(key, (lanes, n, q))
+    subsets = jax.random.randint(jax.random.fold_in(key, 1), (lanes, n, d), 0, n)
+    w = jnp.full((d,), 1.0 / d, jnp.float32)
+    out = ops.gather_combine(grads, subsets, w, backend="interpret", q_block=q_block)
+    want = jnp.stack(
+        [ops.gather_combine(grads[i], subsets[i], w, backend="interpret", q_block=q_block)
+         for i in range(lanes)]
+    )
+    assert out.shape == (lanes, n, q)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ops.gather_combine(grads, subsets, w, backend="xla"))
+    )
+
+
+@pytest.mark.parametrize("name,param", [("sign_flip", -2.0), ("alie", 1.5), ("ipm", 0.5)])
+def test_attack_kernels_batched_vs_single_and_core(name, param, key):
+    """Attack kernels: lane-batched == per-lane single BITWISE; the xla ref
+    equals the core/attacks.py implementation BITWISE; interpret vs xla is
+    exact for the elementwise sign_flip and 1-ulp for the collusion attacks
+    (residual fma discretion in the mu/var/sqrt chain — the engine guarantee
+    only needs each backend consistent with itself across program shapes)."""
+    from repro.core import attacks as attack_lib
+
+    lanes, n, q = 3, 10, 133
+    msgs = jax.random.normal(key, (lanes, n, q))
+    mask = (jnp.arange(n) < 3).astype(jnp.float32)
+    masks = jnp.broadcast_to(mask, (lanes, n))
+    out = ops.attack(msgs, masks, name, param, backend="interpret", q_block=64)
+    want = jnp.stack(
+        [ops.attack(msgs[i], masks[i], name, param, backend="interpret", q_block=64)
+         for i in range(lanes)]
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    xla = ops.attack(msgs, masks, name, param, backend="xla")
+    core_fn = {"sign_flip": attack_lib.sign_flip, "alie": attack_lib.alie,
+               "ipm": attack_lib.ipm}[name]
+    core = jnp.stack([core_fn(key, msgs[i], mask, param) for i in range(lanes)])
+    np.testing.assert_array_equal(np.asarray(xla), np.asarray(core))
+    if name == "sign_flip":
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(xla))
+    else:
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(xla), rtol=2e-7, atol=1e-7
+        )
+
+
+def test_attack_and_gather_vmap_fold_onto_lane_axis(key):
+    """vmap (and scenario x nothing nesting) of the new wrappers must land on
+    the lane-batched kernels bitwise — the grid engine's vmap contract."""
+    lanes, n, d, q = 3, 8, 4, 150
+    msgs = jax.random.normal(key, (lanes, n, q))
+    masks = jnp.broadcast_to((jnp.arange(n) < 2).astype(jnp.float32), (lanes, n))
+    np.testing.assert_array_equal(
+        np.asarray(jax.vmap(
+            lambda m, mk: ops.attack(m, mk, "alie", 1.5, backend="interpret", q_block=64)
+        )(msgs, masks)),
+        np.asarray(ops.attack(msgs, masks, "alie", 1.5, backend="interpret", q_block=64)),
+    )
+    grads = jax.random.normal(key, (lanes, n, q))
+    subsets = jax.random.randint(jax.random.fold_in(key, 1), (lanes, n, d), 0, n)
+    w = jnp.full((d,), 1.0 / d, jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(jax.vmap(
+            lambda g, s: ops.gather_combine(g, s, w, backend="interpret", q_block=64)
+        )(grads, subsets)),
+        np.asarray(ops.gather_combine(grads, subsets, w, backend="interpret", q_block=64)),
+    )
+
+
 # ------------------------------------------------------------- DRACO decoding
 
 

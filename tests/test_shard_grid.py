@@ -1,0 +1,184 @@
+"""Device-sharded grid engine: bitwise lane parity + padding/chunking edges.
+
+Every test here is *device-count generic*: tier-1 runs them on the 1 real CPU
+device (where the sharded paths must still degenerate to the unsharded math
+bitwise), and the CI determinism job re-runs the same tests under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the lane padding,
+per-device partitioning and cross-device program shapes are exercised for
+real.  The parity scales are the clean ones of the engine guarantee
+(N = 10/16/32 — see README "Engine guarantees" and repro/numerics.py).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ProtocolConfig, engine, scenarios
+from repro.core.attacks import AttackSpec
+from repro.data.synthetic import linreg_loss, linreg_subset_grads
+
+STEPS, DIM = 5, 12
+SHARDS = ("shard_map", "pmap")
+
+
+def _match(got, ref):
+    for name, r in ref.items():
+        g = got[name]
+        np.testing.assert_array_equal(
+            np.asarray(g.x), np.asarray(r.x), err_msg=f"{name}: x"
+        )
+        assert sorted(g.metrics) == sorted(r.metrics)
+        for k in r.metrics:
+            np.testing.assert_array_equal(
+                np.asarray(g.metrics[k]), np.asarray(r.metrics[k]),
+                err_msg=f"{name}: {k}",
+            )
+
+
+@pytest.mark.parametrize("n", (10, 16, 32))
+def test_sharded_bitwise_vs_unsharded_and_standalone(n):
+    """Both shard modes must reproduce every lane of the unsharded grid
+    BITWISE, and the grid itself its standalone per-scenario trajectories —
+    with a lane count (5) not divisible by any multi-device count, so the
+    device-padding path is always exercised."""
+    rows = scenarios.synthetic_sweep(5, n_devices=n, n_byz=2)
+    ref = scenarios.run_grid(rows, STEPS, dim=DIM)
+    _match(ref, scenarios.run_grid(rows, STEPS, dim=DIM, mode="scan"))
+    for shard in SHARDS:
+        _match(scenarios.run_grid(rows, STEPS, dim=DIM, shard=shard), ref)
+
+
+def test_sharded_kernel_backend_bitwise():
+    """The fully lane-resident kernel round body (gather_combine + attack
+    kernels + cwtm) under shard_map, bitwise vs the unsharded kernel grid."""
+    rows = scenarios.synthetic_sweep(3, n_devices=10, n_byz=2, backend="interpret")
+    ref = scenarios.run_grid(rows, STEPS, dim=DIM)
+    _match(ref, scenarios.run_grid(rows, STEPS, dim=DIM, mode="scan"))
+    _match(scenarios.run_grid(rows, STEPS, dim=DIM, shard="shard_map"), ref)
+
+
+def test_chunked_streaming_bitwise():
+    """max_lanes_per_device streams the sweep through equal-sized chunks of
+    one program; every chunk size (down to 1 lane per device) must
+    concatenate back to the unchunked result bitwise — sharded or not."""
+    rows = scenarios.synthetic_sweep(5, n_devices=10, n_byz=2)
+    ref = scenarios.run_grid(rows, STEPS, dim=DIM)
+    for mlpd in (1, 2):
+        _match(
+            scenarios.run_grid(
+                rows, STEPS, dim=DIM, shard="shard_map", max_lanes_per_device=mlpd
+            ),
+            ref,
+        )
+    _match(
+        scenarios.run_grid(rows, STEPS, dim=DIM, max_lanes_per_device=2), ref
+    )  # chunked single-device streaming (shard="none")
+
+
+def test_single_lane_bucket_under_shard_map():
+    """A 1-lane bucket pads up to the full device count and still matches
+    its standalone trajectory bitwise."""
+    rows = scenarios.synthetic_sweep(1, n_devices=16, n_byz=3)
+    ref = scenarios.run_grid(rows, STEPS, dim=DIM, mode="scan")
+    for shard in SHARDS:
+        _match(scenarios.run_grid(rows, STEPS, dim=DIM, shard=shard), ref)
+
+
+def test_sharded_warm_zero_compiles_zero_dispatch(monkeypatch):
+    """A warm sharded+chunked section7_grid() sweep must make zero
+    per-scenario dispatches and zero grid-program cache misses — the
+    lru-cached one-program-per-bucket contract extends to the sharded path
+    (multiple compile buckets included: method x compressor stay separate
+    programs, each sharded)."""
+    rows = [
+        dataclasses.replace(s, n_devices=16, n_byz=3, lr=1e-5)
+        for s in scenarios.section7_grid(
+            methods=(("plain", 1), ("lad", 4)), attacks=("sign_flip", "alie"),
+            compressors=("none",),
+        )
+    ]
+    assert len({scenarios._bucket_signature(s) for s in rows}) == 2
+    kw = dict(dim=DIM, shard="shard_map", max_lanes_per_device=2)
+    scenarios.run_grid(rows, STEPS, **kw)  # cold: compiles + caches
+    misses0 = engine._grid_program.cache_info().misses
+
+    def _boom(*a, **k):  # any per-scenario dispatch would be a regression
+        raise AssertionError("run_grid(mode='grid') dispatched per-scenario")
+
+    monkeypatch.setattr(scenarios, "run_scenario", _boom)
+    scenarios.run_grid(rows, STEPS, **kw)  # warm
+    assert engine._grid_program.cache_info().misses == misses0
+
+
+def test_engine_level_sharded_axes(key):
+    """Direct engine.run_grid under shard: batched x0 + batched lr + shared
+    data (the axis combinations scenarios.run_grid never produces) must
+    match the unsharded call bitwise, including with a non-divisible lane
+    count (3)."""
+    from repro.data.synthetic import linear_regression_problem
+
+    n = 10
+    z, y = linear_regression_problem(key, n=n, dim=DIM, sigma_h=0.3)
+    cfg = ProtocolConfig(n_devices=n, d=4, aggregator="cwtm", trim_frac=0.2,
+                         n_byz=2, attack=AttackSpec("sign_flip", n_byz=2))
+    keys = jnp.stack([jax.random.fold_in(key, i) for i in range(3)])
+    x0 = jnp.stack([jnp.zeros((DIM,)), jnp.ones((DIM,)), 0.5 * jnp.ones((DIM,))])
+    kw = dict(
+        steps=STEPS,
+        lr=jnp.array([1e-6, 2e-6, 0.0]),
+        data=(z, y),
+        data_batched=False,
+        x0_batched=True,
+        grad_scale=float(n),
+        loss_fn=_shared_loss,
+    )
+    ref = engine.run_grid(cfg, keys, x0, _shared_grads, **kw)
+    for shard in SHARDS:
+        got = engine.run_grid(cfg, keys, x0, _shared_grads, shard=shard, **kw)
+        np.testing.assert_array_equal(np.asarray(got.x), np.asarray(ref.x))
+        for k in ref.metrics:
+            np.testing.assert_array_equal(
+                np.asarray(got.metrics[k]), np.asarray(ref.metrics[k]), err_msg=k
+            )
+    chunked = engine.run_grid(
+        cfg, keys, x0, _shared_grads, shard="shard_map", max_lanes_per_device=1, **kw
+    )
+    np.testing.assert_array_equal(np.asarray(chunked.x), np.asarray(ref.x))
+
+
+def _shared_grads(data, x):
+    return linreg_subset_grads(data[0], data[1], x)
+
+
+def _shared_loss(data, x):
+    return linreg_loss(data[0], data[1], x)
+
+
+def test_shard_validation():
+    rows = scenarios.synthetic_sweep(2, n_devices=10, n_byz=2)
+    with pytest.raises(ValueError, match="shard"):
+        scenarios.run_grid(rows, 2, dim=DIM, shard="gspmd")
+    with pytest.raises(ValueError, match="max_lanes_per_device"):
+        scenarios.run_grid(rows, 2, dim=DIM, max_lanes_per_device=0)
+    # the per-scenario reference modes must refuse (not silently drop) the
+    # grid-only sharding options
+    with pytest.raises(ValueError, match="grid-mode"):
+        scenarios.run_grid(rows, 2, dim=DIM, mode="scan", shard="shard_map")
+    with pytest.raises(ValueError, match="grid-mode"):
+        scenarios.run_grid(rows, 2, dim=DIM, mode="loop", max_lanes_per_device=1)
+
+
+def test_synthetic_sweep_is_single_bucket():
+    """The scaling-sweep builder must emit one compile bucket (that is its
+    whole point) with unique names and lane-distinct traced axes."""
+    rows = scenarios.synthetic_sweep(30, n_devices=16, n_byz=3)
+    sigs = {scenarios._bucket_signature(s) for s in rows}
+    assert len(sigs) == 1
+    names = [s.name for s in rows]
+    assert len(set(names)) == len(names)
+    assert len({s.attack for s in rows}) == 3
+    assert len({(s.lr, s.sigma_h) for s in rows}) == len(rows)
+    with pytest.raises(ValueError):
+        scenarios.synthetic_sweep(0)
