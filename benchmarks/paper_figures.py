@@ -188,11 +188,13 @@ def _timed_grid_rows(grid, steps, prefix):
 
 
 def _timed_sharded_rows(
-    rows_scn, steps, prefix, *, shard="shard_map", max_lanes_per_device=None,
-    dim=100, problem=None,
+    runner, n_rows, prefix, *, shard="shard_map", max_lanes_per_device=None,
 ):
     """Sharded-vs-unsharded grid wall clock + bitwise-equality check.
 
+    ``runner(**kw) -> {name: TrajectoryResult}`` is the sweep under test
+    (a ``functools.partial`` of ``scenarios.run_grid`` or
+    ``scenarios.run_lm_grid``); ``kw`` carries only the sharding options.
     Times the unsharded vmapped grid against the device-sharded grid (and,
     when ``max_lanes_per_device`` is given, the chunked streaming mode),
     asserting every lane bitwise-equal between all paths before comparing
@@ -206,7 +208,7 @@ def _timed_sharded_rows(
 
     def timed(**kw):
         t0 = time.perf_counter()
-        res = scenarios.run_grid(rows_scn, steps, dim=dim, problem=problem, **kw)
+        res = runner(**kw)
         jax.block_until_ready([r.x for r in res.values()])
         return time.perf_counter() - t0, res
 
@@ -227,7 +229,7 @@ def _timed_sharded_rows(
                 ), f"{prefix}{label}: sharded != unsharded for {name}: {k}"
 
     check(res_shard, "sharded")
-    n = len(rows_scn)
+    n = n_rows
     rows = [
         (f"{prefix}unsharded_cold", n, t_single_cold),
         (f"{prefix}unsharded_warm", n, t_single_warm),
@@ -253,9 +255,10 @@ def _timed_sharded_rows(
 
 
 GRID_SHARDED_SCHEMA_VERSION = 1
+LM_ENGINE_SCHEMA_VERSION = 1
 
 
-def write_grid_sharded_json(payload: dict, path: str) -> None:
+def _write_json(payload: dict, path: str) -> None:
     import json
     import os
 
@@ -263,6 +266,14 @@ def write_grid_sharded_json(payload: dict, path: str) -> None:
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
         f.write("\n")
+
+
+def write_grid_sharded_json(payload: dict, path: str) -> None:
+    _write_json(payload, path)
+
+
+def write_lm_engine_json(payload: dict, path: str) -> None:
+    _write_json(payload, path)
 
 
 def grid_sharded(
@@ -285,10 +296,13 @@ def grid_sharded(
     machine-readably to ``BENCH_grid_sharded.json`` (schema validated in
     tier-1 by scripts/bench_smoke.py) as well as to the figure CSV.
     """
+    import functools
+
     rows_scn = scenarios.synthetic_sweep(lanes, n_devices=n_devices, n_byz=3)
     rows = _timed_sharded_rows(
-        rows_scn, steps, "grid1k_", shard=shard,
-        max_lanes_per_device=max_lanes_per_device, dim=dim,
+        functools.partial(scenarios.run_grid, rows_scn, steps, dim=dim),
+        len(rows_scn), "grid1k_", shard=shard,
+        max_lanes_per_device=max_lanes_per_device,
     )
     payload = {
         "schema_version": GRID_SHARDED_SCHEMA_VERSION,
@@ -305,6 +319,81 @@ def grid_sharded(
         ],
     }
     write_grid_sharded_json(payload, out_path)
+    return rows
+
+
+def lm_engine(
+    steps: int = 8,
+    shard: str = "shard_map",
+    max_lanes_per_device: int = 2,
+    per_subset: int = 2,
+    seq_len: int = 16,
+    out_path: str = "benchmarks/out/BENCH_lm_engine.json",
+    rows_scn=None,
+):
+    """The LM-scale engine sweep (``scenarios.lm_sweep``: method x attack x
+    aggregator x compressor over a small transformer), device-sharded and
+    streamed through ``max_lanes_per_device``-sized chunks of one cached
+    program — the LM twin of the ``grid_sharded`` figure.
+
+    Asserts (inside ``_timed_sharded_rows``) every lane bitwise-equal between
+    the sharded, chunked and unsharded grids with zero program-cache misses
+    on the warm sweep, then additionally cross-checks the grid against the
+    per-scenario ``mode="scan"`` reference (grid == standalone, bitwise) and
+    times it.  Rows land machine-readably in ``BENCH_lm_engine.json``
+    (schema validated in tier-1 by scripts/bench_smoke.py) and in the figure
+    CSV.
+    """
+    import functools
+    import time
+
+    import numpy as np
+
+    if rows_scn is None:
+        rows_scn = scenarios.lm_sweep()
+    runner = functools.partial(
+        scenarios.run_lm_grid, rows_scn, steps, per_subset=per_subset,
+        seq_len=seq_len,
+    )
+    rows = _timed_sharded_rows(
+        runner, len(rows_scn), "lm_engine_", shard=shard,
+        max_lanes_per_device=max_lanes_per_device,
+    )
+    res_grid = runner()  # warm: reuses the cached unsharded program
+    runner(mode="scan")  # cold per-scenario pass: compiles trajectory programs
+    t0 = time.perf_counter()
+    res_scan = runner(mode="scan")
+    jax.block_until_ready([r.x for r in res_scan.values()])
+    t_scan = time.perf_counter() - t0
+    for name in res_scan:  # the conformance claim, asserted in the bench too
+        assert np.array_equal(
+            np.asarray(res_grid[name].x), np.asarray(res_scan[name].x)
+        ), f"lm_engine: grid != standalone scan for {name}"
+    rows.append(("lm_engine_per_scenario_warm", len(rows_scn), t_scan))
+    arch = scenarios.lm_arch()
+    payload = {
+        "schema_version": LM_ENGINE_SCHEMA_VERSION,
+        "device_count": jax.device_count(),
+        "shard": shard,
+        "lanes": len(rows_scn),
+        "max_lanes_per_device": max_lanes_per_device,
+        "steps": steps,
+        "n_devices": rows_scn[0].n_devices,
+        "per_subset": per_subset,
+        "seq_len": seq_len,
+        "params": int(scenarios._lm_fns(arch)[0].size),
+        "arch": {
+            "name": arch.name,
+            "n_layers": arch.n_layers,
+            "d_model": arch.d_model,
+            "vocab": arch.vocab,
+        },
+        "rows": [
+            {"name": name, "lanes": n, "value": float(value)}
+            for name, n, value in rows
+        ],
+    }
+    write_lm_engine_json(payload, out_path)
     return rows
 
 
@@ -344,9 +433,20 @@ def grid_timing(steps: int = 300, kernel_steps: int = 60):
     # device-sharded vs unsharded on a single-bucket synthetic sweep (the
     # sharded rows are the per-machine record; BENCH_grid_sharded.json from
     # the grid_sharded figure is the machine-readable 1000-row version)
+    import functools
+
+    sharded_scn = scenarios.synthetic_sweep(48, n_devices=16, n_byz=3)
     rows += _timed_sharded_rows(
-        scenarios.synthetic_sweep(48, n_devices=16, n_byz=3), 60, "sharded48_",
-        max_lanes_per_device=8, dim=32,
+        functools.partial(scenarios.run_grid, sharded_scn, 60, dim=32),
+        len(sharded_scn), "sharded48_", max_lanes_per_device=8,
+    )
+    # the sharded LM train path (transformer lanes through the engine): the
+    # per-machine cold/warm record; BENCH_lm_engine.json from the lm_engine
+    # figure is the machine-readable full-matrix version
+    lm_scn = scenarios.lm_sweep(attacks=("sign_flip", "alie"), compressors=("none",))
+    rows += _timed_sharded_rows(
+        functools.partial(scenarios.run_lm_grid, lm_scn, 10, per_subset=2, seq_len=16),
+        len(lm_scn), "lm_sharded_", max_lanes_per_device=2,
     )
     return rows
 
@@ -360,4 +460,5 @@ FIGURES = {
     "section7_sweep": section7_sweep,
     "grid_timing": grid_timing,
     "grid_sharded": grid_sharded,
+    "lm_engine": lm_engine,
 }

@@ -2,12 +2,13 @@
 validation.
 
 Benchmark code rots silently: it only runs when someone benchmarks.  This
-script executes the kernel microbenches, a miniature grid-timing sweep and a
-miniature device-sharded sweep (``shard="shard_map"``, chunked) at toy shapes
+script executes the kernel microbenches, a miniature grid-timing sweep, a
+miniature device-sharded sweep (``shard="shard_map"``, chunked) and a
+miniature sharded LM-engine sweep (transformer lanes) at toy shapes
 (seconds, not minutes) and validates the machine-readable
-``BENCH_kernels.json`` / ``BENCH_grid_sharded.json`` the real drivers emit,
-so a drifting bench driver or schema fails tier-1 (tests/test_bench_smoke.py)
-instead of the next perf investigation.
+``BENCH_kernels.json`` / ``BENCH_grid_sharded.json`` / ``BENCH_lm_engine.
+json`` the real drivers emit, so a drifting bench driver or schema fails
+tier-1 (tests/test_bench_smoke.py) instead of the next perf investigation.
 
 Standalone:
 
@@ -121,6 +122,65 @@ def smoke_grid_sharded() -> dict:
     return payload
 
 
+def validate_lm_engine_json(payload: dict) -> None:
+    """Assert the BENCH_lm_engine.json schema (see
+    paper_figures.LM_ENGINE_SCHEMA_VERSION)."""
+    from benchmarks.paper_figures import LM_ENGINE_SCHEMA_VERSION
+
+    assert isinstance(payload, dict), type(payload)
+    assert payload.get("schema_version") == LM_ENGINE_SCHEMA_VERSION, (
+        payload.get("schema_version")
+    )
+    assert payload.get("shard") in ("pmap", "shard_map"), payload.get("shard")
+    for field in ("device_count", "lanes", "max_lanes_per_device", "steps",
+                  "n_devices", "per_subset", "seq_len", "params"):
+        v = payload.get(field)
+        assert isinstance(v, int) and v >= 1, (field, v)
+    arch = payload.get("arch")
+    assert isinstance(arch, dict), type(arch)
+    assert isinstance(arch.get("name"), str) and arch["name"], arch
+    for field in ("n_layers", "d_model", "vocab"):
+        v = arch.get(field)
+        assert isinstance(v, int) and v >= 1, (field, v)
+    rows = payload.get("rows")
+    assert isinstance(rows, list) and rows, "rows must be a non-empty list"
+    names = set()
+    for row in rows:
+        assert set(row) == {"name", "lanes", "value"}, sorted(row)
+        assert isinstance(row["name"], str) and row["name"], row
+        assert isinstance(row["lanes"], int) and row["lanes"] >= 1, row
+        assert isinstance(row["value"], float) and row["value"] > 0, row
+        names.add(row["name"])
+    assert len(names) == len(rows), "duplicate row names"
+    for req in ("unsharded_warm", "sharded_warm", "sharded_chunked_warm",
+                "per_scenario_warm", "speedup_warm_sharded_vs_unsharded"):
+        assert any(n.endswith(req) for n in names), f"missing {req} row"
+
+
+def smoke_lm_engine() -> dict:
+    """Run the sharded LM-engine sweep bench at tiny shapes — including its
+    bitwise sharded-vs-unsharded, grid-vs-standalone and zero-compile-warm
+    assertions — and round-trip + validate the JSON."""
+    from benchmarks.paper_figures import lm_engine
+    from repro.core import scenarios
+
+    rows_scn = scenarios.lm_sweep(
+        methods=(("lad", 2),), attacks=("sign_flip", "alie"),
+        compressors=("none",),
+    )
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "BENCH_lm_engine.json")
+        rows = lm_engine(
+            steps=2, max_lanes_per_device=1, per_subset=1, seq_len=8,
+            out_path=path, rows_scn=rows_scn,
+        )
+        with open(path) as f:
+            payload = json.load(f)
+    assert len(rows) == 7, [r[0] for r in rows]
+    validate_lm_engine_json(payload)
+    return payload
+
+
 def smoke_grid_timing() -> list:
     """Miniature whole-grid-vs-per-scenario timing (with its bitwise check),
     on both the XLA and the kernel backend."""
@@ -150,6 +210,11 @@ def main() -> int:
     print(
         f"grid sharded smoke: {len(sharded['rows'])} rows on "
         f"{sharded['device_count']} device(s), schema + bitwise OK"
+    )
+    lm = smoke_lm_engine()
+    print(
+        f"lm engine smoke: {len(lm['rows'])} rows, {lm['params']} params on "
+        f"{lm['device_count']} device(s), schema + bitwise OK"
     )
     return 0
 

@@ -160,6 +160,15 @@ class TrainConfig:
     # logical LAD device count for the engine path (None: the mesh's data
     # size); the global batch's leading dim must be divisible by it
     n_subsets: int | None = None
+    # Device sharding of the engine path's per-subset gradient fan-out
+    # ("none" | "pmap" | "shard_map" — the grid engine's substrate axis):
+    # the subset axis is padded to a multiple of the engine device count by
+    # replicating the last subset's batch block (launch.mesh contract), each
+    # device computes its subsets' gradients, and the full round body
+    # (assignment -> eq.-(5) encode -> compress -> attack -> aggregate) runs
+    # replicated on the all-gathered (N, P) stack.  Engine-path only: the
+    # protomath realization shards via GSPMD instead and rejects shard!=none.
+    shard: str = "none"
     d: int = 2  # computational load (subsets per device)
     aggregator: str = "cwtm"
     trim_frac: float = 0.125

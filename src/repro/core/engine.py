@@ -48,7 +48,74 @@ from repro.core.byzantine import (
 from repro.numerics import stable_mean0, stable_norm
 from repro.optim import make_optimizer
 
-__all__ = ["TrajectoryResult", "run_trajectory", "run_grid", "protocol_rounds"]
+__all__ = [
+    "TrajectoryResult",
+    "run_trajectory",
+    "run_grid",
+    "engine_device_grid",
+    "make_engine_mesh",
+    "engine_device_count",
+    "padded_lane_count",
+    "pad_lanes",
+    "protocol_rounds",
+]
+
+
+def engine_device_grid() -> np.ndarray:
+    """Every global device as a ``(process_count, local_device_count)`` grid,
+    process-major.
+
+    This is the multi-process plumbing of the engine mesh: row ``p`` holds
+    process ``p``'s local devices in id order.  Flattened row-major it is the
+    device order of ``make_engine_mesh`` — contiguous lane/subset shards land
+    on one process before spilling to the next, which is what keeps the
+    future multi-host step a device-list change rather than a resharding.
+    Today every caller is single-process, so the grid is ``(1, D)``.
+    """
+    devs = sorted(jax.devices(), key=lambda d: (d.process_index, d.id))
+    n_proc = jax.process_count()
+    if len(devs) % n_proc != 0:  # pragma: no cover - heterogeneous hosts
+        raise ValueError(
+            f"{len(devs)} global devices do not split evenly over "
+            f"{n_proc} process(es)"
+        )
+    return np.array(devs).reshape(n_proc, len(devs) // n_proc)
+
+
+def make_engine_mesh(axis: str = "lanes") -> Mesh:
+    """The 1-D named device mesh of the engine's sharded paths.
+
+    One axis (default ``"lanes"``; the LM train path names it ``"subsets"``)
+    over *every* global device in process-major order — see
+    ``engine_device_grid``.  ``_grid_program`` runs its vmapped lane program
+    under ``shard_map`` over this mesh, and
+    ``launch.train.build_engine_step`` its subset-gradient fan-out.
+    """
+    return Mesh(engine_device_grid().reshape(-1), (axis,))
+
+
+def engine_device_count() -> int:
+    """Size of the engine mesh = process_count x local devices (global)."""
+    return len(jax.devices())
+
+
+def padded_lane_count(n: int, n_devices: int | None = None) -> int:
+    """The padding contract: ``n`` lanes/subsets rounded up to a multiple of
+    the engine device count (or an explicit ``n_devices``).
+
+    Padding is realized by replicating the LAST lane (``pad_lanes``), so an
+    empty axis is un-paddable — there is no lane to replicate — and is
+    rejected here with a ``ValueError``.
+    """
+    if n < 1:
+        raise ValueError(
+            f"cannot pad a lane axis of length {n} to a device multiple: "
+            "padding replicates the last lane, so at least one lane must exist"
+        )
+    d = n_devices if n_devices is not None else engine_device_count()
+    if d < 1:
+        raise ValueError(f"device count must be >= 1, got {d}")
+    return -(-n // d) * d
 
 
 @dataclasses.dataclass(frozen=True)
@@ -381,13 +448,16 @@ def _finalize_program(loss_fn, takes_data, has_x_star):
     return finalize
 
 
-def _pad_lanes(tree: Any, pad: int) -> Any:
+def pad_lanes(tree: Any, pad: int) -> Any:
     """Append ``pad`` copies of the last lane to every leaf's leading axis.
 
     Replicated real lanes (not zeros): padding exists only to reach a
-    device-divisible lane count, and a replica is guaranteed to run the
-    exact math of a real lane — no risk of degenerate inputs (zero data,
-    zero keys) tripping NaN paths in a lane that is sliced off anyway.
+    device-divisible lane count (``launch.mesh.padded_lane_count`` — the
+    contract the sharded LM train path shares), and a replica is guaranteed
+    to run the exact math of a real lane — no risk of degenerate inputs
+    (zero data, zero keys) tripping NaN paths in a lane that is sliced off
+    anyway.  An empty leading axis cannot be padded: there is no last lane
+    to replicate (callers reject zero lanes before sharding).
     """
     if pad == 0:
         return tree
@@ -571,9 +641,15 @@ def run_grid(
     )
     lane_axes = (True,) + axes_sig[:5] + (False, False)  # which operands carry lanes
     n_lanes = int(keys.shape[0])
-    devs = jax.device_count() if shard != "none" else 1
+    if n_lanes == 0:
+        raise ValueError(
+            "run_grid needs at least one lane: an empty lane axis cannot be "
+            "made device-divisible by padding (padding replicates the last "
+            "lane, and there is no lane to replicate)"
+        )
+    devs = engine_device_count() if shard != "none" else 1
     if max_lanes_per_device is None:
-        chunk = -(-n_lanes // devs) * devs  # pad up to a device multiple
+        chunk = padded_lane_count(n_lanes, devs)  # pad up to a device multiple
     else:
         chunk = max_lanes_per_device * devs
     outs = []
@@ -583,7 +659,7 @@ def run_grid(
             chunk_ops = operands  # whole sweep, no padding: the as-is path
         else:
             chunk_ops = tuple(
-                _pad_lanes(
+                pad_lanes(
                     jax.tree.map(lambda v: v[start : start + take], op),
                     chunk - take,
                 )
@@ -687,7 +763,7 @@ def _grid_program(
         return jax.jit(vmapped)
 
     if shard == "shard_map":
-        mesh = Mesh(np.array(jax.devices()), ("lanes",))
+        mesh = make_engine_mesh("lanes")
         in_specs = tuple(
             PartitionSpec("lanes") if ax == 0 else PartitionSpec()
             for ax in in_axes
@@ -706,7 +782,7 @@ def _grid_program(
         )
 
     # shard == "pmap": per-device replica dispatch of the same lane program.
-    devs = jax.device_count()
+    devs = engine_device_count()
     pm = jax.pmap(vmapped, in_axes=in_axes)
 
     def grid(*args):

@@ -22,13 +22,21 @@ Entry points:
                               structure and each bucket runs as ONE vmapped
                               scan (``engine.run_grid``); per-lane results are
                               bit-identical to ``run_scenario``.
+  * ``lm_sweep()``          — the same matrix at LM scale: every lane trains
+                              a small transformer (its flattened parameter
+                              vector is the engine iterate) through the
+                              identical protocol pipeline.
+  * ``run_lm_grid()`` /     — the LM-scale twins of ``run_grid`` /
+    ``run_lm_scenario()``     ``run_scenario`` (shared heterogeneous-LM data
+                              per bucket, transformer gradients per subset).
   * ``grid_finals()``       — flatten a grid result to per-scenario final
                               metrics (the benchmark CSV row format).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+import functools
+from typing import Any, Callable, Iterable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +46,12 @@ from repro.core.attacks import AttackSpec
 from repro.core.byzantine import ProtocolConfig, make_attack_fn, make_server_fn
 from repro.core.compression import CompressionSpec
 from repro.core.engine import TrajectoryResult, run_trajectory
-from repro.data.synthetic import linear_regression_problem, linreg_loss, linreg_subset_grads
+from repro.data.synthetic import (
+    linear_regression_problem,
+    linreg_loss,
+    linreg_subset_grads,
+    lm_batch_for_devices,
+)
 
 __all__ = [
     "Scenario",
@@ -50,6 +63,10 @@ __all__ = [
     "PAPER_FIG6",
     "run_scenario",
     "run_grid",
+    "lm_arch",
+    "lm_sweep",
+    "run_lm_scenario",
+    "run_lm_grid",
     "grid_finals",
 ]
 
@@ -279,13 +296,31 @@ def _bucket_signature(scn: Scenario, exact: bool = True) -> tuple:
     ) + ((scn.aggregator,) if exact else ())
 
 
+@dataclasses.dataclass(frozen=True)
+class _BucketProblem:
+    """What one compile bucket trains on — the problem adapter that lets the
+    linear-regression grid and the LM-scale grid share the whole bucketing /
+    branch-table / sharding machinery of ``_run_bucket``.
+
+    ``subset_grad_fn`` / ``loss_fn`` must be module-level (or lru-cached)
+    callables: their identities key the engine's compiled-program cache.
+    """
+
+    subset_grad_fn: Callable[[Any, jax.Array], jax.Array]
+    loss_fn: Callable[[Any, jax.Array], jax.Array]
+    x0: jax.Array
+    data: Any
+    data_batched: bool
+    grad_scale: float
+    optimizer: str = "sgd"
+
+
 def _run_bucket(
     group: list[Scenario],
     steps: int,
+    prob: _BucketProblem,
     *,
     seed: int,
-    problem,
-    dim: int,
     shard: str = "none",
     max_lanes_per_device: int | None = None,
 ) -> dict[str, TrajectoryResult]:
@@ -312,6 +347,35 @@ def _run_bucket(
         if len(agg_names) == 1
         else jnp.array([agg_names.index(s.aggregator) for s in group], jnp.int32)
     )
+    lrs = [s.lr for s in group]
+    lr = lrs[0] if len(set(lrs)) == 1 else jnp.array(lrs, jnp.float32)
+    keys = jnp.stack([jax.random.PRNGKey(seed)] * len(group))
+    res = engine_lib.run_grid(
+        tmpl,
+        keys,
+        prob.x0,
+        prob.subset_grad_fn,
+        steps=steps,
+        lr=lr,
+        data=prob.data,
+        data_batched=prob.data_batched,
+        attack_branches=attack_branches,
+        attack_ids=attack_ids,
+        server_branches=server_branches,
+        server_ids=server_ids,
+        optimizer=prob.optimizer,
+        grad_scale=prob.grad_scale,
+        loss_fn=prob.loss_fn,
+        shard=shard,
+        max_lanes_per_device=max_lanes_per_device,
+    )
+    return {s.name: res.lane(i) for i, s in enumerate(group)}
+
+
+def _linreg_bucket_problem(
+    group: list[Scenario], *, seed: int, problem, dim: int
+) -> _BucketProblem:
+    """The Section-VII linear-regression problem of one compile bucket."""
     if problem is not None:
         data = _lane_problem(group[0], seed=seed, problem=problem, dim=dim)
         data_batched = False
@@ -319,30 +383,16 @@ def _run_bucket(
         lanes = [_lane_problem(s, seed=seed, problem=None, dim=dim) for s in group]
         data = tuple(jnp.stack(parts) for parts in zip(*lanes))
         data_batched = True
-    lrs = [s.lr for s in group]
-    lr = lrs[0] if len(set(lrs)) == 1 else jnp.array(lrs, jnp.float32)
-    keys = jnp.stack([jax.random.PRNGKey(seed)] * len(group))
     q = data[0].shape[-1]
-    res = engine_lib.run_grid(
-        tmpl,
-        keys,
-        jnp.zeros((q,)),
-        _grid_subset_grads,  # module-level: stable identity -> program cache hits
-        steps=steps,
-        lr=lr,
+    return _BucketProblem(
+        subset_grad_fn=_grid_subset_grads,  # module-level: stable identity
+        loss_fn=_grid_loss,
+        x0=jnp.zeros((q,)),
         data=data,
         data_batched=data_batched,
-        attack_branches=attack_branches,
-        attack_ids=attack_ids,
-        server_branches=server_branches,
-        server_ids=server_ids,
         # the engine's aggregate estimates (1/N) grad F; eq. (7) steps on F
-        grad_scale=float(tmpl.n_devices),
-        loss_fn=_grid_loss,
-        shard=shard,
-        max_lanes_per_device=max_lanes_per_device,
+        grad_scale=float(group[0].n_devices),
     )
-    return {s.name: res.lane(i) for i, s in enumerate(group)}
 
 
 def _grid_subset_grads(data, x):
@@ -425,9 +475,10 @@ def run_grid(
         buckets.setdefault(_bucket_signature(s, exact=exact), []).append(s)
     out: dict[str, TrajectoryResult] = {}
     for group in buckets.values():
+        prob = _linreg_bucket_problem(group, seed=seed, problem=problem, dim=dim)
         out.update(
             _run_bucket(
-                group, steps, seed=seed, problem=problem, dim=dim,
+                group, steps, prob, seed=seed,
                 shard=shard, max_lanes_per_device=max_lanes_per_device,
             )
         )
@@ -478,6 +529,247 @@ def synthetic_sweep(
             )
         )
     return rows
+
+
+@functools.lru_cache(maxsize=1)
+def lm_arch():
+    """The default small transformer of the LM-scale engine sweeps: 1 layer,
+    d_model=32, vocab=64 — big enough to exercise every model subsystem
+    (attention, SwiGLU, RMSNorm, tied unembed CE), small enough that a whole
+    method x attack x aggregator x compressor matrix of *trajectories* runs
+    on one CPU core in seconds.  lru-cached so every caller shares one
+    config object (and with it the lru-cached problem fns below)."""
+    from repro.configs.archs import ARCHS, reduced
+
+    return reduced(ARCHS["smollm-360m"]).scaled(
+        n_layers=1, d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
+        d_ff=64, vocab=64,
+    )
+
+
+@functools.lru_cache(maxsize=4)
+def _lm_fns(arch):
+    """(x0, subset_grad_fn, loss_fn) of the LM problem for one architecture.
+
+    The engine iterate is the transformer's FLATTENED fp32 parameter vector:
+    ``subset_grad_fn`` unflattens it, computes every subset's full-model
+    gradient (``jax.vmap`` over the N data subsets) and flattens each back to
+    a row of the ``(N, P)`` stack ``protocol_round`` consumes — exactly the
+    ``launch.train.build_engine_step`` pipeline, realized as a grid lane.
+    lru-cached so the returned callables have stable identities: they key the
+    engine's compiled-program cache (zero warm compiles across sweeps).
+    """
+    from repro import models
+    from repro.core.coding import flatten_pytree, unflatten_pytree
+
+    params0, specs = models.init(jax.random.PRNGKey(0), arch)
+    params0 = jax.tree.map(lambda a: a.astype(jnp.float32), params0)
+    x0, flat_spec = flatten_pytree(params0)
+
+    def lm_subset_grads(data, x):
+        tokens, labels = data  # (N, rows, S)
+        params = unflatten_pytree(x, flat_spec)
+
+        def one(sub_tokens, sub_labels):
+            def lf(pp):
+                loss, _ = models.loss_fn(
+                    pp, specs, arch,
+                    {"tokens": sub_tokens, "labels": sub_labels}, remat=False,
+                )
+                return loss
+
+            flat, _ = flatten_pytree(jax.grad(lf)(params))
+            return flat
+
+        return jax.vmap(one)(tokens, labels)
+
+    def lm_loss(data, x):
+        tokens, labels = data
+        params = unflatten_pytree(x, flat_spec)
+        batch = {
+            "tokens": tokens.reshape((-1,) + tokens.shape[2:]),
+            "labels": labels.reshape((-1,) + labels.shape[2:]),
+        }
+        loss, _ = models.loss_fn(params, specs, arch, batch, remat=False)
+        return loss
+
+    return x0, lm_subset_grads, lm_loss
+
+
+def _lm_problem(arch, *, seed: int, n_subsets: int, sigma_h: float,
+                per_subset: int, seq_len: int):
+    """The shared heterogeneous-LM data of one bucket: ``(tokens, labels)``
+    with ``(N, per_subset, seq_len)`` leaves (see ``data.synthetic``)."""
+    batch = lm_batch_for_devices(
+        jax.random.PRNGKey(seed), arch.vocab, n_subsets=n_subsets,
+        per_subset=per_subset, seq_len=seq_len, sigma_h=sigma_h,
+    )
+    return batch["tokens"], batch["labels"]
+
+
+def lm_sweep(
+    methods: Sequence[tuple[str, int]] = (("lad", 2), ("plain", 1)),
+    attacks: Sequence[str] = ("sign_flip", "alie", "ipm"),
+    aggregators: Sequence[str] = ("cwtm",),
+    compressors: Sequence[str] = ("none", "rand_sparse"),
+    *,
+    n_devices: int = 10,
+    n_byz: int = 2,
+    sigma_h: float = 0.5,
+    q_hat_frac: float = 0.5,
+    trim_frac: float = 0.2,
+    lr: float = 3e-3,
+    backend: str = "xla",
+) -> list[Scenario]:
+    """The LM-scale evaluation matrix: method x attack x aggregator x
+    compressor over a small transformer (``lm_arch`` by default).
+
+    Mirrors ``section7_grid``'s pruning (DRACO rows drop compression and
+    round ``N`` down to a ``d``-multiple).  All rows share ``sigma_h`` —
+    ``run_lm_grid`` trains every bucket on ONE shared heterogeneous-LM
+    problem per ``(N, sigma_h)``, so lanes differ along the traced protocol
+    axes, not the data.  The default 12 rows collapse into 4 compile buckets
+    (method x compressor; attacks traced per lane).
+    """
+    rows = []
+    seen = set()
+    for method, d in methods:
+        for attack in attacks:
+            for agg in aggregators:
+                for comp in compressors:
+                    if method == "draco" and comp != "none":
+                        continue
+                    n = n_devices - (n_devices % d) if method == "draco" else n_devices
+                    agg_eff = "vote" if method == "draco" else agg
+                    name = "lm/" + scenario_name(method, d, agg_eff, attack, comp, sigma_h)
+                    if name in seen:
+                        continue
+                    seen.add(name)
+                    rows.append(
+                        Scenario(
+                            name=name,
+                            method=method,
+                            d=d,
+                            aggregator="mean" if method == "draco" else agg,
+                            attack=attack,
+                            n_byz=n_byz,
+                            compressor=comp,
+                            q_hat_frac=q_hat_frac,
+                            sigma_h=sigma_h,
+                            trim_frac=trim_frac,
+                            n_devices=n,
+                            lr=lr,
+                            backend=backend,
+                        )
+                    )
+    return rows
+
+
+def run_lm_scenario(
+    scn: Scenario,
+    steps: int,
+    *,
+    arch=None,
+    seed: int = 0,
+    per_subset: int = 2,
+    seq_len: int = 16,
+    mode: str = "scan",
+) -> TrajectoryResult:
+    """One LM-scale scenario through the scan-compiled engine — the
+    per-scenario bit-exactness reference of ``run_lm_grid`` (the same role
+    ``run_scenario`` plays for the linear-regression grid)."""
+    arch = arch if arch is not None else lm_arch()
+    x0, lm_subset_grads, lm_loss = _lm_fns(arch)
+    data = _lm_problem(
+        arch, seed=seed, n_subsets=scn.n_devices, sigma_h=scn.sigma_h,
+        per_subset=per_subset, seq_len=seq_len,
+    )
+    return run_trajectory(
+        scn.protocol(),
+        jax.random.PRNGKey(seed),
+        x0,
+        lm_subset_grads,
+        steps=steps,
+        lr=scn.lr,
+        grad_scale=1.0,  # the LM loss is a mean: step on the mean gradient
+        loss_fn=lm_loss,
+        mode=mode,
+        data=data,
+    )
+
+
+def run_lm_grid(
+    scenarios: Iterable[Scenario],
+    steps: int,
+    *,
+    arch=None,
+    seed: int = 0,
+    per_subset: int = 2,
+    seq_len: int = 16,
+    mode: str = "grid",
+    exact: bool = True,
+    shard: str = "none",
+    max_lanes_per_device: int | None = None,
+) -> dict[str, TrajectoryResult]:
+    """Sweep LM-scale scenarios through the engine: every lane trains the
+    small transformer's flattened parameter vector through the full protocol
+    pipeline, with the same bucketing / traced-attack-axis / sharding /
+    chunked-streaming machinery as the linear-regression ``run_grid`` (the
+    two share ``_run_bucket`` via the ``_BucketProblem`` adapter).
+
+    Every lane is bitwise equal to its standalone ``run_lm_scenario``
+    trajectory, and ``shard="pmap"|"shard_map"`` to the unsharded grid, at
+    the clean simulation scales (N = 10/16/32) — asserted by
+    tests/test_train_engine_shard.py on 1 device in tier-1 and on 8 forced
+    host devices in CI.  All rows must share one heterogeneity level
+    (buckets share one data tensor; ``sigma_h`` is not a traced LM axis).
+    """
+    scns = list(scenarios)
+    if not scns:
+        raise ValueError("run_lm_grid needs at least one scenario")
+    sigmas = {s.sigma_h for s in scns}
+    if len(sigmas) != 1:
+        raise ValueError(
+            f"run_lm_grid rows must share sigma_h (got {sorted(sigmas)}): the "
+            "LM sweep trains on one shared problem per bucket, so data "
+            "heterogeneity cannot vary per lane"
+        )
+    arch = arch if arch is not None else lm_arch()
+    kw = dict(arch=arch, seed=seed, per_subset=per_subset, seq_len=seq_len)
+    if mode in ("scan", "loop"):
+        if shard != "none" or max_lanes_per_device is not None:
+            raise ValueError(
+                f"shard={shard!r} / max_lanes_per_device="
+                f"{max_lanes_per_device!r} are grid-mode options; "
+                f"mode={mode!r} dispatches per scenario"
+            )
+        return {s.name: run_lm_scenario(s, steps, mode=mode, **kw) for s in scns}
+    if mode != "grid":
+        raise ValueError(f"unknown grid mode {mode!r}")
+    buckets: dict[tuple, list[Scenario]] = {}
+    for s in scns:
+        buckets.setdefault(_bucket_signature(s, exact=exact), []).append(s)
+    out: dict[str, TrajectoryResult] = {}
+    for group in buckets.values():
+        x0, lm_subset_grads, lm_loss = _lm_fns(arch)
+        prob = _BucketProblem(
+            subset_grad_fn=lm_subset_grads,
+            loss_fn=lm_loss,
+            x0=x0,
+            data=_lm_problem(
+                arch, seed=seed, n_subsets=group[0].n_devices,
+                sigma_h=group[0].sigma_h, per_subset=per_subset, seq_len=seq_len,
+            ),
+            data_batched=False,
+            grad_scale=1.0,
+        )
+        out.update(
+            _run_bucket(
+                group, steps, prob, seed=seed,
+                shard=shard, max_lanes_per_device=max_lanes_per_device,
+            )
+        )
+    return {s.name: out[s.name] for s in scns}
 
 
 def grid_finals(results: dict[str, TrajectoryResult]) -> dict[str, dict[str, float]]:

@@ -99,6 +99,13 @@ def build_case(cfg: ArchConfig, shape: ShapeConfig, mesh, tcfg: TrainConfig):
                 microbatches=auto_microbatches(cfg, shape, _ndd(mesh), tcfg.d),
             )
         step_fn, opt = build_train_step(cfg, tcfg, mesh, specs)
+        if getattr(step_fn, "self_dispatching", False):
+            raise ValueError(
+                "dry-run lowering needs one traceable train step, but the "
+                f"engine path (protocol_impl={tcfg.protocol_impl!r}) is "
+                "self-dispatching (cached round/apply programs that must not "
+                "be re-jitted) — dry-run the protomath realization instead"
+            )
         opt_shapes = jax.eval_shape(opt.init, param_shapes)
         from repro.optim.optimizers import OptState
 

@@ -1,9 +1,29 @@
-"""Production mesh construction.
+"""Mesh construction: the production GSPMD meshes and the engine's 1-D mesh.
 
-Single pod: 16 x 16 = 256 chips, axes ("data", "model").
-Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
-``pod`` axis extends the Byzantine/data-parallel domain across the DCN/ICI
-boundary (N = 32 logical LAD devices).
+Two mesh families are exposed here:
+
+* **Production meshes** (``make_production_mesh`` / ``make_host_mesh``) — the
+  ("data", "model") / ("pod", "data", "model") GSPMD meshes of the protomath
+  train path.  Single pod: 16 x 16 = 256 chips; multi-pod: 2 x 16 x 16 = 512
+  chips with the ``pod`` axis extending the Byzantine/data-parallel domain
+  across the DCN/ICI boundary.
+
+* **Engine meshes** (``make_engine_mesh`` + ``engine_device_grid`` /
+  ``engine_device_count`` / ``padded_lane_count``) — the 1-D named device
+  mesh the protocol-engine paths shard over: ``core.engine.run_grid``
+  partitions its scenario-*lane* axis over it, and
+  ``launch.train.build_engine_step`` (``TrainConfig.shard``) its LM *subset*
+  fan-out.  These are defined in ``core.engine`` (beside ``pad_lanes``, the
+  replication half of the same padding contract, keeping the core -> launch
+  dependency arrow one-way) and re-exported here as the deployment-layer
+  entry point.
+
+The engine mesh is **multi-process-ready**: devices are assembled
+process-major — each of ``jax.process_count()`` processes contributes its
+local devices as one contiguous run — so a sharded lane/subset axis maps
+whole per-process blocks first, and a future multi-host launch changes the
+device list, not the sharding or padding/replication contract.  Today every
+caller is single-process.
 
 Defined as functions (never module-level constants) so importing this module
 never touches jax device state; the dry-run sets
@@ -15,6 +35,13 @@ from __future__ import annotations
 import math
 
 import jax
+
+from repro.core.engine import (  # noqa: F401  (re-exported deployment API)
+    engine_device_count,
+    engine_device_grid,
+    make_engine_mesh,
+    padded_lane_count,
+)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

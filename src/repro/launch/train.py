@@ -30,14 +30,28 @@
   scenario grid.  It materializes an (N, d, P) gather, so it is the
   simulation/verification path for small-to-mid models, not the
   production-scale step.
+
+  ``TrainConfig.shard`` partitions the engine step's per-subset gradient
+  fan-out over the engine device mesh (``launch.mesh.make_engine_mesh``):
+  ``"shard_map"`` (one jitted program; the production substrate) or
+  ``"pmap"`` (per-device replica dispatch; the cross-check substrate).  The
+  subset axis is padded to a device multiple by replicating the last
+  subset's batch block (``core.engine.pad_lanes`` — the grid engine's lane
+  contract), each device computes its subsets' gradients, and the full
+  round body runs replicated on the all-gathered, padding-sliced ``(N, P)``
+  stack — so sharded steps are BITWISE equal to ``shard="none"`` at the
+  clean simulation scales (N = 10/16/32; see README "Engine guarantees" and
+  tests/test_train_engine_shard.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import models
@@ -46,9 +60,17 @@ from repro.core import attacks as attack_lib
 from repro.core import compression as comp_lib
 from repro.core.byzantine import ProtocolConfig, protocol_round
 from repro.core.coding import flatten_pytree, unflatten_pytree
+from repro.core.engine import pad_lanes
 from repro.core.protomath import BlockedProtocol, protocol_context
-from repro.launch.mesh import data_axes, n_data_devices
+from repro.launch.mesh import (
+    data_axes,
+    engine_device_count,
+    make_engine_mesh,
+    n_data_devices,
+    padded_lane_count,
+)
 from repro.models.module import logical_to_mesh
+from repro.numerics import stable_mean0
 from repro.optim import make_optimizer
 from repro.optim.optimizers import OptState
 from repro.optim.schedule import linear_warmup_cosine
@@ -100,6 +122,165 @@ def make_round_config(tcfg: TrainConfig, n_subsets: int) -> ProtocolConfig:
     )
 
 
+# Compiled engine-step programs, cached across build_engine_step calls.
+# Each program is keyed on exactly the config it reads — (arch cfg, lowered
+# ProtocolConfig, remat, shard substrate, device count) for the round
+# program; (optimizer, momentum dtype, lr, steps, weight decay) for the
+# optimizer-apply program — so configs differing only in fields a program
+# never reads (e.g. an lr or seed sweep against the round program) share the
+# cached executable instead of recompiling.  ``specs`` is deliberately NOT
+# part of the key: it is a pure function of the arch ``cfg`` (models.init
+# derives the spec tree from the architecture alone), so two calls agreeing
+# on the key always pass equal specs.  ``_ENGINE_TRACES`` counts *trace
+# events* (a Python side effect inside the traced bodies runs only while
+# tracing) — the test hook for the zero-compile warm-step contract
+# (tests/test_train_engine_shard.py).
+_ENGINE_PROGRAMS: dict = {}
+_ENGINE_TRACES = {"round": 0, "apply": 0}
+
+_SUBSET_AXIS = "subsets"
+
+
+def engine_program_cache_info() -> dict:
+    """{programs, round, apply}: cached program count + trace-event counters
+    for the engine train path (warm steps must leave all three unchanged)."""
+    return dict(programs=len(_ENGINE_PROGRAMS), **_ENGINE_TRACES)
+
+
+def engine_program_cache_clear() -> None:
+    _ENGINE_PROGRAMS.clear()
+
+
+def _build_round_program(cfg, pcfg, remat, n_sub, shard, devs, specs):
+    """The fan-out + protocol-round program of one engine-step configuration.
+
+    ``(params, blocks, key) -> (loss, metrics, g_flat)`` where ``blocks`` is
+    the ``(N, rows, ...)`` subset-blocked (micro)batch.  All three substrates
+    share ``one`` (the per-subset gradient) and ``finalize`` (the round body
+    + fixed-tree metric means) verbatim — that sharing is what keeps sharded
+    steps bitwise equal to ``shard="none"`` at the clean scales.
+    """
+
+    def one(params, sub_batch):
+        _ENGINE_TRACES["round"] += 1  # runs at trace time only
+
+        def loss_fn(pp):
+            return models.loss_fn(pp, specs, cfg, sub_batch, remat=remat)
+
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        flat, _ = flatten_pytree(jax.tree.map(lambda a: a.astype(jnp.float32), g))
+        return loss, metrics, flat
+
+    def finalize(losses, metricses, stack, k):
+        g = protocol_round(pcfg, k, stack)
+        # cross-subset means in the fixed-tree form of repro/numerics.py: a
+        # plain reduce may accumulate differently between the sharded and
+        # unsharded programs and break the substrate-parity guarantee
+        return stable_mean0(losses), jax.tree.map(stable_mean0, metricses), g
+
+    if shard == "none":
+
+        @jax.jit
+        def round_none(params, blocks, k):
+            losses, metricses, stack = jax.vmap(functools.partial(one, params))(blocks)
+            return finalize(losses, metricses, stack, k)
+
+        return round_none
+
+    n_pad = padded_lane_count(n_sub, devs)
+
+    def per_device(params, blocks_shard, k):
+        # local fan-out -> all-gather -> the full round body, replicated:
+        # every device aggregates the identical (N, P) stack, so the round's
+        # output needs no further collective (out specs are replicated)
+        losses, metricses, stack = jax.vmap(functools.partial(one, params))(blocks_shard)
+
+        def gather(v):  # (local, ...) -> (N, ...): padding subsets sliced off
+            return jax.lax.all_gather(v, _SUBSET_AXIS, tiled=True)[:n_sub]
+
+        return finalize(gather(losses), jax.tree.map(gather, metricses),
+                        gather(stack), k)
+
+    if shard == "shard_map":
+        inner = shard_map(
+            per_device,
+            mesh=make_engine_mesh(_SUBSET_AXIS),
+            in_specs=(P(), P(_SUBSET_AXIS), P()),
+            out_specs=(P(), P(), P()),
+            # every output is replicated by construction (post-all-gather);
+            # check_rep has no rules for some round-body primitives
+            check_rep=False,
+        )
+
+        @jax.jit
+        def round_shard_map(params, blocks, k):
+            return inner(params, pad_lanes(blocks, n_pad - n_sub), k)
+
+        return round_shard_map
+
+    # shard == "pmap": per-device replica dispatch of the same per_device body
+    pm = jax.pmap(per_device, axis_name=_SUBSET_AXIS, in_axes=(None, 0, None))
+
+    def round_pmap(params, blocks, k):
+        padded = pad_lanes(blocks, n_pad - n_sub)
+        split = jax.tree.map(
+            lambda v: v.reshape((devs, n_pad // devs) + v.shape[1:]), padded
+        )
+        out = pm(params, split, k)
+        return jax.tree.map(lambda v: v[0], out)  # replicated: any replica
+
+    return round_pmap
+
+
+def _engine_round_program(cfg, tcfg, n_sub, specs):
+    shard = tcfg.shard
+    devs = engine_device_count() if shard != "none" else 1
+    # the round program reads only the lowered protocol structure + remat
+    # (never lr/seed/steps/optimizer), so parameter sweeps over those fields
+    # reuse one compiled fan-out+round program per substrate
+    pcfg = make_round_config(tcfg, n_sub)
+    key = (cfg, pcfg, tcfg.remat, shard, devs)
+    prog = _ENGINE_PROGRAMS.get(key)
+    if prog is None:
+        prog = _build_round_program(cfg, pcfg, tcfg.remat, n_sub, shard, devs, specs)
+        _ENGINE_PROGRAMS[key] = prog
+    return prog
+
+
+def _engine_apply_program(tcfg):
+    """The cached optimizer-apply program ``(params, opt_state, g_flat, t) ->
+    (new_params, new_opt_state)``.
+
+    One jitted program shared by every substrate: the round program's outputs
+    are materialized program outputs (never re-fused into the optimizer
+    math), so all three shard modes step through the exact same apply
+    compilation — the second half of the substrate-parity guarantee.
+    """
+    # keyed on the fields apply actually reads, NOT the whole tcfg: every
+    # shard substrate of one run config then shares the literal jitted
+    # program object — parity of the optimizer step holds by construction
+    key = ("apply", tcfg.optimizer, tcfg.momentum_dtype, tcfg.lr, tcfg.steps,
+           tcfg.weight_decay)
+    prog = _ENGINE_PROGRAMS.get(key)
+    if prog is None:
+        opt = make_optimizer(tcfg.optimizer, momentum_dtype=tcfg.momentum_dtype)
+        schedule = linear_warmup_cosine(tcfg.lr, warmup=max(tcfg.steps // 20, 1),
+                                        total_steps=tcfg.steps)
+
+        @jax.jit
+        def apply(params, opt_state, g_flat, step_idx):
+            _ENGINE_TRACES["apply"] += 1  # runs at trace time only
+            _, flat_spec = flatten_pytree(params)
+            grads = unflatten_pytree(g_flat, flat_spec)
+            lr = schedule(step_idx)
+            return opt.update(params, grads, opt_state, lr,
+                              weight_decay=tcfg.weight_decay)
+
+        prog = apply
+        _ENGINE_PROGRAMS[key] = prog
+    return prog
+
+
 def build_engine_step(cfg: ArchConfig, tcfg: TrainConfig, mesh, specs):
     """The protocol-engine train step: LM gradients through ``protocol_round``.
 
@@ -109,85 +290,104 @@ def build_engine_step(cfg: ArchConfig, tcfg: TrainConfig, mesh, specs):
 
       1. the global batch's leading dim is blocked into ``N = n_subsets``
          logical LAD devices (``tcfg.n_subsets`` or the mesh's data size);
-      2. ``jax.vmap`` computes every subset's full-model gradient;
+      2. ``jax.vmap`` computes every subset's full-model gradient — under
+         ``tcfg.shard`` the subset axis is partitioned over the engine
+         device mesh (padded to a device multiple by replicating the last
+         subset's block; padding gradients are computed and discarded) and
+         each device fans out only its own subsets;
       3. gradients flatten to an ``(N, P)`` stack and one ``protocol_round``
          runs the paper's pipeline — randomized cyclic assignment, eq.-(5)
-         encode, Com-LAD compression, Byzantine attack, robust aggregation;
+         encode, Com-LAD compression, Byzantine attack, robust aggregation
+         (replicated per device in the sharded modes, on the all-gathered
+         stack);
       4. the aggregated flat gradient un-flattens into the optimizer step.
 
     With ``microbatches > 1`` the robust exchange runs once per microbatch
     (the aggregation granularity of the protomath path) and the aggregated
     gradients average in fp32.
+
+    The step is *self-dispatching* (``step.self_dispatching``): it composes
+    two cached compiled programs — the fan-out + round program (per shard
+    substrate) and the shared optimizer-apply program — rather than being
+    one traceable function, so callers must NOT wrap it in ``jax.jit``
+    (re-tracing would inline and re-fuse across the program boundary that
+    keeps the substrates bitwise-comparable; ``Trainer`` checks the flag).
+    Programs are cached across ``build_engine_step`` calls on the static
+    config, so a warm step — and a second step fn built from an equal
+    config — makes zero compiles (``engine_program_cache_info``).  The
+    cached programs deliberately do NOT donate params/opt_state (the old
+    jitted step did): they are shared across callers that may reuse their
+    inputs (conformance tests re-step from one params tree), and this is
+    the small-to-mid-model simulation path, not the memory-bound production
+    step.
     """
+    if tcfg.shard not in ("none", "pmap", "shard_map"):
+        raise ValueError(
+            f"unknown engine shard mode {tcfg.shard!r}: expected 'none', "
+            "'pmap' or 'shard_map'"
+        )
     n_sub = tcfg.n_subsets or n_data_devices(mesh)
-    pcfg = make_round_config(tcfg, n_sub)
     opt = make_optimizer(tcfg.optimizer, momentum_dtype=tcfg.momentum_dtype)
-    schedule = linear_warmup_cosine(tcfg.lr, warmup=max(tcfg.steps // 20, 1),
-                                    total_steps=tcfg.steps)
+    round_prog = _engine_round_program(cfg, tcfg, n_sub, specs)
+    apply_prog = _engine_apply_program(tcfg)
     base_key = jax.random.PRNGKey(tcfg.seed)
+    m = tcfg.microbatches
+
+    if tcfg.shard == "shard_map":
+        # callers (Trainer) hand in arrays committed to their own mesh; the
+        # sharded programs run over the full engine mesh, and jit refuses
+        # mixed device commitments — so step inputs are re-laid-out onto the
+        # engine mesh (replicated; pure data movement, bitwise-neutral).
+        # After the first step params/opt_state already live there and the
+        # transfer is a no-op; the per-step batch genuinely moves.
+        _rep = NamedSharding(make_engine_mesh(_SUBSET_AXIS), P())
+
+        def to_engine(tree):
+            return jax.device_put(tree, _rep)
+
+    else:  # "none" shares the caller's placement; pmap replicates itself
+        def to_engine(tree):
+            return tree
 
     def step(params, opt_state, batch, step_idx):
         round_key = jax.random.fold_in(base_key, step_idx)
-        _, flat_spec = flatten_pytree(params)
-        m = tcfg.microbatches
 
         def blocked(x):  # (B, ...) -> (N, B/N, ...)
             assert x.shape[0] % n_sub == 0, (x.shape, n_sub)
             return x.reshape((n_sub, x.shape[0] // n_sub) + x.shape[1:])
 
-        blocks = jax.tree.map(blocked, batch)
-
-        def subset_grads(mb_blocks):
-            """(N, rows, ...) blocks -> per-subset losses/metrics/(N, P) grads."""
-
-            def one(sub_batch):
-                def loss_fn(pp):
-                    return models.loss_fn(pp, specs, cfg, sub_batch, remat=tcfg.remat)
-
-                (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
-                flat, _ = flatten_pytree(
-                    jax.tree.map(lambda a: a.astype(jnp.float32), g)
-                )
-                return loss, metrics, flat
-
-            return jax.vmap(one)(mb_blocks)
-
-        def micro_round(j, mb_blocks):
-            losses, metricses, stack = subset_grads(mb_blocks)
-            g = protocol_round(pcfg, jax.random.fold_in(round_key, j), stack)
-            return jnp.mean(losses), jax.tree.map(jnp.mean, metricses), g
-
+        params = to_engine(params)
+        opt_state = to_engine(opt_state)
+        blocks = to_engine(jax.tree.map(blocked, batch))
         if m <= 1:
-            loss, metrics, g_flat = micro_round(jnp.int32(0), blocks)
+            loss, metrics, g_flat = round_prog(
+                params, blocks, jax.random.fold_in(round_key, 0)
+            )
         else:
             rows = jax.tree.leaves(blocks)[0].shape[1]
             assert rows % m == 0, (rows, m)
             sl = rows // m
-
-            def micro_step(acc, j):
-                mb = jax.tree.map(
-                    lambda x: jax.lax.dynamic_slice_in_dim(x, j * sl, sl, axis=1),
-                    blocks,
+            per = [
+                round_prog(
+                    params,
+                    jax.tree.map(lambda x: x[:, j * sl : (j + 1) * sl], blocks),
+                    jax.random.fold_in(round_key, j),
                 )
-                l, met, g = micro_round(j, mb)
-                return acc + g, (l, met)
-
-            p_total = sum(l.size for l in jax.tree.leaves(params))
-            g_sum, (losses, metricses) = jax.lax.scan(
-                micro_step,
-                jnp.zeros((p_total,), jnp.float32),
-                jnp.arange(m, dtype=jnp.int32),
+                for j in range(m)
+            ]
+            g_flat = per[0][2]
+            for _, _, g in per[1:]:  # fp32 accumulation, in microbatch order
+                g_flat = g_flat + g
+            g_flat = g_flat / m
+            loss = stable_mean0(jnp.stack([l for l, _, _ in per]))
+            metrics = jax.tree.map(
+                lambda *vs: stable_mean0(jnp.stack(vs)), *[met for _, met, _ in per]
             )
-            g_flat = g_sum / m
-            loss = jnp.mean(losses)
-            metrics = jax.tree.map(jnp.mean, metricses)
 
-        grads = unflatten_pytree(g_flat, flat_spec)
-        lr = schedule(step_idx)
-        new_params, new_opt = opt.update(params, grads, opt_state, lr,
-                                         weight_decay=tcfg.weight_decay)
+        new_params, new_opt = apply_prog(params, opt_state, g_flat, step_idx)
         return new_params, new_opt, loss, metrics
 
+    step.self_dispatching = True
     return step, opt
 
 
@@ -245,6 +445,12 @@ def build_train_step(cfg: ArchConfig, tcfg: TrainConfig, mesh, specs):
         return build_engine_step(cfg, tcfg, mesh, specs)
     if tcfg.protocol_impl != "protomath":
         raise ValueError(f"unknown protocol_impl {tcfg.protocol_impl!r}")
+    if tcfg.shard != "none":
+        raise ValueError(
+            f"shard={tcfg.shard!r} is an engine-path option "
+            "(protocol_impl='engine'); the protomath realization is GSPMD-"
+            "sharded by its parameter/batch shardings and takes no shard="
+        )
     n_dev = n_data_devices(mesh)
     protocol = make_protocol(tcfg, mesh)
     opt = make_optimizer(tcfg.optimizer, momentum_dtype=tcfg.momentum_dtype)
@@ -331,7 +537,14 @@ class Trainer:
             step_fn, self.opt = build_train_step(self.cfg, self.tcfg, self.mesh, self.specs)
             self.opt_state = self.opt.init(self.params)
             bspec = batch_pspec(self.mesh)
-            self._jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+            # engine steps are self-dispatching (they compose cached compiled
+            # programs; re-jitting would inline and re-fuse across the
+            # program boundary their substrate parity relies on)
+            self._jit_step = (
+                step_fn
+                if getattr(step_fn, "self_dispatching", False)
+                else jax.jit(step_fn, donate_argnums=(0, 1))
+            )
             self._bsharding = NamedSharding(self.mesh, bspec)
 
     def run(self, batches, log_every: int = 10):

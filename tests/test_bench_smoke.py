@@ -62,6 +62,50 @@ def test_grid_sharded_smoke_and_json_schema():
     assert "grid1k_unsharded_warm" in names
 
 
+def test_lm_engine_smoke_and_json_schema():
+    """The sharded LM-engine sweep bench runs at tiny shapes — with its
+    bitwise sharded-vs-unsharded, grid-vs-standalone and zero-compile-warm
+    assertions — and its JSON validates."""
+    payload = bench_smoke.smoke_lm_engine()
+    bench_smoke.validate_lm_engine_json(payload)  # idempotent re-check
+    assert payload["shard"] == "shard_map"
+    assert payload["params"] >= 1
+    names = {r["name"] for r in payload["rows"]}
+    assert "lm_engine_sharded_chunked_warm" in names
+    assert "lm_engine_per_scenario_warm" in names
+
+
+def test_validate_lm_engine_json_rejects_drift():
+    def base():
+        return {
+            "schema_version": 1, "device_count": 1, "shard": "shard_map",
+            "lanes": 2, "max_lanes_per_device": 1, "steps": 2,
+            "n_devices": 10, "per_subset": 1, "seq_len": 8, "params": 11360,
+            "arch": {"name": "smollm-360m", "n_layers": 1, "d_model": 32,
+                     "vocab": 64},
+            "rows": [
+                {"name": f"x_{suffix}", "lanes": 2, "value": 1.0}
+                for suffix in ("unsharded_warm", "sharded_warm",
+                               "sharded_chunked_warm", "per_scenario_warm",
+                               "speedup_warm_sharded_vs_unsharded")
+            ],
+        }
+
+    bench_smoke.validate_lm_engine_json(base())
+    for breakage in (
+        {"schema_version": 999},
+        {"shard": "gspmd"},
+        {"params": 0},
+        {"arch": {"name": "", "n_layers": 1, "d_model": 32, "vocab": 64}},
+        {"rows": []},
+        {"rows": base()["rows"][:2]},  # missing required row names
+        {"rows": base()["rows"] + [{"name": "y", "lanes": 2}]},  # bad keys
+    ):
+        bad = {**base(), **breakage}
+        with pytest.raises(AssertionError):
+            bench_smoke.validate_lm_engine_json(bad)
+
+
 def test_validate_grid_sharded_json_rejects_drift():
     def base():
         return {

@@ -18,6 +18,8 @@ import pytest
 from repro.core import ProtocolConfig, engine, scenarios
 from repro.core.attacks import AttackSpec
 from repro.data.synthetic import linreg_loss, linreg_subset_grads
+from repro.launch.mesh import padded_lane_count
+from repro.testing import given, settings, strategies as st
 
 STEPS, DIM = 5, 12
 SHARDS = ("shard_map", "pmap")
@@ -156,6 +158,49 @@ def _shared_loss(data, x):
     return linreg_loss(data[0], data[1], x)
 
 
+@given(st.integers(1, 23), st.integers(1, 9), st.integers(1, 4))
+@settings(max_examples=30, deadline=None)
+def test_lane_padding_replication_property(lanes, devs, mlpd):
+    """The padding/replication contract, for arbitrary lane and device
+    counts: ``pad_lanes`` up to ``padded_lane_count`` replicates exactly the
+    last lane, slices back to the unpadded tree bitwise, and the chunked
+    streaming loop of ``run_grid`` covers the lane axis exactly once, in
+    order — on every leaf rank."""
+    target = padded_lane_count(lanes, devs)
+    assert target % devs == 0 and target - lanes < devs and target >= lanes
+    rng = np.random.default_rng(lanes * 1000 + devs * 10 + mlpd)
+    tree = {
+        "mat": jnp.asarray(rng.normal(size=(lanes, 3))),
+        "vec": jnp.asarray(rng.normal(size=(lanes,))),
+    }
+    padded = engine.pad_lanes(tree, target - lanes)
+    for k in tree:
+        p, o = np.asarray(padded[k]), np.asarray(tree[k])
+        assert p.shape[0] == target
+        np.testing.assert_array_equal(p[:lanes], o, err_msg=k)
+        for row in p[lanes:]:  # every padding lane replicates the last lane
+            np.testing.assert_array_equal(row, o[-1], err_msg=k)
+    # the chunk loop (run_grid's streaming contract): equal-shaped chunks
+    # whose un-padded slices concatenate back to exactly [0, lanes)
+    chunk = mlpd * devs
+    covered = []
+    for start in range(0, lanes, chunk):
+        take = min(chunk, lanes - start)
+        assert 1 <= take <= chunk
+        covered.extend(range(start, start + take))
+    assert covered == list(range(lanes))
+
+
+def test_padded_lane_count_rejects_empty_axis():
+    """Zero lanes cannot be made device-divisible by padding: replication
+    needs a last lane to copy.  The contract helper and the engine both
+    refuse."""
+    with pytest.raises(ValueError, match="at least one lane"):
+        padded_lane_count(0, 4)
+    with pytest.raises(ValueError, match="device count"):
+        padded_lane_count(3, 0)
+
+
 def test_shard_validation():
     rows = scenarios.synthetic_sweep(2, n_devices=10, n_byz=2)
     with pytest.raises(ValueError, match="shard"):
@@ -168,6 +213,15 @@ def test_shard_validation():
         scenarios.run_grid(rows, 2, dim=DIM, mode="scan", shard="shard_map")
     with pytest.raises(ValueError, match="grid-mode"):
         scenarios.run_grid(rows, 2, dim=DIM, mode="loop", max_lanes_per_device=1)
+    # an empty lane axis is un-paddable (nothing to replicate): the engine
+    # refuses instead of emitting a zero-lane program
+    cfg = rows[0].protocol()
+    empty_keys = jnp.zeros((0, 2), jnp.uint32)
+    with pytest.raises(ValueError, match="at least one lane"):
+        engine.run_grid(
+            cfg, empty_keys, jnp.zeros((DIM,)), _shared_grads,
+            steps=2, lr=1e-6, shard="shard_map",
+        )
 
 
 def test_synthetic_sweep_is_single_bucket():
