@@ -14,7 +14,6 @@ tier-1.
 from __future__ import annotations
 
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -22,19 +21,16 @@ import jax.numpy as jnp
 from repro.core import aggregators as agg
 from repro.core.compression import CompressionSpec
 from repro.kernels import ops
+from repro.timing import block_time
 
 SCHEMA_VERSION = 1
 
 
 def _time(fn, *args, iters=20):
-    """Mean wall-clock per call in us, blocking on EVERY iteration (async
-    dispatch otherwise lets the loop enqueue without finishing, timing only
-    the final drain)."""
-    jax.block_until_ready(fn(*args))  # compile + warm
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+    """Mean wall-clock per call in us — ``repro.timing.block_time`` (the
+    shared blocking timer: monotonic clock, block_until_ready every
+    iteration) scaled to this file's microsecond row unit."""
+    return block_time(fn, *args, iters=iters) * 1e6  # us
 
 
 def aggregator_bench(
@@ -69,7 +65,8 @@ def kernel_vs_ref_bench(n: int = 16, q: int = 1 << 16, iters: int = 10):
 
 
 def lane_batched_bench(
-    lanes: int = 8, n: int = 16, d: int = 8, q: int = 1 << 14, iters: int = 5
+    lanes: int = 8, n: int = 16, d: int = 8, q: int = 1 << 14, iters: int = 5,
+    store=None,
 ):
     """Lane-batched kernel launch vs the per-lane dispatch loop it replaced.
 
@@ -84,9 +81,25 @@ def lane_batched_bench(
     level (grid_timing.csv ``kernel_*`` rows — fewer compiles, zero
     per-scenario dispatches on a warm sweep) and as one kernel launch on a
     real TPU.
+
+    The batched side goes through ``jax.vmap`` of the single-lane wrapper —
+    the custom_vmap promote rule, which ALWAYS lane-batches — so the
+    measurement stays a clean batched-vs-loop pair even now that the
+    wrappers' explicit-lane path dispatches from the crossover table this
+    very bench feeds.  Pass a ``repro.launch.tuner.TunerStore`` as ``store``
+    to record each measured pair into that table (``benchmarks/run.py``
+    does; the tiny-shape tier-1 smoke passes none and records nothing).
     """
     key = jax.random.PRNGKey(2)
     rows = []
+
+    def record(name, t_b, t_l):
+        rows.append((f"{name}_lanes_batched", t_b, float(lanes)))
+        rows.append((f"{name}_per_lane_loop", t_l, t_l / t_b))
+        if store is not None:
+            from repro.launch.tuner import record_crossover
+
+            record_crossover(name, lanes, t_b, t_l, store=store)
 
     def pair(name, batched_fn, batched_arg, single_fn, lanes_of):
         t_b = _time(batched_fn, batched_arg, iters=iters)
@@ -96,30 +109,31 @@ def lane_batched_bench(
             return [single_fn(lanes_of(i)) for i in range(lanes)]
 
         t_l = _time(loop, batched_arg, iters=iters)
-        rows.append((f"{name}_lanes_batched", t_b, float(lanes)))
-        rows.append((f"{name}_per_lane_loop", t_l, t_l / t_b))
+        record(name, t_b, t_l)
 
     msgs = jax.random.normal(key, (lanes, n, q))
-    cw_b = jax.jit(lambda m: ops.cwtm(m, 2, backend="interpret"))
+    cw_b = jax.jit(jax.vmap(lambda m: ops.cwtm(m, 2, backend="interpret")))
     cw_s = jax.jit(lambda m: ops.cwtm(m, 2, backend="interpret"))
     pair("cwtm", cw_b, msgs, cw_s, lambda i: msgs[i])
 
     grads = jax.random.normal(key, (lanes, d, q))
     w = jnp.full((d,), 1.0 / d, jnp.float32)
-    cc_b = jax.jit(lambda g: ops.coded_combine(g, w, backend="interpret"))
+    cc_b = jax.jit(jax.vmap(lambda g: ops.coded_combine(g, w, backend="interpret")))
     cc_s = jax.jit(lambda g: ops.coded_combine(g, w, backend="interpret"))
     pair("coded_combine", cc_b, grads, cc_s, lambda i: grads[i])
 
     g = jax.random.normal(key, (lanes, q))
     u = jax.random.uniform(jax.random.fold_in(key, 1), (lanes, q))
-    qz_b = jax.jit(lambda a, b: ops.stochastic_quantize(a, b, 16, 1024, backend="interpret"))
+    qz_b = jax.jit(jax.vmap(
+        lambda a, b: ops.stochastic_quantize(a, b, 16, 1024, backend="interpret")
+    ))
+    qz_s = jax.jit(lambda a, b: ops.stochastic_quantize(a, b, 16, 1024, backend="interpret"))
     t_b = _time(qz_b, g, u, iters=iters)
-    jax.block_until_ready(qz_b(g[0], u[0]))
-    t_l = _time(lambda a, b: [qz_b(a[i], b[i]) for i in range(lanes)], g, u, iters=iters)
-    rows.append(("quantize_lanes_batched", t_b, float(lanes)))
-    rows.append(("quantize_per_lane_loop", t_l, t_l / t_b))
+    jax.block_until_ready(qz_s(g[0], u[0]))
+    t_l = _time(lambda a, b: [qz_s(a[i], b[i]) for i in range(lanes)], g, u, iters=iters)
+    record("quantize", t_b, t_l)
 
-    gr_b = jax.jit(lambda m: ops.pairwise_sqdist(m, backend="interpret"))
+    gr_b = jax.jit(jax.vmap(lambda m: ops.pairwise_sqdist(m, backend="interpret")))
     gr_s = jax.jit(lambda m: ops.pairwise_sqdist(m, backend="interpret"))
     pair("pairwise_sqdist", gr_b, msgs, gr_s, lambda i: msgs[i])
     return rows

@@ -157,9 +157,7 @@ def _timed_grid_rows(grid, steps, prefix):
 
     def timed(mode, clear_caches=False):
         if clear_caches:
-            engine._trajectory_program.cache_clear()
-            engine._step_program.cache_clear()
-            engine._finalize_program.cache_clear()
+            engine.clear_program_caches()
         t0 = time.perf_counter()
         results = scenarios.run_grid(grid, steps, mode=mode)
         jax.block_until_ready([r.x for r in results.values()])

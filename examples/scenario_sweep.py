@@ -50,9 +50,12 @@ def main() -> None:
                         choices=["none", "pmap", "shard_map"],
                         help="partition each bucket's scenario-lane axis over "
                              "all visible devices")
-    parser.add_argument("--max-lanes-per-device", type=int, default=None,
+    parser.add_argument("--max-lanes-per-device", default=None,
+                        type=lambda v: v if v == "auto" else int(v),
                         help="stream the sweep in chunks of this many lanes "
-                             "per device (memory-bounded 1000+-row sweeps)")
+                             "per device (memory-bounded 1000+-row sweeps), "
+                             "or 'auto' to probe-tune the capacity per bucket "
+                             "(cached across runs in the tuner store)")
     args = parser.parse_args()
 
     grid = scenarios.section7_grid(

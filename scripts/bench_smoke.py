@@ -181,6 +181,75 @@ def smoke_lm_engine() -> dict:
     return payload
 
 
+def validate_scaling_json(payload: dict) -> None:
+    """Assert the BENCH_scaling.json schema (see
+    scaling_bench.SCALING_SCHEMA_VERSION)."""
+    from benchmarks.scaling_bench import SCALING_SCHEMA_VERSION
+
+    assert isinstance(payload, dict), type(payload)
+    assert payload.get("schema_version") == SCALING_SCHEMA_VERSION, (
+        payload.get("schema_version")
+    )
+    for field in ("lanes", "steps", "n_devices", "dim"):
+        v = payload.get(field)
+        assert isinstance(v, int) and v >= 1, (field, v)
+    rows = payload.get("rows")
+    assert isinstance(rows, list) and rows, "rows must be a non-empty list"
+    int_fields = ("devices", "lanes", "steps", "chunk", "max_lanes_per_device")
+    float_fields = ("cold_s", "warm_s", "lanes_per_s", "predicted_s",
+                    "pct_of_peak", "speedup_vs_1")
+    devices = []
+    for row in rows:
+        expect = set(int_fields) | set(float_fields) | {
+            "platform", "auto", "dominant_term",
+        }
+        assert set(row) == expect, sorted(set(row) ^ expect)
+        for f in int_fields:
+            assert isinstance(row[f], int) and row[f] >= 1, (f, row[f])
+        for f in float_fields:
+            assert isinstance(row[f], float) and row[f] >= 0, (f, row[f])
+        for f in ("warm_s", "cold_s", "lanes_per_s", "speedup_vs_1"):
+            assert row[f] > 0, (f, row[f])
+        assert isinstance(row["platform"], str) and row["platform"], row
+        assert isinstance(row["auto"], bool), row
+        assert row["dominant_term"] in ("compute", "memory", "collective"), row
+        devices.append(row["devices"])
+    assert devices == sorted(devices), f"rows not sorted by devices: {devices}"
+    assert len(set(devices)) == len(devices), f"duplicate device counts: {devices}"
+
+
+def smoke_scaling() -> dict:
+    """One in-process scaling row at the current device count (the 1/2/4/8
+    subprocess fan-out is the CI perf-gate job's work, not tier-1's) +
+    schema validation of the committed BENCH_scaling.json baseline."""
+    from benchmarks.scaling_bench import SCALING_SCHEMA_VERSION, scaling_row
+    from repro.launch import tuner
+
+    tuner.set_store_path(None)  # in-memory store: no disk probes cached
+    try:
+        row = scaling_row(lanes=6, steps=3, n_devices=8, dim=8)
+    finally:
+        tuner.reset_store()
+    assert row["auto"] is True, row
+    assert row["chunk"] >= 1 and row["warm_s"] > 0, row
+    # wrap the single row as a 1-point curve and validate the shared schema
+    payload = {
+        "schema_version": SCALING_SCHEMA_VERSION,
+        "lanes": 6, "steps": 3, "n_devices": 8, "dim": 8,
+        "rows": [dict(row, speedup_vs_1=1.0)],
+    }
+    validate_scaling_json(payload)
+
+    baseline = os.path.join(REPO_ROOT, "benchmarks", "out", "BENCH_scaling.json")
+    with open(baseline) as f:
+        committed = json.load(f)
+    validate_scaling_json(committed)
+    assert [r["devices"] for r in committed["rows"]] == [1, 2, 4, 8], (
+        "committed BENCH_scaling.json must hold the 1/2/4/8-device curve"
+    )
+    return payload
+
+
 def smoke_grid_timing() -> list:
     """Miniature whole-grid-vs-per-scenario timing (with its bitwise check),
     on both the XLA and the kernel backend."""
@@ -215,6 +284,11 @@ def main() -> int:
     print(
         f"lm engine smoke: {len(lm['rows'])} rows, {lm['params']} params on "
         f"{lm['device_count']} device(s), schema + bitwise OK"
+    )
+    scaling = smoke_scaling()
+    print(
+        f"scaling smoke: {len(scaling['rows'])} in-process row(s) + committed "
+        f"baseline, schema OK"
     )
     return 0
 

@@ -1,0 +1,126 @@
+"""CI perf gate over the scaling curve (benchmarks/scaling_bench.py).
+
+Compares a freshly measured ``BENCH_scaling.json`` against the committed
+baseline at ``benchmarks/out/BENCH_scaling.json`` and exits non-zero when
+
+  1. the scaling curve is non-monotone beyond tolerance: warm throughput at
+     K devices fell below ``MONOTONE_FRAC`` x the throughput at the previous
+     point of the curve (sharding should never fall off a cliff as devices
+     are added, even when forced host devices on shared cores make the
+     absolute speedup ~1), or
+  2. warm time regressed: current warm_s exceeds ``WARM_REGRESSION_TOL`` x
+     the baseline warm_s at the same device count.
+
+The tolerances are deliberately loose — CI boxes are noisy, forced host
+devices contend for the same cores, and a perf gate that cries wolf gets
+deleted.  They are chosen to catch the failure modes this repo has actually
+had: an O(devices) retrace sneaking into the warm path (blows warm_s up by
+10x+, far past 2x) and a sharding bug serializing the lanes (halves
+throughput at every doubling, far past 0.5x).
+
+Usage:
+
+    PYTHONPATH=src:. python scripts/perf_gate.py CURRENT.json [BASELINE.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (REPO_ROOT, os.path.join(REPO_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+BASELINE_PATH = os.path.join(REPO_ROOT, "benchmarks", "out", "BENCH_scaling.json")
+
+# throughput at K devices must stay >= this fraction of the previous point
+MONOTONE_FRAC = 0.5
+# current warm_s must stay <= this multiple of the committed baseline
+WARM_REGRESSION_TOL = 2.0
+
+
+def check_monotone(payload: dict, frac: float = MONOTONE_FRAC) -> list[str]:
+    """Failure strings for every throughput cliff in the scaling curve."""
+    rows = sorted(payload["rows"], key=lambda r: r["devices"])
+    failures = []
+    for prev, cur in zip(rows, rows[1:]):
+        floor = frac * prev["lanes_per_s"]
+        if cur["lanes_per_s"] < floor:
+            failures.append(
+                f"non-monotone scaling: {cur['lanes_per_s']:.1f} lanes/s at "
+                f"{cur['devices']} devices < {frac} x "
+                f"{prev['lanes_per_s']:.1f} lanes/s at {prev['devices']}"
+            )
+    return failures
+
+
+def check_regression(
+    current: dict, baseline: dict, tol: float = WARM_REGRESSION_TOL
+) -> list[str]:
+    """Failure strings for every warm-time regression vs the baseline.
+
+    Only device counts present in BOTH curves are compared; a baseline
+    measured with a different sweep shape is a config error, not a
+    regression, and fails loudly.
+    """
+    for field in ("lanes", "steps", "n_devices", "dim"):
+        if current.get(field) != baseline.get(field):
+            return [
+                f"sweep shape mismatch vs baseline: {field}="
+                f"{current.get(field)} != {baseline.get(field)} — regenerate "
+                f"the baseline with benchmarks/scaling_bench.py"
+            ]
+    base_by_dev = {r["devices"]: r for r in baseline["rows"]}
+    failures = []
+    for row in current["rows"]:
+        base = base_by_dev.get(row["devices"])
+        if base is None:
+            continue
+        limit = tol * base["warm_s"]
+        if row["warm_s"] > limit:
+            failures.append(
+                f"warm-time regression at {row['devices']} devices: "
+                f"{row['warm_s']:.3f}s > {tol} x baseline "
+                f"{base['warm_s']:.3f}s"
+            )
+    return failures
+
+
+def run_gate(current_path: str, baseline_path: str = BASELINE_PATH) -> list[str]:
+    """All gate failures for a measured curve (empty list = gate passes)."""
+    from scripts.bench_smoke import validate_scaling_json
+
+    with open(current_path) as f:
+        current = json.load(f)
+    validate_scaling_json(current)
+    failures = check_monotone(current)
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+        validate_scaling_json(baseline)
+        failures += check_regression(current, baseline)
+    else:
+        print(f"perf gate: no baseline at {baseline_path}; "
+              f"monotonicity check only", file=sys.stderr)
+    return failures
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv or len(argv) > 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    current_path = argv[0]
+    baseline_path = argv[1] if len(argv) > 1 else BASELINE_PATH
+    failures = run_gate(current_path, baseline_path)
+    for msg in failures:
+        print(f"PERF GATE FAIL: {msg}", file=sys.stderr)
+    if not failures:
+        print("perf gate: scaling curve OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

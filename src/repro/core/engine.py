@@ -52,12 +52,17 @@ __all__ = [
     "TrajectoryResult",
     "run_trajectory",
     "run_grid",
+    "grid_compiled_hlo",
+    "last_grid_chunk_info",
     "engine_device_grid",
     "make_engine_mesh",
     "engine_device_count",
     "padded_lane_count",
     "pad_lanes",
     "protocol_rounds",
+    "register_program_cache",
+    "program_cache_sizes",
+    "clear_program_caches",
 ]
 
 
@@ -448,6 +453,65 @@ def _finalize_program(loss_fn, takes_data, has_x_star):
     return finalize
 
 
+# ---------------------------------------------------------------------------
+# Program-cache lifecycle
+# ---------------------------------------------------------------------------
+# The lru-cached program builders above pin compiled executables AND their
+# captured device buffers for the process lifetime.  That is the right trade
+# for a sweep (zero warm compiles) but wrong for long-lived processes running
+# many phases — a bench driver that times the grid engine, then the kernel
+# backend, then the LM engine accumulates every phase's programs.  The
+# registry below gives one explicit release point; other modules holding
+# program caches (launch.train's engine-step programs, scenarios' LM problem
+# fns) register theirs here so ONE call clears the whole engine stack without
+# core importing launch.
+
+_EXTRA_PROGRAM_CACHES: dict[str, tuple[Callable[[], None], Callable[[], int]]] = {}
+
+
+def register_program_cache(
+    name: str, clear_fn: Callable[[], None], size_fn: Callable[[], int]
+) -> None:
+    """Register an external program cache (clear + current-size callables)
+    under ``name`` so ``clear_program_caches`` / ``program_cache_sizes``
+    cover it.  Re-registering a name replaces the entry (module reloads)."""
+    _EXTRA_PROGRAM_CACHES[name] = (clear_fn, size_fn)
+
+
+def program_cache_sizes() -> dict[str, int]:
+    """Entry counts of every live program cache — the engine's own four lru
+    caches plus everything registered via ``register_program_cache``."""
+    sizes = {
+        "engine.trajectory": _trajectory_program.cache_info().currsize,
+        "engine.step": _step_program.cache_info().currsize,
+        "engine.finalize": _finalize_program.cache_info().currsize,
+        "engine.grid": _grid_program.cache_info().currsize,
+    }
+    for name, (_, size_fn) in _EXTRA_PROGRAM_CACHES.items():
+        sizes[name] = size_fn()
+    return sizes
+
+
+def clear_program_caches() -> dict[str, int]:
+    """Release every cached compiled program (and the device buffers each
+    pins); returns the per-cache entry counts that were dropped.
+
+    The zero-warm-compile guarantee is *per cache generation*: after a clear
+    the next sweep of a bucket compiles once and every sweep after that is
+    again compile-free (tests/test_tuner.py asserts the eviction/refill
+    cycle).  Benchmark drivers call this between phases so one phase's
+    programs do not inflate the next phase's footprint.
+    """
+    dropped = program_cache_sizes()
+    _trajectory_program.cache_clear()
+    _step_program.cache_clear()
+    _finalize_program.cache_clear()
+    _grid_program.cache_clear()
+    for clear_fn, _ in _EXTRA_PROGRAM_CACHES.values():
+        clear_fn()
+    return dropped
+
+
 def pad_lanes(tree: Any, pad: int) -> Any:
     """Append ``pad`` copies of the last lane to every leaf's leading axis.
 
@@ -507,7 +571,7 @@ def run_grid(
     x_star: jax.Array | None = None,
     x0_batched: bool = False,
     shard: str = "none",
-    max_lanes_per_device: int | None = None,
+    max_lanes_per_device: int | str | None = None,
 ) -> TrajectoryResult:
     """Run a whole *batch of trajectories* as ONE compiled on-device program.
 
@@ -576,7 +640,12 @@ def run_grid(
         padded tail chunk) has the same lane count, so all chunks share ONE
         compiled program — a warm chunked sweep still makes zero compiles.
         Results are concatenated in lane order; also valid with
-        ``shard="none"`` (chunked single-device streaming).
+        ``shard="none"`` (chunked single-device streaming).  Pass ``"auto"``
+        to let ``repro.launch.tuner`` pick the capacity: a power-then-
+        binary-search over probed chunk timings, cached per (bucket
+        signature, device kind) on disk so a warm auto sweep re-probes
+        nothing.  Because the per-lane math never depends on the chunk size,
+        ``"auto"`` is bitwise-equal to any hand-picked capacity.
 
     Returns:
       A batched ``TrajectoryResult``: ``x`` has a leading ``(S,)`` lane axis
@@ -591,6 +660,68 @@ def run_grid(
     ``make_server_fn``) rather than fresh lambdas — a fresh closure per call
     recompiles every time and pins its captured arrays in the cache.
     """
+    plan = _plan_grid(
+        cfg, keys, x0, subset_grad_fn, steps=steps, lr=lr, data=data,
+        data_batched=data_batched, attack_branches=attack_branches,
+        attack_ids=attack_ids, server_branches=server_branches,
+        server_ids=server_ids, optimizer=optimizer, grad_scale=grad_scale,
+        loss_fn=loss_fn, x_star=x_star, x0_batched=x0_batched, shard=shard,
+    )
+    chunk = _resolve_chunk(plan, max_lanes_per_device)
+    outs = []
+    for start in range(0, plan.n_lanes, chunk):
+        take = min(chunk, plan.n_lanes - start)
+        x, metrics = plan.program(*plan.chunk_operands(start, take, chunk))
+        if take < chunk:  # drop the replicated padding lanes
+            x = jax.tree.map(lambda v: v[:take], x)
+            metrics = {k: v[:take] for k, v in metrics.items()}
+        outs.append((x, metrics))
+    if len(outs) == 1:
+        x, metrics = outs[0]
+    else:
+        x = jax.tree.map(lambda *vs: jnp.concatenate(vs, axis=0), *[o[0] for o in outs])
+        metrics = {
+            k: jnp.concatenate([o[1][k] for o in outs], axis=0) for k in outs[0][1]
+        }
+    return TrajectoryResult(x=x, metrics=metrics)
+
+
+@dataclasses.dataclass(frozen=True)
+class _GridPlan:
+    """Everything ``run_grid`` needs after the prologue: the cached compiled
+    program, the operand tuple, which operands carry a lane axis, and a
+    chunk-slicer.  Shared with ``grid_compiled_hlo`` (the roofline hook) so
+    introspection lowers the exact program the sweep runs."""
+
+    program: Callable
+    operands: tuple
+    lane_axes: tuple
+    n_lanes: int
+    devs: int
+    signature: tuple  # the tuner's bucket signature (lane count excluded)
+
+    def chunk_operands(self, start: int, take: int, chunk: int) -> tuple:
+        if start == 0 and take == self.n_lanes == chunk:
+            return self.operands  # whole sweep, no padding: the as-is path
+        return tuple(
+            pad_lanes(
+                jax.tree.map(lambda v: v[start : start + take], op),
+                chunk - take,
+            )
+            if lanes
+            else op
+            for op, lanes in zip(self.operands, self.lane_axes)
+        )
+
+
+def _plan_grid(
+    cfg, keys, x0, subset_grad_fn, *, steps, lr, data, data_batched,
+    attack_branches, attack_ids, server_branches, server_ids, optimizer,
+    grad_scale, loss_fn, x_star, x0_batched, shard,
+) -> _GridPlan:
+    """Validate + assemble one grid call: branch tables, the cached program,
+    the operand tuple and the lane-axis mask (the shared prologue of
+    ``run_grid`` and ``grid_compiled_hlo``)."""
     if attack_ids is not None and (attack_branches is None or len(attack_branches) < 2):
         raise ValueError(
             "attack_ids given but attack_branches has fewer than 2 entries — "
@@ -609,8 +740,6 @@ def run_grid(
     )
     if shard not in ("none", "pmap", "shard_map"):
         raise ValueError(f"unknown shard mode {shard!r}")
-    if max_lanes_per_device is not None and max_lanes_per_device < 1:
-        raise ValueError(f"max_lanes_per_device must be >= 1, got {max_lanes_per_device}")
     lr_batched = not callable(lr) and getattr(jnp.asarray(lr), "ndim", 0) == 1
     axes_sig = (
         lr_batched,
@@ -648,38 +777,132 @@ def run_grid(
             "lane, and there is no lane to replicate)"
         )
     devs = engine_device_count() if shard != "none" else 1
-    if max_lanes_per_device is None:
-        chunk = padded_lane_count(n_lanes, devs)  # pad up to a device multiple
-    else:
-        chunk = max_lanes_per_device * devs
-    outs = []
-    for start in range(0, n_lanes, chunk):
-        take = min(chunk, n_lanes - start)
-        if start == 0 and take == n_lanes == chunk:
-            chunk_ops = operands  # whole sweep, no padding: the as-is path
-        else:
-            chunk_ops = tuple(
-                pad_lanes(
-                    jax.tree.map(lambda v: v[start : start + take], op),
-                    chunk - take,
-                )
-                if lanes
-                else op
-                for op, lanes in zip(operands, lane_axes)
+    # The tuner's bucket signature: everything the capacity decision depends
+    # on — protocol structure, scan length, shard mode and the PER-LANE
+    # operand shapes/dtypes (the lane count itself is excluded so sweeps of
+    # different sizes share one tuned capacity).
+    shapes_sig = tuple(
+        tuple(
+            (tuple(v.shape[1:]) if lanes else tuple(v.shape), str(v.dtype))
+            for v in map(jnp.asarray, jax.tree.leaves(op))
+        )
+        for op, lanes in zip(operands, lane_axes)
+    )
+    signature = ("grid", repr(cfg), steps, optimizer, shard, axes_sig, shapes_sig)
+    return _GridPlan(
+        program=program, operands=operands, lane_axes=lane_axes,
+        n_lanes=n_lanes, devs=devs, signature=signature,
+    )
+
+
+_LAST_GRID_CHUNK: dict[str, Any] = {}
+
+
+def last_grid_chunk_info() -> dict[str, Any]:
+    """How the most recent ``run_grid``/``grid_compiled_hlo`` call chunked its
+    sweep: ``{"max_lanes_per_device", "chunk", "n_lanes", "devices",
+    "auto"}``.  Benchmark drivers read the auto-tuned capacity back from
+    here (the sweep itself only returns trajectories)."""
+    return dict(_LAST_GRID_CHUNK)
+
+
+def _resolve_chunk(plan: _GridPlan, max_lanes_per_device: int | str | None) -> int:
+    """Chunk size in lanes for one grid call; resolves ``"auto"`` through the
+    lane-capacity tuner (probing this plan's actual compiled program)."""
+    auto = isinstance(max_lanes_per_device, str)
+    if auto:
+        if max_lanes_per_device != "auto":
+            raise ValueError(
+                f"max_lanes_per_device must be an int, None or 'auto'; "
+                f"got {max_lanes_per_device!r}"
             )
-        x, metrics = program(*chunk_ops)
-        if take < chunk:  # drop the replicated padding lanes
-            x = jax.tree.map(lambda v: v[:take], x)
-            metrics = {k: v[:take] for k, v in metrics.items()}
-        outs.append((x, metrics))
-    if len(outs) == 1:
-        x, metrics = outs[0]
+        # Deferred import: core must not depend on launch at module scope —
+        # the tuner is pure Python (no engine import), so this cannot cycle.
+        from repro.launch.tuner import auto_max_lanes
+        from repro.timing import block_time
+
+        dev0 = jax.devices()[0]
+        device_kind = f"{dev0.platform}/{getattr(dev0, 'device_kind', '')}"
+
+        def probe(capacity: int) -> float:
+            lanes = capacity * plan.devs
+            take = min(lanes, plan.n_lanes)
+            ops = plan.chunk_operands(0, take, lanes)
+            # warmup=1 compiles this chunk shape; the timed call is warm.
+            # The chosen shape stays compiled in jit's per-shape cache, so
+            # the sweep that follows starts warm at the winning capacity.
+            return block_time(plan.program, *ops, iters=1, warmup=1)
+
+        max_lanes_per_device = auto_max_lanes(
+            probe,
+            n_lanes=plan.n_lanes,
+            n_devices=plan.devs,
+            signature=plan.signature,
+            device_kind=device_kind,
+        )
+    if max_lanes_per_device is not None and max_lanes_per_device < 1:
+        raise ValueError(
+            f"max_lanes_per_device must be >= 1, got {max_lanes_per_device}"
+        )
+    if max_lanes_per_device is None:
+        chunk = padded_lane_count(plan.n_lanes, plan.devs)  # one padded chunk
     else:
-        x = jax.tree.map(lambda *vs: jnp.concatenate(vs, axis=0), *[o[0] for o in outs])
-        metrics = {
-            k: jnp.concatenate([o[1][k] for o in outs], axis=0) for k in outs[0][1]
-        }
-    return TrajectoryResult(x=x, metrics=metrics)
+        chunk = max_lanes_per_device * plan.devs
+    _LAST_GRID_CHUNK.clear()
+    _LAST_GRID_CHUNK.update(
+        max_lanes_per_device=max_lanes_per_device, chunk=chunk,
+        n_lanes=plan.n_lanes, devices=plan.devs, auto=auto,
+    )
+    return chunk
+
+
+def grid_compiled_hlo(
+    cfg: ProtocolConfig,
+    keys: jax.Array,
+    x0: Any,
+    subset_grad_fn: Callable[[Any, Any], jax.Array],
+    *,
+    steps: int,
+    lr: float | jax.Array | Callable[[jax.Array], jax.Array],
+    data: Any = None,
+    data_batched: bool = True,
+    attack_branches: tuple | None = None,
+    attack_ids: jax.Array | None = None,
+    server_branches: tuple | None = None,
+    server_ids: jax.Array | None = None,
+    optimizer: str = "sgd",
+    grad_scale: float = 1.0,
+    loss_fn: Callable[[Any, Any], jax.Array] | None = None,
+    x_star: jax.Array | None = None,
+    x0_batched: bool = False,
+    shard: str = "none",
+    max_lanes_per_device: int | str | None = None,
+) -> str:
+    """Optimized HLO text of the EXACT chunk program a ``run_grid`` call with
+    the same arguments executes — the hook ``launch.roofline`` analyzes to
+    put a %-of-peak figure next to every scaling-benchmark wall clock.
+
+    Same signature as ``run_grid`` (including ``max_lanes_per_device=
+    "auto"``, which resolves through the tuner cache).  ``shard="pmap"`` has
+    no single jitted module to lower (per-device replica dispatch) and is
+    rejected.
+    """
+    plan = _plan_grid(
+        cfg, keys, x0, subset_grad_fn, steps=steps, lr=lr, data=data,
+        data_batched=data_batched, attack_branches=attack_branches,
+        attack_ids=attack_ids, server_branches=server_branches,
+        server_ids=server_ids, optimizer=optimizer, grad_scale=grad_scale,
+        loss_fn=loss_fn, x_star=x_star, x0_batched=x0_batched, shard=shard,
+    )
+    if shard == "pmap":
+        raise ValueError(
+            "grid_compiled_hlo needs a single jitted module; shard='pmap' "
+            "dispatches per-device replicas — lower shard='shard_map' instead"
+        )
+    chunk = _resolve_chunk(plan, max_lanes_per_device)
+    take = min(chunk, plan.n_lanes)
+    ops = plan.chunk_operands(0, take, chunk)
+    return plan.program.lower(*ops).compile().as_text()
 
 
 @functools.lru_cache(maxsize=128)

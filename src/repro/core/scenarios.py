@@ -63,6 +63,7 @@ __all__ = [
     "PAPER_FIG6",
     "run_scenario",
     "run_grid",
+    "grid_compiled_hlo",
     "lm_arch",
     "lm_sweep",
     "run_lm_scenario",
@@ -315,16 +316,14 @@ class _BucketProblem:
     optimizer: str = "sgd"
 
 
-def _run_bucket(
-    group: list[Scenario],
-    steps: int,
-    prob: _BucketProblem,
-    *,
-    seed: int,
-    shard: str = "none",
-    max_lanes_per_device: int | None = None,
-) -> dict[str, TrajectoryResult]:
-    """One compile bucket -> one vmapped ``engine.run_grid`` call."""
+def _bucket_engine_args(
+    group: list[Scenario], prob: _BucketProblem, *, seed: int
+) -> tuple[ProtocolConfig, jax.Array, dict]:
+    """The ``engine.run_grid`` call of one compile bucket: template config,
+    stacked lane keys and the full kwargs dict (branch tables, traced ids,
+    per-lane lr, the problem adapter's operands).  Shared by ``_run_bucket``
+    and ``grid_compiled_hlo`` so roofline introspection lowers the exact
+    program the sweep runs."""
     tmpl = group[0].protocol()
     attack_names = list(dict.fromkeys(s.attack for s in group))
     agg_names = list(dict.fromkeys(s.aggregator for s in group))
@@ -350,12 +349,7 @@ def _run_bucket(
     lrs = [s.lr for s in group]
     lr = lrs[0] if len(set(lrs)) == 1 else jnp.array(lrs, jnp.float32)
     keys = jnp.stack([jax.random.PRNGKey(seed)] * len(group))
-    res = engine_lib.run_grid(
-        tmpl,
-        keys,
-        prob.x0,
-        prob.subset_grad_fn,
-        steps=steps,
+    kwargs = dict(
         lr=lr,
         data=prob.data,
         data_batched=prob.data_batched,
@@ -366,10 +360,75 @@ def _run_bucket(
         optimizer=prob.optimizer,
         grad_scale=prob.grad_scale,
         loss_fn=prob.loss_fn,
+    )
+    return tmpl, keys, kwargs
+
+
+def _run_bucket(
+    group: list[Scenario],
+    steps: int,
+    prob: _BucketProblem,
+    *,
+    seed: int,
+    shard: str = "none",
+    max_lanes_per_device: int | str | None = None,
+) -> dict[str, TrajectoryResult]:
+    """One compile bucket -> one vmapped ``engine.run_grid`` call."""
+    tmpl, keys, kwargs = _bucket_engine_args(group, prob, seed=seed)
+    res = engine_lib.run_grid(
+        tmpl,
+        keys,
+        prob.x0,
+        prob.subset_grad_fn,
+        steps=steps,
         shard=shard,
         max_lanes_per_device=max_lanes_per_device,
+        **kwargs,
     )
     return {s.name: res.lane(i) for i, s in enumerate(group)}
+
+
+def grid_compiled_hlo(
+    scenarios: Iterable[Scenario],
+    steps: int,
+    *,
+    seed: int = 0,
+    problem: tuple[jax.Array, jax.Array] | None = None,
+    dim: int = 100,
+    exact: bool = True,
+    shard: str = "none",
+    max_lanes_per_device: int | str | None = None,
+) -> str:
+    """Optimized HLO of the single compiled chunk program a same-arguments
+    ``run_grid`` call executes — the scenario-level face of
+    ``engine.grid_compiled_hlo`` (the roofline %-of-peak hook).
+
+    The scenario list must collapse into ONE compile bucket (e.g. a
+    ``synthetic_sweep``): a multi-bucket sweep has one program per bucket and
+    no single module to analyze.
+    """
+    scns = list(scenarios)
+    buckets: dict[tuple, list[Scenario]] = {}
+    for s in scns:
+        buckets.setdefault(_bucket_signature(s, exact=exact), []).append(s)
+    if len(buckets) != 1:
+        raise ValueError(
+            f"grid_compiled_hlo needs a single compile bucket, got "
+            f"{len(buckets)} — analyze each bucket's scenario subset separately"
+        )
+    (group,) = buckets.values()
+    prob = _linreg_bucket_problem(group, seed=seed, problem=problem, dim=dim)
+    tmpl, keys, kwargs = _bucket_engine_args(group, prob, seed=seed)
+    return engine_lib.grid_compiled_hlo(
+        tmpl,
+        keys,
+        prob.x0,
+        prob.subset_grad_fn,
+        steps=steps,
+        shard=shard,
+        max_lanes_per_device=max_lanes_per_device,
+        **kwargs,
+    )
 
 
 def _linreg_bucket_problem(
@@ -415,7 +474,7 @@ def run_grid(
     mode: str = "grid",
     exact: bool = True,
     shard: str = "none",
-    max_lanes_per_device: int | None = None,
+    max_lanes_per_device: int | str | None = None,
 ) -> dict[str, TrajectoryResult]:
     """Sweep scenarios through the engine; returns ``{name: TrajectoryResult}``
     in input order (use ``grid_finals`` for the final-metric summary).
@@ -449,6 +508,9 @@ def run_grid(
     bucket through equal-sized chunks of one cached program — together they
     are what makes 1000+-row sweeps practical.  Both keep every lane bitwise
     equal to the unsharded grid at the clean simulation scales.
+    ``max_lanes_per_device="auto"`` delegates the capacity choice to
+    ``repro.launch.tuner`` (probed once per bucket signature, cached on
+    disk; bitwise-equal to any hand-picked value).
 
     ``mode="scan"`` / ``mode="loop"`` fall back to one ``run_scenario`` call
     per row (the bit-exactness references).
@@ -596,6 +658,17 @@ def _lm_fns(arch):
     return x0, lm_subset_grads, lm_loss
 
 
+# _lm_fns pins x0 + each closure's captured parameter template on device for
+# the process lifetime — exactly the footprint engine.clear_program_caches
+# exists to release, so it rides the same registry.  (Clearing changes the
+# callables' identities, which correctly also invalidates any grid program
+# cached on them.)
+engine_lib.register_program_cache(
+    "scenarios.lm_fns", _lm_fns.cache_clear,
+    lambda: _lm_fns.cache_info().currsize,
+)
+
+
 def _lm_problem(arch, *, seed: int, n_subsets: int, sigma_h: float,
                 per_subset: int, seq_len: int):
     """The shared heterogeneous-LM data of one bucket: ``(tokens, labels)``
@@ -709,7 +782,7 @@ def run_lm_grid(
     mode: str = "grid",
     exact: bool = True,
     shard: str = "none",
-    max_lanes_per_device: int | None = None,
+    max_lanes_per_device: int | str | None = None,
 ) -> dict[str, TrajectoryResult]:
     """Sweep LM-scale scenarios through the engine: every lane trains the
     small transformer's flattened parameter vector through the full protocol

@@ -181,6 +181,50 @@ def _flatten_lanes(x: jax.Array, event_ndim: int):
     return x.reshape((-1,) + x.shape[x.ndim - event_ndim :]), lead
 
 
+# ------------------------------------------------- measured launch crossover
+#
+# BENCH_kernels.json shows the lane-batched interpret launch LOSING to the
+# per-lane dispatch loop at small shapes (the inlined Pallas grid loop beats
+# the small cached single-lane program only past a lane-count crossover), so
+# the explicit leading-lane-axes path below picks per (op, lane count) from
+# the measured crossover table ``benchmarks/kernel_bench.py`` records into
+# the tuner store — instead of always lane-batching.  With no measurement the
+# table answers "batched" (the previous unconditional behavior).
+#
+# Scope: ONLY the explicit-lane path.  Under ``jax.vmap`` (the grid engine's
+# regime) the custom_vmap rules above always promote/fold to the batched
+# launch — a traced lax.switch body cannot host a Python loop, and keeping
+# the vmap path single-launch is part of the grid bit-exactness story.
+# Either way the values agree bitwise: the loop stacks single-lane calls,
+# and a single-lane call IS the one-lane batched launch (see ``single``).
+
+# past this many lanes a Python loop unrolls into an oversized jit program;
+# batched launches win well before that in every measurement
+_LOOP_UNROLL_MAX = 64
+
+
+def _use_loop(op: str, lanes: int) -> bool:
+    if lanes > _LOOP_UNROLL_MAX:
+        return False
+    # Deferred import: the tuner is pure Python (no kernels import — no cycle).
+    from repro.launch.tuner import lane_dispatch
+
+    return lane_dispatch(op, lanes) == "loop"
+
+
+def _lane_launch(op: str, fns, *flat_args):
+    """Run a lane-flattened kernel call as one batched launch or as a
+    per-lane loop of single launches, per the measured crossover table.
+    ``fns`` is the ``(single, lanes)`` pair; ``flat_args`` all carry one
+    leading lane axis."""
+    single, lanes_fn = fns
+    n_lanes = flat_args[0].shape[0]
+    if _use_loop(op, n_lanes):
+        outs = [single(*(a[i] for a in flat_args)) for i in range(n_lanes)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return lanes_fn(*flat_args)
+
+
 # -------------------------------------------------------------- public wrappers
 
 
@@ -194,7 +238,7 @@ def cwtm(msgs: jax.Array, trim: int, backend: str = DEFAULT_BACKEND, q_block: in
     if msgs.ndim == 2:
         return _cwtm_fns(trim, qb, _interp(backend))[0](padded)[:q]
     flat, lead = _flatten_lanes(padded, 2)
-    out = _cwtm_fns(trim, qb, _interp(backend))[1](flat)
+    out = _lane_launch("cwtm", _cwtm_fns(trim, qb, _interp(backend)), flat)
     return out.reshape(lead + out.shape[-1:])[..., :q]
 
 
@@ -211,7 +255,7 @@ def coded_combine(
         return _combine_fns(qb, _interp(backend))[0](padded, weights)[:q]
     flat, lead = _flatten_lanes(padded, 2)
     w = jnp.broadcast_to(weights, grads.shape[:-1]).reshape(flat.shape[:-1])
-    out = _combine_fns(qb, _interp(backend))[1](flat, w)
+    out = _lane_launch("coded_combine", _combine_fns(qb, _interp(backend)), flat, w)
     return out.reshape(lead + out.shape[-1:])[..., :q]
 
 
@@ -234,7 +278,7 @@ def stochastic_quantize(
         return _quantize_fns(levels, qb, _interp(backend))[0](gp, up)[:q]
     gf, lead = _flatten_lanes(gp, 1)
     uf, _ = _flatten_lanes(up, 1)
-    out = _quantize_fns(levels, qb, _interp(backend))[1](gf, uf)
+    out = _lane_launch("quantize", _quantize_fns(levels, qb, _interp(backend)), gf, uf)
     return out.reshape(lead + out.shape[-1:])[..., :q]
 
 
@@ -263,7 +307,9 @@ def gather_combine(
     w = jnp.broadcast_to(weights, lead + weights.shape[-1:]).reshape(
         (flat.shape[0],) + weights.shape[-1:]
     )
-    out = _gather_combine_fns(qb, _interp(backend))[1](flat, flat_s, w)
+    out = _lane_launch(
+        "gather_combine", _gather_combine_fns(qb, _interp(backend)), flat, flat_s, w
+    )
     return out.reshape(lead + out.shape[-2:])[..., :q]
 
 
@@ -290,7 +336,9 @@ def attack(
         return _attack_fns(name, param, qb, _interp(backend))[0](padded, mask)[:, :q]
     flat, lead = _flatten_lanes(padded, 2)
     flat_mask, _ = _flatten_lanes(jnp.broadcast_to(mask, lead + mask.shape[-1:]), 1)
-    out = _attack_fns(name, param, qb, _interp(backend))[1](flat, flat_mask)
+    out = _lane_launch(
+        "attack", _attack_fns(name, param, qb, _interp(backend)), flat, flat_mask
+    )
     return out.reshape(lead + out.shape[-2:])[..., :q]
 
 
@@ -304,7 +352,7 @@ def pairwise_sqdist(msgs: jax.Array, backend: str = DEFAULT_BACKEND, q_block: in
         gram, sq = _gram_fns(qb, _interp(backend))[0](padded)
     else:
         flat, lead = _flatten_lanes(padded, 2)
-        gram, sq = _gram_fns(qb, _interp(backend))[1](flat)
+        gram, sq = _lane_launch("pairwise_sqdist", _gram_fns(qb, _interp(backend)), flat)
         gram = gram.reshape(lead + gram.shape[-2:])
         sq = sq.reshape(lead + sq.shape[-1:])
     return jnp.maximum(

@@ -16,7 +16,6 @@ skipped if already present (incremental).
 """
 import argparse
 import json
-import time
 import traceback
 
 import jax
@@ -36,6 +35,7 @@ from repro.launch.serve import (
 from repro.launch.train import build_train_step, param_mesh_rules
 from repro.models.module import logical_to_mesh
 from repro.optim import make_optimizer
+from repro.timing import wallclock
 
 
 def skip_reason(cfg: ArchConfig, shape: ShapeConfig) -> str | None:
@@ -207,7 +207,9 @@ def run_case(arch: str, shape_name: str, multi_pod: bool, tcfg: TrainConfig,
         return rec
 
     cfg = _effective_cfg(cfg0, shape)
-    t0 = time.time()
+    # wallclock (perf_counter) not time.time(): compile intervals measured
+    # across an NTP step/slew would be garbage — same clock as every bench
+    t0 = wallclock()
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
         chips = mesh.size
@@ -237,7 +239,7 @@ def run_case(arch: str, shape_name: str, multi_pod: bool, tcfg: TrainConfig,
         rec.update(
             status="ok",
             chips=chips,
-            compile_s=round(time.time() - t0, 1),
+            compile_s=round(wallclock() - t0, 1),
             memory={
                 "argument_bytes": mem.argument_size_in_bytes,
                 "output_bytes": mem.output_size_in_bytes,
@@ -260,7 +262,7 @@ def run_case(arch: str, shape_name: str, multi_pod: bool, tcfg: TrainConfig,
     except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
         rec.update(status="error", error=f"{type(e).__name__}: {e}",
                    trace=traceback.format_exc()[-4000:],
-                   compile_s=round(time.time() - t0, 1))
+                   compile_s=round(wallclock() - t0, 1))
     _save(path, rec)
     return rec
 

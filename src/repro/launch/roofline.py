@@ -392,6 +392,82 @@ def derive_terms(
 
 
 # ---------------------------------------------------------------------------
+# %-of-peak for engine programs (the benchmark-row wiring)
+# ---------------------------------------------------------------------------
+# The dry-run path above targets the TPU v5e constants; the scaling benches
+# run the engine's compiled programs on whatever backend is live, so the
+# roofline needs per-platform peaks.  The CPU numbers are order-of-magnitude
+# figures for one commodity core (a few GFLOP/s of non-vectorized f32 work,
+# ~10 GB/s effective stream bandwidth) — good enough to TRACK "% of peak"
+# across PRs on the same CI runner class, not to compare machines.
+
+PLATFORM_PEAKS = {
+    "tpu": {"peak_flops": PEAK_FLOPS, "mem_bw": HBM_BW, "link_bw": LINK_BW},
+    "cpu": {"peak_flops": 8e9, "mem_bw": 10e9, "link_bw": 10e9},
+}
+
+
+def platform_peaks(platform: str | None = None) -> dict:
+    """{peak_flops, mem_bw, link_bw} for ``platform`` (default: the live jax
+    backend).  Unknown platforms (gpu today) fall back to the cpu figures —
+    pessimistic, clearly wrong in absolute terms, still monotone for
+    regression tracking."""
+    if platform is None:
+        import jax
+
+        platform = jax.default_backend()
+    return PLATFORM_PEAKS.get(platform, PLATFORM_PEAKS["cpu"])
+
+
+def analyze_compiled(hlo_text: str, platform: str | None = None) -> dict:
+    """Scan-aware cost of one compiled module + its roofline-predicted
+    runtime on ``platform``: ``{flops, bytes_hbm, wire_bytes, n_while,
+    max_trip, predicted_s, compute_s, memory_s, collective_s, dominant}``.
+
+    ``predicted_s`` is the max of the three terms — the time a perfectly
+    overlapped execution at peak rates would need.
+    """
+    an = analyze_hlo(hlo_text)
+    peaks = platform_peaks(platform)
+    compute_s = an.flops / peaks["peak_flops"]
+    memory_s = an.bytes_hbm / peaks["mem_bw"]
+    collective_s = an.wire_bytes / peaks["link_bw"]
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    return {
+        "flops": an.flops,
+        "bytes_hbm": an.bytes_hbm,
+        "wire_bytes": an.wire_bytes,
+        "n_while": an.n_while,
+        "max_trip": an.max_trip,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "predicted_s": max(terms.values()),
+        "dominant": dominant,
+    }
+
+
+def percent_of_peak(
+    analysis: dict, measured_s: float, calls: float = 1.0
+) -> float:
+    """Roofline utilization of a measured wall clock: 100 x predicted / actual
+    for ``calls`` executions of the analyzed module.
+
+    100 means the run hit the platform's roofline (never in practice; the
+    peaks are marketing numbers and the analysis undercounts overheads);
+    the value is a *relative* efficiency tracked across PRs — a warm sweep
+    whose %-of-peak halves got slower in a way wall clock alone can't
+    attribute.  Clamped below at 0; not clamped above (a >100 reading means
+    the platform peaks in ``PLATFORM_PEAKS`` are stale for this machine —
+    visible is better than silently capped).
+    """
+    if measured_s <= 0:
+        raise ValueError(f"measured_s must be > 0, got {measured_s}")
+    return max(0.0, 100.0 * analysis["predicted_s"] * calls / measured_s)
+
+
+# ---------------------------------------------------------------------------
 # Analytic MODEL_FLOPS (the 6ND / 2ND yardstick)
 # ---------------------------------------------------------------------------
 def active_params(cfg) -> int:

@@ -60,6 +60,7 @@ from repro.core import attacks as attack_lib
 from repro.core import compression as comp_lib
 from repro.core.byzantine import ProtocolConfig, protocol_round
 from repro.core.coding import flatten_pytree, unflatten_pytree
+from repro.core import engine as engine_lib
 from repro.core.engine import pad_lanes
 from repro.core.protomath import BlockedProtocol, protocol_context
 from repro.launch.mesh import (
@@ -149,6 +150,14 @@ def engine_program_cache_info() -> dict:
 
 def engine_program_cache_clear() -> None:
     _ENGINE_PROGRAMS.clear()
+
+
+# One release point for the whole engine stack: engine.clear_program_caches()
+# drops these round/apply programs together with the core lru caches.
+engine_lib.register_program_cache(
+    "train.engine_step", engine_program_cache_clear,
+    lambda: len(_ENGINE_PROGRAMS),
+)
 
 
 def _build_round_program(cfg, pcfg, remat, n_sub, shard, devs, specs):

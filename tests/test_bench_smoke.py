@@ -62,10 +62,14 @@ def test_grid_sharded_smoke_and_json_schema():
     assert "grid1k_unsharded_warm" in names
 
 
+@pytest.mark.slow
 def test_lm_engine_smoke_and_json_schema():
     """The sharded LM-engine sweep bench runs at tiny shapes — with its
     bitwise sharded-vs-unsharded, grid-vs-standalone and zero-compile-warm
-    assertions — and its JSON validates."""
+    assertions — and its JSON validates.  Slow-marked (the LM sweep compiles
+    several transformer programs): every push still runs it via the CI
+    determinism job's standalone ``scripts/bench_smoke.py``, and nightly via
+    --runslow."""
     payload = bench_smoke.smoke_lm_engine()
     bench_smoke.validate_lm_engine_json(payload)  # idempotent re-check
     assert payload["shard"] == "shard_map"
@@ -104,6 +108,76 @@ def test_validate_lm_engine_json_rejects_drift():
         bad = {**base(), **breakage}
         with pytest.raises(AssertionError):
             bench_smoke.validate_lm_engine_json(bad)
+
+
+def _scaling_row(devices, warm_s=1.0, lanes_per_s=64.0, speedup=1.0):
+    return {
+        "devices": devices, "platform": "cpu", "lanes": 64, "steps": 6,
+        "cold_s": 2.0, "warm_s": warm_s, "lanes_per_s": lanes_per_s,
+        "chunk": 8, "max_lanes_per_device": 8, "auto": True,
+        "predicted_s": 0.01, "pct_of_peak": 1.0,
+        "dominant_term": "memory", "speedup_vs_1": speedup,
+    }
+
+
+def _scaling_base():
+    return {
+        "schema_version": 1, "lanes": 64, "steps": 6, "n_devices": 10,
+        "dim": 16,
+        "rows": [_scaling_row(k) for k in (1, 2, 4, 8)],
+    }
+
+
+def test_scaling_smoke_and_committed_baseline():
+    """One in-process auto-tuned scaling row validates, and the committed
+    1/2/4/8-device BENCH_scaling.json baseline still matches the schema."""
+    payload = bench_smoke.smoke_scaling()
+    bench_smoke.validate_scaling_json(payload)  # idempotent re-check
+    row = payload["rows"][0]
+    assert row["auto"] is True
+    assert row["pct_of_peak"] >= 0
+
+
+def test_validate_scaling_json_rejects_drift():
+    bench_smoke.validate_scaling_json(_scaling_base())
+    for breakage in (
+        {"schema_version": 999},
+        {"rows": []},
+        {"rows": [_scaling_row(8), _scaling_row(1)]},  # not sorted by devices
+        {"rows": [_scaling_row(2), _scaling_row(2)]},  # duplicate devices
+        {"rows": [dict(_scaling_row(1), warm_s=0.0)]},
+        {"rows": [dict(_scaling_row(1), dominant_term="magic")]},
+        {"rows": [{k: v for k, v in _scaling_row(1).items() if k != "chunk"}]},
+        {"lanes": 0},
+    ):
+        bad = {**_scaling_base(), **breakage}
+        with pytest.raises(AssertionError):
+            bench_smoke.validate_scaling_json(bad)
+
+
+def test_perf_gate_catches_cliff_and_regression():
+    """The CI gate flags a throughput cliff and a warm-time blowup but
+    tolerates the noisy near-flat curves a shared-core CI box produces."""
+    import perf_gate
+
+    flat = _scaling_base()  # identical throughput at every device count
+    assert perf_gate.check_monotone(flat) == []
+    assert perf_gate.check_regression(flat, flat) == []
+
+    cliff = dict(_scaling_base(), rows=[
+        _scaling_row(1, lanes_per_s=100.0),
+        _scaling_row(2, lanes_per_s=30.0),  # < 0.5 x the previous point
+    ])
+    assert len(perf_gate.check_monotone(cliff)) == 1
+
+    slower = dict(_scaling_base(), rows=[
+        _scaling_row(k, warm_s=10.0) for k in (1, 2, 4, 8)  # 10x the baseline
+    ])
+    fails = perf_gate.check_regression(slower, _scaling_base())
+    assert len(fails) == 4 and "regression" in fails[0]
+    # a baseline from a different sweep shape is a config error, not a pass
+    mismatched = dict(_scaling_base(), lanes=128)
+    assert "mismatch" in perf_gate.check_regression(flat, mismatched)[0]
 
 
 def test_validate_grid_sharded_json_rejects_drift():

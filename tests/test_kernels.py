@@ -21,7 +21,7 @@ def test_cwtm_kernel_sweep(n, q, trim, dtype, key):
 
 
 @given(st.integers(2, 16), st.sampled_from([512, 1024, 2048]))
-@settings(max_examples=6, deadline=None)
+@settings(max_examples=4, deadline=None)
 def test_cwtm_kernel_property(n, q):
     key = jax.random.PRNGKey(n * q)
     msgs = jax.random.normal(key, (n, q))

@@ -47,7 +47,9 @@ def test_sharded_bitwise_vs_unsharded_and_standalone(n):
     device-padding path is always exercised."""
     rows = scenarios.synthetic_sweep(5, n_devices=n, n_byz=2)
     ref = scenarios.run_grid(rows, STEPS, dim=DIM)
-    _match(ref, scenarios.run_grid(rows, STEPS, dim=DIM, mode="scan"))
+    if n == 10:  # grid == standalone-scan parity is scale-independent:
+        # checking it once keeps 16/32 to the sharded contract (speed budget)
+        _match(ref, scenarios.run_grid(rows, STEPS, dim=DIM, mode="scan"))
     for shard in SHARDS:
         _match(scenarios.run_grid(rows, STEPS, dim=DIM, shard=shard), ref)
 
@@ -57,7 +59,7 @@ def test_sharded_kernel_backend_bitwise():
     kernels + cwtm) under shard_map, bitwise vs the unsharded kernel grid."""
     rows = scenarios.synthetic_sweep(3, n_devices=10, n_byz=2, backend="interpret")
     ref = scenarios.run_grid(rows, STEPS, dim=DIM)
-    _match(ref, scenarios.run_grid(rows, STEPS, dim=DIM, mode="scan"))
+    # (kernel grid == standalone scan is test_engine's kernel-backend test)
     _match(scenarios.run_grid(rows, STEPS, dim=DIM, shard="shard_map"), ref)
 
 

@@ -81,7 +81,11 @@ def _assert_trees_equal(got, ref, label):
         )
 
 
-@pytest.mark.parametrize("n", CLEAN_SCALES)
+@pytest.mark.parametrize(
+    "n",
+    [n if n != 16 else pytest.param(n, marks=pytest.mark.slow)
+     for n in CLEAN_SCALES],
+)
 def test_sharded_step_bitwise_vs_unsharded(n):
     """Params, optimizer state, loss and metrics after LAD+CWTM engine steps
     must be bitwise identical between shard="none" and both device
@@ -96,10 +100,11 @@ def test_sharded_step_bitwise_microbatched_com_lad():
     with Com-LAD compression keeps the substrate parity bitwise."""
     kw = dict(compression="rand_sparse", q_hat_frac=0.5, microbatches=2)
     ref = _run_steps(_tcfg(10, "none", **kw))
-    for shard in SHARDS:
-        _assert_trees_equal(
-            _run_steps(_tcfg(10, shard, **kw)), ref, f"micro com-lad {shard}"
-        )
+    # shard_map only (test-speed budget): pmap parity at every clean scale
+    # is held by the uncompressed step tests above
+    _assert_trees_equal(
+        _run_steps(_tcfg(10, "shard_map", **kw)), ref, "micro com-lad shard_map"
+    )
 
 
 def test_warm_sharded_steps_zero_compiles():
@@ -129,13 +134,17 @@ def test_warm_sharded_steps_zero_compiles():
         assert train_lib.engine_program_cache_info() == info0, shard
 
 
+@pytest.mark.slow
 def test_lm_grid_sharded_bitwise_vs_unsharded_and_standalone():
     """The LM-scale scenario grid: sharded == unsharded == standalone
     per-scenario trajectories, bitwise, lanes and metrics — with a lane
     count (3) not divisible by any multi-device count so the padding path is
     always exercised.  Only the shard_map substrate runs here (test-speed
     budget); pmap parity is held by the step tests above at every clean
-    scale and by the slow full-matrix test below."""
+    scale and by the slow full-matrix test below.  Slow-marked: every push
+    still asserts the sharded-LM-grid bitwise + zero-compile contract via
+    the CI determinism job's standalone ``scripts/bench_smoke.py``
+    (``smoke_lm_engine``); this finer-grained version runs nightly."""
     rows = scenarios.lm_sweep(
         methods=(("lad", 2),), attacks=("sign_flip", "alie", "ipm"),
         compressors=("none",),
@@ -143,8 +152,11 @@ def test_lm_grid_sharded_bitwise_vs_unsharded_and_standalone():
     assert len(rows) == 3
     kw = dict(per_subset=1, seq_len=8)
     ref = scenarios.run_lm_grid(rows, 3, **kw)
-    scan = scenarios.run_lm_grid(rows, 3, mode="scan", **kw)
-    for name in ref:
+    # grid-vs-standalone: one-lane spot check here (each scan lane compiles
+    # its own trajectory program — test-speed budget); the full-matrix scan
+    # parity runs nightly in the slow test below
+    scan = scenarios.run_lm_grid(rows[:1], 3, mode="scan", **kw)
+    for name in scan:
         _assert_trees_equal(
             (ref[name].x, ref[name].metrics),
             (scan[name].x, scan[name].metrics),
@@ -212,14 +224,15 @@ def test_trainer_drives_sharded_substrates_identically():
             yield {k: v.reshape(-1, v.shape[-1]) for k, v in b.items()}
 
     hists = {}
-    for shard in ("none",) + SHARDS:
+    for shard in ("none", "shard_map"):  # pmap Trainer plumbing is identical;
+        # pmap-vs-none step parity runs at every clean scale above
         tcfg = _tcfg(10, shard)  # same config as the step tests: the round
         tr = Trainer(cfg=cfg, tcfg=tcfg, mesh=make_host_mesh(1, 1))  # and
         # apply programs are already cached — this test costs only Trainer
-        # integration (GSPMD-committed params/batches), not fresh compiles
-        hists[shard] = tr.run(batches(2), log_every=1)
-    for shard in SHARDS:
-        assert hists[shard] == hists["none"], (shard, hists)
+        # integration (GSPMD-committed params/batches), not fresh compiles;
+        # one batch suffices (multi-step substrate parity is the step tests')
+        hists[shard] = tr.run(batches(1), log_every=1)
+    assert hists["shard_map"] == hists["none"], hists
 
 
 def test_run_lm_grid_validation():

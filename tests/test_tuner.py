@@ -1,0 +1,282 @@
+"""Auto-tuned lane capacity (repro.launch.tuner) + crossover dispatch.
+
+The contract under test (README "Engine guarantees"): chunk size NEVER
+affects results — every chunk of a sweep runs the same compiled program at
+the same padded shape — so ``max_lanes_per_device="auto"`` must be bitwise
+equal to any hand-picked capacity at the clean parity scales (N=10/16/32),
+on both the XLA and the Pallas-kernel substrate, with zero re-probes and
+zero program compiles on a warm sweep.  The search itself (power phase,
+OOM binary search, upturn stop) is unit-tested against fake probes.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import engine, scenarios
+from repro.launch import tuner
+
+STEPS, DIM = 3, 8
+
+
+@pytest.fixture()
+def mem_store():
+    """Isolate every test from the user's on-disk tuner cache."""
+    store = tuner.set_store_path(None)
+    yield store
+    tuner.reset_store()
+
+
+def _match(got, ref):
+    for name, r in ref.items():
+        g = got[name]
+        np.testing.assert_array_equal(
+            np.asarray(g.x), np.asarray(r.x), err_msg=f"{name}: x"
+        )
+        for k in r.metrics:
+            np.testing.assert_array_equal(
+                np.asarray(g.metrics[k]), np.asarray(r.metrics[k]),
+                err_msg=f"{name}: {k}",
+            )
+
+
+# ---------------------------------------------------------------- unit: search
+
+
+def test_tune_picks_fastest_feasible_capacity():
+    """The winner is the measured per-lane minimum, not the largest fit."""
+    per_lane = {1: 1.0, 2: 0.6, 4: 0.3, 8: 0.5, 16: 0.9}
+
+    def probe(c):
+        return per_lane[c] * c  # n_devices=1: total chunk seconds
+
+    cap, measured = tuner.tune_lane_capacity(probe, n_lanes=16, n_devices=1)
+    assert cap == 4
+    assert measured[4] == pytest.approx(0.3)
+
+
+def test_tune_upturn_stops_doubling():
+    """A clear upturn past the minimum ends the power phase early: the full
+    sweep capacity is never probed."""
+    probed = []
+
+    def probe(c):
+        probed.append(c)
+        return {1: 1.0, 2: 0.4, 4: 2.0}[c] * c
+
+    cap, _ = tuner.tune_lane_capacity(probe, n_lanes=64, n_devices=1)
+    assert cap == 2
+    assert probed == [1, 2, 4]  # 2.0 > 0.4 * tolerance: stop, skip 8..64
+
+
+def test_tune_binary_searches_oom_frontier():
+    """OOM at a power-phase step bisects down to the exact largest fit."""
+    limit = 5  # capacities above this "exhaust memory"
+
+    def probe(c):
+        if c > limit:
+            raise RuntimeError("RESOURCE_EXHAUSTED: out of memory allocating")
+        return 1.0 / c  # bigger = faster per lane: the frontier wins
+
+    cap, measured = tuner.tune_lane_capacity(probe, n_lanes=64, n_devices=1)
+    assert cap == limit
+    assert measured[8] is None and measured[6] is None  # OOM recorded as None
+    assert measured[5] is not None
+
+
+def test_tune_capacity_one_oom_raises():
+    def probe(c):
+        raise MemoryError("Out of memory")
+
+    with pytest.raises(RuntimeError, match="does not fit"):
+        tuner.tune_lane_capacity(probe, n_lanes=4, n_devices=2)
+
+
+def test_tune_non_oom_error_propagates():
+    def probe(c):
+        raise ValueError("shape mismatch — a bug, not a capacity limit")
+
+    with pytest.raises(ValueError, match="shape mismatch"):
+        tuner.tune_lane_capacity(probe, n_lanes=4, n_devices=1)
+
+
+def test_tune_clamps_to_sweep_size():
+    """Chunks beyond ceil(n_lanes / n_devices) only add padding: never probed."""
+    probed = []
+
+    def probe(c):
+        probed.append(c)
+        return 1.0  # flat timing: keeps the power phase running to the cap
+
+    tuner.tune_lane_capacity(probe, n_lanes=6, n_devices=2)
+    assert max(probed) == 3  # ceil(6 / 2)
+
+
+# ---------------------------------------------------------------- unit: store
+
+
+def test_auto_cache_hit_makes_zero_reprobes(mem_store):
+    def probe(c):
+        return {1: 1.0, 2: 0.5}[c] * c
+
+    cap = tuner.auto_max_lanes(
+        probe, n_lanes=2, n_devices=1, signature=("sig",), store=mem_store
+    )
+    assert cap == 2
+    assert tuner.tuner_stats()["misses"] == 1
+    assert tuner.tuner_stats()["probes"] > 0
+
+    tuner.reset_tuner_stats()
+
+    def must_not_probe(c):  # pragma: no cover - the assertion is that it never runs
+        raise AssertionError("cache hit must not re-probe")
+
+    cap2 = tuner.auto_max_lanes(
+        must_not_probe, n_lanes=2, n_devices=1, signature=("sig",), store=mem_store
+    )
+    assert cap2 == cap
+    assert tuner.tuner_stats() == {"probes": 0, "hits": 1, "misses": 0}
+    # a smaller sweep reuses the tuning, clamped to its own lane ceiling
+    assert tuner.auto_max_lanes(
+        must_not_probe, n_lanes=1, n_devices=1, signature=("sig",), store=mem_store
+    ) == 1
+
+
+def test_store_roundtrips_and_discards_corrupt(tmp_path):
+    path = str(tmp_path / "tuner.json")
+    store = tuner.TunerStore(path)
+    store.record_capacity("k1", {"capacity": 3})
+    store.record_crossover("cwtm", 8, 10.0, 5.0)
+
+    again = tuner.TunerStore(path)
+    assert again.capacity_for("k1") == 3
+    assert again.crossover_for("cwtm", 8) == {"batched_us": 10.0, "loop_us": 5.0}
+
+    with open(path, "w") as f:
+        f.write("{ not json")
+    assert tuner.TunerStore(path).capacity_for("k1") is None  # fresh, no raise
+
+    with open(path, "w") as f:
+        json.dump({"schema_version": 999, "lane_capacity": {"k1": {"capacity": 3}}}, f)
+    assert tuner.TunerStore(path).capacity_for("k1") is None  # version mismatch
+
+
+def test_lane_dispatch_fallback_and_nearest_bucket(mem_store):
+    # unmeasured op: fall back to the always-batch behavior the table replaces
+    assert tuner.lane_dispatch("cwtm", 8, store=mem_store) == "batched"
+
+    tuner.record_crossover("cwtm", 4, batched_us=10.0, loop_us=2.0, store=mem_store)
+    tuner.record_crossover("cwtm", 64, batched_us=10.0, loop_us=50.0, store=mem_store)
+    assert tuner.lane_dispatch("cwtm", 3, store=mem_store) == "loop"  # nearest: 4
+    assert tuner.lane_dispatch("cwtm", 48, store=mem_store) == "batched"  # nearest: 64
+
+
+def test_signature_key_is_stable_and_distinct():
+    sig = ("grid", "cfg", 5, "sgd", "none")
+    assert tuner.signature_key(sig) == tuner.signature_key(sig)
+    assert tuner.signature_key(sig) != tuner.signature_key(sig + ("x",))
+
+
+# ---------------------------------------------- integration: auto == hand-picked
+
+
+@pytest.mark.parametrize("n", (10, 16, 32))
+def test_auto_grid_bitwise_equal_hand_picked_xla(mem_store, n):
+    """``max_lanes_per_device="auto"`` reproduces the hand-picked chunked
+    sharded grid bitwise at every clean parity scale, and the warm auto sweep
+    re-probes nothing and compiles nothing."""
+    rows = scenarios.synthetic_sweep(4, n_devices=n, n_byz=2)
+    kw = dict(dim=DIM, shard="shard_map")
+    ref = scenarios.run_grid(rows, STEPS, max_lanes_per_device=2, **kw)
+
+    auto = scenarios.run_grid(rows, STEPS, max_lanes_per_device="auto", **kw)
+    _match(auto, ref)
+    assert engine.last_grid_chunk_info()["auto"] is True
+    assert tuner.tuner_stats()["misses"] == 1
+
+    tuner.reset_tuner_stats()
+    misses0 = engine._grid_program.cache_info().misses
+    _match(scenarios.run_grid(rows, STEPS, max_lanes_per_device="auto", **kw), ref)
+    assert tuner.tuner_stats()["probes"] == 0, "warm auto sweep re-probed"
+    assert tuner.tuner_stats()["hits"] == 1
+    assert engine._grid_program.cache_info().misses == misses0, (
+        "warm auto sweep compiled a new grid program"
+    )
+
+
+@pytest.mark.parametrize(
+    "n",
+    (10,
+     pytest.param(16, marks=pytest.mark.slow),
+     pytest.param(32, marks=pytest.mark.slow)),
+)
+def test_auto_grid_bitwise_equal_hand_picked_kernel(mem_store, n):
+    """The auto==hand-picked contract on the Pallas-kernel substrate.
+
+    The hand-picked reference uses the capacity "auto" resolved, so both
+    sweeps run the same chunk shapes: on the interpret backend the bitwise
+    scope is per program shape (LLVM fma discretion BETWEEN shapes — see
+    README / repro/numerics.py), and the tuner guarantee is that resolving
+    the capacity automatically perturbs nothing vs hand-picking that value.
+    """
+    rows = scenarios.synthetic_sweep(2, n_devices=n, n_byz=2, backend="interpret")
+    auto = scenarios.run_grid(rows, 2, dim=DIM, max_lanes_per_device="auto")
+    info = engine.last_grid_chunk_info()
+    assert info["auto"] is True
+    ref = scenarios.run_grid(
+        rows, 2, dim=DIM, max_lanes_per_device=info["max_lanes_per_device"]
+    )
+    _match(auto, ref)
+
+
+def test_auto_rejects_unknown_string(mem_store):
+    rows = scenarios.synthetic_sweep(2, n_devices=10, n_byz=2)
+    with pytest.raises(ValueError, match="auto"):
+        scenarios.run_grid(rows, 2, dim=DIM, max_lanes_per_device="fast")
+
+
+# ------------------------------------------------- cache eviction + crossover
+
+
+def test_program_cache_eviction_and_refill(mem_store):
+    """clear_program_caches() drops every registered cache; the refilled
+    programs reproduce the evicted sweep bitwise and the re-warmed sweep
+    again makes zero program-cache misses."""
+    import repro.launch.train  # noqa: F401 — registers its cache clearer
+
+    rows = scenarios.synthetic_sweep(3, n_devices=10, n_byz=2)
+    kw = dict(dim=DIM, max_lanes_per_device=2)
+    ref = scenarios.run_grid(rows, STEPS, **kw)
+
+    sizes = engine.program_cache_sizes()
+    assert sizes["engine.grid"] >= 1
+    for name in ("engine.trajectory", "engine.step", "engine.finalize",
+                 "train.engine_step", "scenarios.lm_fns"):
+        assert name in sizes, sorted(sizes)
+
+    dropped = engine.clear_program_caches()
+    assert dropped["engine.grid"] >= 1
+    assert all(v == 0 for v in engine.program_cache_sizes().values())
+
+    _match(scenarios.run_grid(rows, STEPS, **kw), ref)  # refill: same bits
+    misses0 = engine._grid_program.cache_info().misses
+    _match(scenarios.run_grid(rows, STEPS, **kw), ref)
+    assert engine._grid_program.cache_info().misses == misses0, (
+        "re-warmed sweep missed the refilled program cache"
+    )
+
+
+def test_crossover_dispatch_bitwise(mem_store):
+    """A crossover table steering an op to the per-lane loop changes launch
+    strategy only: the loop result is bitwise equal to the batched launch."""
+    import jax
+
+    from repro.kernels import ops
+
+    msgs = jax.random.normal(jax.random.PRNGKey(0), (3, 8, 32))
+    batched = np.asarray(ops.cwtm(msgs, 2, backend="interpret"))
+
+    tuner.record_crossover("cwtm", 3, batched_us=10.0, loop_us=1.0, store=mem_store)
+    assert tuner.lane_dispatch("cwtm", 3) == "loop"
+    looped = np.asarray(ops.cwtm(msgs, 2, backend="interpret"))
+    np.testing.assert_array_equal(looped, batched)
