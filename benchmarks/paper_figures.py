@@ -254,6 +254,7 @@ def _timed_sharded_rows(
 
 GRID_SHARDED_SCHEMA_VERSION = 1
 LM_ENGINE_SCHEMA_VERSION = 1
+PARTICIPATION_SCHEMA_VERSION = 1
 
 
 def _write_json(payload: dict, path: str) -> None:
@@ -395,6 +396,110 @@ def lm_engine(
     return rows
 
 
+def write_participation_json(payload: dict, path: str) -> None:
+    _write_json(payload, path)
+
+
+def participation_bench(
+    steps: int = 400,
+    n_devices: int = 16,
+    d: int = 4,
+    dim: int = 32,
+    lr: float = 1e-5,
+    out_path: str = "benchmarks/out/BENCH_participation.json",
+):
+    """The K-of-N erasure sweep: recovered vs undefended loss + grid timings.
+
+    For every erasure count ``e`` in ``0..erasure_margin(d)`` (the worst-case
+    ``adversarial`` schedule erases the same ``e`` rows every round, so
+    ``K = N - e`` devices report) the sweep trains two lanes on identical
+    data/keys: ``aggregator="decode"`` (the cyclic K-of-N erasure decode —
+    the *recovered* curve) and ``aggregator="mean"`` over the reporting rows
+    (the *undefended* reference).  The whole sweep is one vmapped grid.
+
+    Asserted claims (the participation contract, measured):
+      * the decode's final loss is erasure-INVARIANT across the margin — it
+        recovers the full-participation gradient mean exactly (up to float)
+        at every ``e <= d - 1``, so all its lanes follow one trajectory;
+      * the undefended mean's final loss varies with ``e`` at least as much —
+        survivors-only averaging is erasure-sensitive.
+
+    Rows land in ``BENCH_participation.json`` (schema validated in tier-1 by
+    scripts/bench_smoke.py) with cold/warm whole-grid wall clock.
+    """
+    import dataclasses
+    import time
+
+    import numpy as np
+
+    from repro.core.coding import erasure_margin
+
+    margin = erasure_margin(d)
+    base = scenarios.synthetic_sweep(1, n_devices=n_devices)[0]
+    rows_scn = [
+        dataclasses.replace(
+            base, name=f"e{e}/{agg}", method="lad", d=d, aggregator=agg,
+            attack="none", n_byz=0, lr=lr, sigma_h=0.3,
+            participation="adversarial", p_drop_n=e,
+        )
+        for e in range(margin + 1)
+        for agg in ("decode", "mean")
+    ]
+
+    def timed():
+        t0 = time.perf_counter()
+        res = scenarios.run_grid(rows_scn, steps, dim=dim)
+        jax.block_until_ready([r.x for r in res.values()])
+        return time.perf_counter() - t0, res
+
+    t_cold, res = timed()
+    t_warm, _ = timed()
+
+    finals = {name: float(r.metrics["loss"][-1]) for name, r in res.items()}
+    assert all(np.isfinite(v) and v > 0 for v in finals.values()), finals
+    for e in range(margin + 1):  # K = N - e devices reported, every round
+        nr = np.asarray(res[f"e{e}/decode"].metrics["n_report"])
+        assert np.all(nr == float(n_devices - e)), (e, nr)
+
+    def rel_spread(agg):
+        vals = [finals[f"e{e}/{agg}"] for e in range(margin + 1)]
+        return (max(vals) - min(vals)) / max(vals)
+
+    spread_decode, spread_mean = rel_spread("decode"), rel_spread("mean")
+    assert spread_decode <= 1e-4, (
+        f"decode must be erasure-invariant within the margin: {finals}"
+    )
+    assert spread_mean >= spread_decode, (spread_mean, spread_decode)
+
+    payload = {
+        "schema_version": PARTICIPATION_SCHEMA_VERSION,
+        "device_count": jax.device_count(),
+        "n_devices": n_devices,
+        "d": d,
+        "margin": margin,
+        "steps": steps,
+        "dim": dim,
+        "rows": [
+            {
+                "name": f"e{e}/{agg}",
+                "erasures": e,
+                "k_of_n": n_devices - e,
+                "aggregator": agg,
+                "final_loss": finals[f"e{e}/{agg}"],
+            }
+            for e in range(margin + 1)
+            for agg in ("decode", "mean")
+        ],
+        "timings": [
+            {"name": "grid_cold", "seconds": t_cold},
+            {"name": "grid_warm", "seconds": t_warm},
+        ],
+        "rel_spread": {"decode": spread_decode, "mean": spread_mean},
+    }
+    write_participation_json(payload, out_path)
+    return payload
+
+
 def grid_timing(steps: int = 300, kernel_steps: int = 60):
     """End-to-end wall-clock of the whole-grid on-device engine vs the PR-1
     per-scenario dispatch loop, on the full ``section7_grid()`` — for the
@@ -459,4 +564,5 @@ FIGURES = {
     "grid_timing": grid_timing,
     "grid_sharded": grid_sharded,
     "lm_engine": lm_engine,
+    "participation": participation_bench,
 }

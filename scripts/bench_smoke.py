@@ -181,6 +181,66 @@ def smoke_lm_engine() -> dict:
     return payload
 
 
+def validate_participation_json(payload: dict) -> None:
+    """Assert the BENCH_participation.json schema (see
+    paper_figures.PARTICIPATION_SCHEMA_VERSION)."""
+    from benchmarks.paper_figures import PARTICIPATION_SCHEMA_VERSION
+
+    assert isinstance(payload, dict), type(payload)
+    assert payload.get("schema_version") == PARTICIPATION_SCHEMA_VERSION, (
+        payload.get("schema_version")
+    )
+    for field in ("device_count", "n_devices", "d", "steps", "dim"):
+        v = payload.get(field)
+        assert isinstance(v, int) and v >= 1, (field, v)
+    margin = payload.get("margin")
+    assert margin == payload["d"] - 1, (margin, payload.get("d"))
+    rows = payload.get("rows")
+    assert isinstance(rows, list) and rows, "rows must be a non-empty list"
+    names = set()
+    aggs = set()
+    for row in rows:
+        assert set(row) == {"name", "erasures", "k_of_n", "aggregator",
+                            "final_loss"}, sorted(row)
+        assert isinstance(row["name"], str) and row["name"], row
+        assert isinstance(row["erasures"], int) and 0 <= row["erasures"] <= margin, row
+        assert row["k_of_n"] == payload["n_devices"] - row["erasures"], row
+        assert isinstance(row["final_loss"], float) and row["final_loss"] > 0, row
+        names.add(row["name"])
+        aggs.add(row["aggregator"])
+    assert len(names) == len(rows), "duplicate row names"
+    assert aggs == {"decode", "mean"}, aggs
+    assert {r["erasures"] for r in rows} == set(range(margin + 1)), rows
+    timings = payload.get("timings")
+    assert isinstance(timings, list) and timings, "timings must be non-empty"
+    tnames = {t["name"] for t in timings}
+    assert {"grid_cold", "grid_warm"} <= tnames, tnames
+    for t in timings:
+        assert set(t) == {"name", "seconds"}, sorted(t)
+        assert isinstance(t["seconds"], float) and t["seconds"] > 0, t
+    spread = payload.get("rel_spread")
+    assert isinstance(spread, dict) and set(spread) == {"decode", "mean"}, spread
+    # the recovery claim, schema-level: the decode curve is erasure-invariant
+    assert 0.0 <= spread["decode"] <= 1e-4, spread
+
+
+def smoke_participation() -> dict:
+    """Run the K-of-N erasure sweep bench at tiny shapes — including its
+    erasure-invariance assertion — and round-trip + validate the JSON."""
+    from benchmarks.paper_figures import participation_bench
+
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "BENCH_participation.json")
+        payload_out = participation_bench(
+            steps=4, n_devices=8, d=2, dim=12, out_path=path,
+        )
+        with open(path) as f:
+            payload = json.load(f)
+    assert payload == json.loads(json.dumps(payload_out)), "round-trip drift"
+    validate_participation_json(payload)
+    return payload
+
+
 def validate_scaling_json(payload: dict) -> None:
     """Assert the BENCH_scaling.json schema (see
     scaling_bench.SCALING_SCHEMA_VERSION)."""
@@ -284,6 +344,11 @@ def main() -> int:
     print(
         f"lm engine smoke: {len(lm['rows'])} rows, {lm['params']} params on "
         f"{lm['device_count']} device(s), schema + bitwise OK"
+    )
+    part = smoke_participation()
+    print(
+        f"participation smoke: {len(part['rows'])} rows (margin "
+        f"{part['margin']}), schema + erasure-invariance OK"
     )
     scaling = smoke_scaling()
     print(

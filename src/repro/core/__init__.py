@@ -10,6 +10,8 @@ Layout:
                     quantization) + shared-mask and top-k variants
   attacks.py      — Byzantine attack library (sign-flip, ALIE, IPM, ...)
   byzantine.py    — LAD/Com-LAD meta-algorithm (single-process protocol round)
+  participation.py— partial-participation / straggler fault model (per-round
+                    erasure masks from deterministic key-derived schedules)
   engine.py       — scan-compiled multi-round trajectory engine
   scenarios.py    — declarative method x attack x aggregator x compressor grid
   distributed.py  — mesh/shard_map production realization of the protocol
@@ -18,9 +20,11 @@ Layout:
 from repro.core import aggregators, attacks, coding, compression, task_matrix, theory
 from repro.core.byzantine import ProtocolConfig, protocol_round
 from repro.core.engine import TrajectoryResult, protocol_rounds, run_trajectory
+from repro.core.participation import ParticipationSpec
 from repro.core.scenarios import (
     Scenario,
     grid_finals,
+    participation_sweep,
     run_grid,
     run_scenario,
     section7_grid,
@@ -34,7 +38,9 @@ __all__ = [
     "task_matrix",
     "theory",
     "ProtocolConfig",
+    "ParticipationSpec",
     "protocol_round",
+    "participation_sweep",
     "TrajectoryResult",
     "protocol_rounds",
     "run_trajectory",

@@ -33,7 +33,9 @@ from repro.core import aggregators as agg_lib
 from repro.core import attacks as attack_lib
 from repro.core import compression as comp_lib
 from repro.core import task_matrix as tm
+from repro.core.participation import ParticipationSpec
 from repro.kernels import ops as kernel_ops
+from repro.numerics import stable_masked_mean0
 
 __all__ = [
     "ProtocolConfig",
@@ -68,6 +70,16 @@ class ProtocolConfig:
       n_byz: number of Byzantine devices ``N - H``.
       attack: the corruption model (see ``attacks.AttackSpec``).
       compression: the Com-LAD wire compression (Definition 2).
+      participation: the erasure/straggler fault model
+        (``participation.ParticipationSpec``).  The default ``"full"``
+        schedule is a STATIC bypass — the round program is byte-identical to
+        the pre-participation engine.  Any other schedule compiles the
+        masked path: the per-round mask erases transmitted rows to exact
+        ``0.0`` and the server becomes mask-aware (``aggregator="decode"``
+        selects the cyclic K-of-N erasure decode; DRACO's decoder medians
+        over reporting group members; every other aggregator sees erased
+        rows imputed with the reporting-row mean so its breakdown analysis
+        is over the ``K`` real reports).
       backend: hot-path kernel backend for the server/device inner ops
         (kernels/ops.py) — the eq.-(5) combine, CWTM, the NNM gram matrix
         and QSGD quantization:
@@ -95,6 +107,9 @@ class ProtocolConfig:
     compression: comp_lib.CompressionSpec = dataclasses.field(
         default_factory=comp_lib.CompressionSpec
     )
+    participation: ParticipationSpec = dataclasses.field(
+        default_factory=ParticipationSpec
+    )
     backend: str = "xla"
 
     def make_aggregator(self):
@@ -115,7 +130,14 @@ def _encode(cfg: ProtocolConfig, stacked: jax.Array) -> jax.Array:
 
 
 def _device_coded_gradients(cfg: ProtocolConfig, key: jax.Array, subset_grads: jax.Array):
-    """Assemble the (N, Q) stack of honest coded vectors g_i^t (eq. 5)."""
+    """Assemble the (N, Q) stack of honest coded vectors g_i^t (eq. 5).
+
+    Returns ``(coded, subsets, assign)``: ``assign`` is the decoder-facing
+    structure of this round's allocation — the ``(N,)`` cyclic window starts
+    (``TaskAssignment.task_index``) for lad/plain, the ``(N,)`` group ids for
+    draco — which the participation-masked servers need (the K-of-N erasure
+    decode selects a surviving offset class by ``task_index % d``).
+    """
     n = cfg.n_devices
     d = cfg.effective_d()
     if cfg.method == "draco":
@@ -124,8 +146,11 @@ def _device_coded_gradients(cfg: ProtocolConfig, key: jax.Array, subset_grads: j
         groups = jnp.arange(n) // d  # (N,)
         block_cols = groups[:, None] * d + jnp.arange(d)[None, :]  # (N, d)
         subsets = perm[block_cols]
+        assign = groups.astype(jnp.int32)
     else:
-        subsets = tm.sample_assignment(key, n, d).subsets
+        ta = tm.sample_assignment(key, n, d)
+        subsets = ta.subsets
+        assign = ta.task_index.astype(jnp.int32)
     if cfg.backend != "xla":
         # kernel hot path: assignment gather + eq.-(5) combine fused into one
         # lane-batched launch (under the grid engine's vmap a lane is one
@@ -135,24 +160,14 @@ def _device_coded_gradients(cfg: ProtocolConfig, key: jax.Array, subset_grads: j
         return (
             kernel_ops.gather_combine(subset_grads, subsets, w, backend=cfg.backend),
             subsets,
+            assign,
         )
-    return _encode(cfg, subset_grads[subsets]), subsets
+    return _encode(cfg, subset_grads[subsets]), subsets, assign
 
 
-@functools.lru_cache(maxsize=256)
-def make_server_fn(cfg: ProtocolConfig) -> Callable[[jax.Array], jax.Array]:
-    """Build the server aggregation ``(N, Q) -> (Q,)`` for ``cfg``.
-
-    Routed through the Pallas kernels when the config selects a kernel
-    backend and the rule has a kernel realization (CWTM and its NNM-premixed
-    variant — the paper's main rules); other rules fall back to the pure-jnp
-    aggregators on every backend.  For DRACO the server is the group
-    majority-vote decoder (compression-free exact recovery).
-
-    This is the branch unit of the vmapped grid engine: ``run_grid`` builds
-    one server fn per distinct aggregator in a compile bucket and selects
-    per-lane with ``lax.switch``.
-    """
+def _full_server_fn(cfg: ProtocolConfig) -> Callable[[jax.Array], jax.Array]:
+    """The full-participation server body ``(N, Q) -> (Q,)`` (see
+    ``make_server_fn``)."""
     if cfg.method == "draco":
         return lambda transmitted: coded_draco_decode(transmitted, cfg.d)
     if cfg.backend != "xla":
@@ -171,6 +186,84 @@ def make_server_fn(cfg: ProtocolConfig) -> Callable[[jax.Array], jax.Array]:
 
             return kernel_server
     return cfg.make_aggregator()
+
+
+def _masked_server_fn(cfg: ProtocolConfig) -> Callable:
+    """The participation-aware server ``(transmitted, pmask, assign) -> (Q,)``.
+
+    Three regimes:
+      * ``aggregator="decode"`` — the cyclic K-of-N erasure decode
+        (``coding.cyclic_erasure_decode``): exact recovery of the
+        full-participation gradient mean while erasures stay within the
+        redundancy margin ``d - 1``; graceful partial mean beyond it.
+        Requires the cyclic code (method lad/plain) and ``d | N``.
+      * ``method="draco"`` — DRACO's group median over *reporting* members
+        (``coding.draco_decode`` with a mask).
+      * anything else — impute-then-aggregate: erased rows are replaced by
+        the reporting-row mean (``numerics.stable_masked_mean0``) and the
+        untouched full-participation rule runs on the patched stack, so the
+        robust rule's order statistics only ever see ``K`` real values plus
+        neutral fill.  At an all-ones mask the ``where`` select is an exact
+        no-op and the base rule receives a bit-identical stack — the
+        mechanism behind the all-ones == legacy bitwise regression tests.
+    """
+    if cfg.aggregator == "decode":
+        if cfg.method == "draco":
+            raise ValueError(
+                "aggregator='decode' is the cyclic erasure decode — "
+                "incompatible with method='draco' (use its own masked decoder)"
+            )
+        d = cfg.effective_d()
+        if cfg.n_devices % d != 0:
+            raise ValueError(
+                f"aggregator='decode' exactness needs d | N (the offset "
+                f"classes must tile the subset circle): N={cfg.n_devices} d={d}"
+            )
+        from repro.core.coding import cyclic_erasure_decode
+
+        return lambda t, pm, assign: cyclic_erasure_decode(
+            t, pm, assign, d, backend=cfg.backend
+        )
+    if cfg.method == "draco":
+        return lambda t, pm, assign: coded_draco_decode(t, cfg.d, mask=pm)
+    base = _full_server_fn(cfg)
+
+    def masked_server(t: jax.Array, pm: jax.Array, assign: jax.Array) -> jax.Array:
+        del assign
+        imputed = stable_masked_mean0(t, pm)
+        return base(jnp.where(pm[:, None] > 0.0, t, imputed[None, :]))
+
+    return masked_server
+
+
+@functools.lru_cache(maxsize=256)
+def make_server_fn(cfg: ProtocolConfig) -> Callable:
+    """Build the server aggregation for ``cfg``.
+
+    Full participation (the default): ``(N, Q) transmitted -> (Q,)``, routed
+    through the Pallas kernels when the config selects a kernel backend and
+    the rule has a kernel realization (CWTM and its NNM-premixed variant —
+    the paper's main rules); other rules fall back to the pure-jnp
+    aggregators on every backend.  For DRACO the server is the group
+    majority-vote decoder (compression-free exact recovery).
+
+    Active participation (``cfg.participation.active``): the signature
+    widens to ``(transmitted, pmask, assign) -> (Q,)`` — see
+    ``_masked_server_fn`` for the three masked regimes.
+
+    This is the branch unit of the vmapped grid engine: ``run_grid`` builds
+    one server fn per distinct aggregator in a compile bucket and selects
+    per-lane with ``lax.switch``.
+    """
+    if cfg.participation.active:
+        return _masked_server_fn(cfg)
+    if cfg.aggregator == "decode":
+        raise ValueError(
+            "aggregator='decode' (the K-of-N erasure decode) requires an "
+            "active participation schedule — at full participation use the "
+            "mean server (they recover the same gradient mean)"
+        )
+    return _full_server_fn(cfg)
 
 
 @functools.lru_cache(maxsize=256)
@@ -198,6 +291,7 @@ def protocol_round(
     *,
     attack_fn: attack_lib.Attack | None = None,
     server_fn: Callable[[jax.Array], jax.Array] | None = None,
+    participation_mask: jax.Array | None = None,
 ) -> jax.Array:
     """One full protocol round.
 
@@ -212,14 +306,29 @@ def protocol_round(
         passes ``lax.switch``-dispatched versions so the attack/aggregator
         axes of a sweep become *traced* (one compile per static bucket, not
         per cell).
+      participation_mask: ``(N,)`` 0/1 float mask of reporting devices —
+        requires ``cfg.participation.active``.  The engine samples it from
+        the schedule per round; the multi-process fleet passes its observed
+        timeout mask (schedule ``"external"``).  ``None`` with an active
+        schedule means all devices report *through the masked machinery*.
+        Erased rows are zeroed AFTER the attack (an omniscient adversary's
+        collusion statistics see the pre-erasure stack; a crashed attacker
+        still sends nothing) and the mask-aware server decodes the
+        survivors.
 
     Returns:
       ``(Q,)`` the aggregated global update direction ``g^t``.
     """
     n = cfg.n_devices
+    if participation_mask is not None and not cfg.participation.active:
+        raise ValueError(
+            "participation_mask passed but cfg.participation is 'full' — "
+            "select an active schedule (ParticipationSpec) so the masked "
+            "server path is compiled"
+        )
     k_assign, k_mask, k_attack, k_comp = jax.random.split(key, 4)
 
-    coded, _ = _device_coded_gradients(cfg, k_assign, subset_grads)
+    coded, _, assign = _device_coded_gradients(cfg, k_assign, subset_grads)
 
     # --- Com-LAD compression (Definition 2) --------------------------------
     q = coded.shape[1]
@@ -254,13 +363,25 @@ def protocol_round(
     # (For DRACO the server is the majority-vote decoder; it ignores
     # compression — incompatible, per Section VII.B.)
     server = server_fn if server_fn is not None else make_server_fn(cfg)
+    if cfg.participation.active:
+        # --- Participation erasure (after the attack, before the server) ---
+        pm = (
+            participation_mask
+            if participation_mask is not None
+            else jnp.ones((n,), jnp.float32)
+        )
+        # erased rows become exact 0.0 (x * 1.0 is bitwise-exact on the rest)
+        transmitted = transmitted * pm[:, None]
+        return server(transmitted, pm, assign)
     return server(transmitted)
 
 
-def coded_draco_decode(transmitted: jax.Array, d: int) -> jax.Array:
+def coded_draco_decode(
+    transmitted: jax.Array, d: int, mask: jax.Array | None = None
+) -> jax.Array:
     from repro.core.coding import draco_decode
 
-    return draco_decode(transmitted, d)
+    return draco_decode(transmitted, d, mask=mask)
 
 
 def lad_round(

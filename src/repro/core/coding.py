@@ -11,6 +11,12 @@ its numeric generalization) recovers the true block value as long as each
 group has an honest majority.  This gives the paper's strongest baseline —
 exact recovery at computational load ``d`` with ``(d-1)/2`` tolerable
 Byzantine devices per group.
+
+``cyclic_erasure_decode`` is the erasure-code reading of the same redundancy:
+the cyclic assignment at load ``d`` tolerates ``erasure_margin(d) = d - 1``
+missing reports while still recovering the full-participation gradient mean
+exactly (see its docstring for the offset-class argument), and degrades
+gracefully beyond the margin.
 """
 from __future__ import annotations
 
@@ -19,13 +25,28 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.numerics import tree_sum
+
 __all__ = [
     "encode_coded_gradient",
     "coded_weights",
     "draco_decode",
+    "cyclic_erasure_decode",
+    "erasure_margin",
     "flatten_pytree",
     "unflatten_pytree",
 ]
+
+
+def erasure_margin(d: int) -> int:
+    """Erasures tolerable by the cyclic code at computational load ``d``.
+
+    Each subset gradient is replicated across ``d`` consecutive cyclic
+    windows, so any ``d - 1`` device erasures still leave every subset
+    covered — and, stronger, leave at least one *offset class* fully intact
+    (see :func:`cyclic_erasure_decode`).
+    """
+    return d - 1
 
 
 def coded_weights(d: int) -> jax.Array:
@@ -63,7 +84,9 @@ def unflatten_pytree(flat, spec):
     return jax.tree.unflatten(treedef, leaves)
 
 
-def draco_decode(messages: jax.Array, group_size: int) -> jax.Array:
+def draco_decode(
+    messages: jax.Array, group_size: int, mask: jax.Array | None = None
+) -> jax.Array:
     """Majority-vote (coordinate median) DRACO decode.
 
     Args:
@@ -71,19 +94,117 @@ def draco_decode(messages: jax.Array, group_size: int) -> jax.Array:
         repetition code (devices in the same group sent identical honest
         values; Byzantine entries are arbitrary).
       group_size: ``d`` — devices per replication group; ``N % d == 0``.
+      mask: optional ``(N,)`` 0/1 participation mask (1 = device reported).
+        ``None`` is the legacy full-participation decode, byte-for-byte the
+        original program.
 
     Returns:
       ``(Q,)`` the exact global average gradient, provided every group has an
       honest majority.  Each group's block value is recovered by the
       coordinate-wise median over its ``d`` members (the numeric majority
       vote); group block means are then averaged with the correct weights.
+
+    Masked semantics (documented contract): each group's median runs over its
+    *reporting* members only — a fully-reporting group takes the untouched
+    legacy ``jnp.median`` path via a ``where`` select, so an all-ones mask
+    reproduces the legacy decode bitwise.  A group with zero reporting
+    members is dropped and the result is the mean over surviving group
+    blocks (graceful degradation: fewer subsets covered, never NaN — at
+    least one device always reports).  Byzantine tolerance shrinks with
+    participation: a group needs an honest majority *among its reporting
+    members*.
     """
     n, q = messages.shape
     if n % group_size != 0:
         raise ValueError(f"N={n} not divisible by group size d={group_size}")
     n_groups = n // group_size
     grouped = messages.reshape(n_groups, group_size, q)
-    block_vals = jnp.median(grouped, axis=1)  # (n_groups, Q): each = mean grad of its d subsets
-    # Every group's block covers d distinct subsets; the global mean over all
-    # N subsets is the uniform average of the group block-means.
-    return jnp.mean(block_vals, axis=0)
+    if mask is None:
+        block_vals = jnp.median(grouped, axis=1)  # (n_groups, Q): each = mean grad of its d subsets
+        # Every group's block covers d distinct subsets; the global mean over
+        # all N subsets is the uniform average of the group block-means.
+        return jnp.mean(block_vals, axis=0)
+
+    gmask = mask.astype(jnp.float32).reshape(n_groups, group_size)
+    k = tree_sum(gmask, axis=1)  # (n_groups,) reporting members per group
+    # Median over reporting members: push masked rows to +inf, sort, and
+    # interpolate the two middle *reporting* positions (equals jnp.median
+    # when the group is full, but the full group still takes the legacy op
+    # below so its bits cannot drift across program shapes).
+    pushed = jnp.where(gmask[:, :, None] > 0.0, grouped, jnp.inf)
+    ordered = jnp.sort(pushed, axis=1)
+    ki = jnp.maximum(k.astype(jnp.int32), 1)
+    lo = jnp.take_along_axis(ordered, ((ki - 1) // 2)[:, None, None], axis=1)
+    hi = jnp.take_along_axis(ordered, (ki // 2)[:, None, None], axis=1)
+    masked_med = (0.5 * (lo + hi))[:, 0, :]
+    group_full = k == float(group_size)
+    legacy_med = jnp.median(grouped, axis=1)
+    block_vals = jnp.where(group_full[:, None], legacy_med, masked_med)
+    alive = (k > 0.0).astype(jnp.float32)
+    all_full = tree_sum(group_full.astype(jnp.float32), axis=0) == float(n_groups)
+    degraded = tree_sum(
+        jnp.where(alive[:, None] > 0.0, block_vals, 0.0), axis=0
+    ) / jnp.maximum(tree_sum(alive, axis=0), 1.0)
+    # all-groups-full selects the byte-identical legacy reduction
+    return jnp.where(all_full, jnp.mean(legacy_med, axis=0), degraded)
+
+
+def cyclic_erasure_decode(
+    messages: jax.Array,
+    mask: jax.Array,
+    task_index: jax.Array,
+    d: int,
+    backend: str = "xla",
+) -> jax.Array:
+    """K-of-N erasure decode of the cyclic (eq.-5) code.
+
+    The cyclic assignment gives device ``i`` the window of ``d`` consecutive
+    subsets starting at ``task_index[i]`` (positions on the permuted subset
+    circle), and ``task_index`` is itself a permutation of ``0..N-1``.
+    Partition devices into ``d`` *offset classes* by ``task_index % d``:
+    when ``d | N``, each class's ``N/d`` windows are disjoint and tile the
+    circle exactly.  ``e <= erasure_margin(d) = d - 1`` erasures can touch at
+    most ``e`` classes, so by pigeonhole at least one class survives intact;
+    summing that class's coded vectors recovers ``(1/d) * sum_k g_k``, and
+    dividing by the class size yields the full-participation gradient mean
+    ``(1/N) * sum_k g_k`` — *exactly* (up to float reassociation; the
+    reductions here are the fixed-tree sums of ``repro/numerics.py``, so the
+    result is reproducible across program shapes).
+
+    Beyond the margin (documented graceful degradation): the best-covered
+    class is still selected and the decode equals the mean over the subsets
+    its surviving disjoint windows cover — an unbiased partial-participation
+    estimate, never NaN (at least one device always reports).
+
+    Args:
+      messages: ``(N, Q)`` transmitted coded vectors (erased rows may hold
+        anything — they are multiplied by exact ``0.0``).
+      mask: ``(N,)`` 0/1 float participation mask.
+      task_index: ``(N,)`` int window starts of this round's assignment
+        (``TaskAssignment.task_index``).
+      d: computational load / redundancy (``N % d == 0`` for the exactness
+        guarantee).
+      backend: ``"xla"`` reduces with the fixed-tree sum; kernel backends
+        (``"interpret"``/``"pallas"``) run the surviving-row reduce as one
+        lane-batched ``kernels.ops.masked_combine`` launch.
+
+    Returns:
+      ``(Q,)`` decoded gradient mean.
+    """
+    cls = (task_index % d).astype(jnp.int32)  # (N,) offset class of each device
+    onehot = cls[:, None] == jnp.arange(d, dtype=jnp.int32)[None, :]
+    mask = mask.astype(jnp.float32)
+    class_report = tree_sum(
+        jnp.where(onehot, mask[:, None], 0.0), axis=0
+    )  # (d,) reporting devices per class
+    # argmax breaks ties toward class 0 — at full participation every class
+    # is complete and the selection is deterministic across rounds.
+    j_star = jnp.argmax(class_report)
+    w = mask * (cls == j_star).astype(jnp.float32)  # (N,) surviving class rows
+    if backend != "xla":
+        from repro.kernels import ops as kernel_ops
+
+        decoded = kernel_ops.masked_combine(messages, w, backend=backend)
+    else:
+        decoded = tree_sum(messages * w[:, None], axis=0)
+    return decoded / jnp.maximum(tree_sum(w, axis=0), 1.0)

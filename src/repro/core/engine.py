@@ -45,7 +45,12 @@ from repro.core.byzantine import (
     make_server_fn,
     protocol_round,
 )
-from repro.numerics import stable_mean0, stable_norm
+from repro.core.participation import (
+    PARTICIPATION_KEY_SALT,
+    init_participation_state,
+    sample_participation,
+)
+from repro.numerics import stable_mean0, stable_norm, tree_sum
 from repro.optim import make_optimizer
 
 __all__ = [
@@ -197,13 +202,41 @@ def _round_body(
     The raw stacks cost ``3 x steps x Q`` floats of scan output;
     ``with_metrics=False`` emits nothing (final-iterate-only runs at large
     ``Q`` — see ``run_trajectory``).
+
+    Participation: ``cfg.participation`` branches STATICALLY.  The default
+    ``"full"`` schedule compiles this body exactly as before — same carry
+    ``(x, opt_state)``, same program, byte-identical (so the whole existing
+    bitwise surface is untouched by construction).  An active schedule
+    widens the carry to ``(x, opt_state, p_state)`` (the schedule state —
+    the previous mask, which ``"markov"`` evolves), samples the round mask
+    from ``fold_in(round_key, PARTICIPATION_KEY_SALT)`` (out-of-band of the
+    4-way round-key split — existing streams unshifted), hands it to
+    ``protocol_round`` (erasure at the transmission boundary + mask-aware
+    server), and emits the per-round reporting count as raw ``"n_report"``.
     """
+    p_spec = cfg.participation
+    p_active = p_spec.active
 
     def body(carry, t):
-        x, opt_state = carry
+        if p_active:
+            x, opt_state, p_state = carry
+        else:
+            x, opt_state = carry
         k = jax.random.fold_in(key, t)
         grads = subset_grad_fn(x)  # (N, Q)
-        g = protocol_round(cfg, k, grads, attack_fn=attack_fn, server_fn=server_fn)
+        if p_active:
+            pk = jax.random.fold_in(k, PARTICIPATION_KEY_SALT)
+            pm, p_state = sample_participation(
+                p_spec, pk, t, cfg.n_devices, p_state
+            )
+            g = protocol_round(
+                cfg, k, grads, attack_fn=attack_fn, server_fn=server_fn,
+                participation_mask=pm,
+            )
+        else:
+            g = protocol_round(
+                cfg, k, grads, attack_fn=attack_fn, server_fn=server_fn
+            )
         lr_t = lr(t) if callable(lr) else lr
         new_x, new_state = opt.update(x, grad_scale * g, opt_state, lr_t)
         raw = (
@@ -211,9 +244,23 @@ def _round_body(
             if with_metrics
             else {}
         )
+        if p_active:
+            if with_metrics:
+                raw["n_report"] = tree_sum(pm, axis=0)
+            return (new_x, new_state, p_state), raw
         return (new_x, new_state), raw
 
     return body
+
+
+def _init_carry(cfg: ProtocolConfig, x0, opt):
+    """The scan/loop carry of ``_round_body``: ``(x, opt_state)``, plus the
+    participation schedule state when ``cfg.participation`` is active (one
+    helper so every engine mode builds the identical structure)."""
+    base = (x0, opt.init(x0))
+    if cfg.participation.active:
+        return base + (init_participation_state(cfg.participation, cfg.n_devices),)
+    return base
 
 
 def _finalize_metrics(
@@ -236,6 +283,8 @@ def _finalize_metrics(
         metrics["loss"] = jax.vmap(loss_fn)(raw["x"])
     if x_star is not None:
         metrics["sol_err"] = stable_norm(raw["x"] - x_star)
+    if "n_report" in raw:  # active participation: per-round reporting count
+        metrics["n_report"] = raw["n_report"]
     return metrics
 
 
@@ -340,7 +389,7 @@ def run_trajectory(
         cfg, subset_grad_fn, lr if callable(lr) else None, optimizer,
         data is not None, with_metrics,
     )
-    carry = (x0, make_optimizer(optimizer).init(x0))
+    carry = _init_carry(cfg, x0, make_optimizer(optimizer))
     per_round = []
     for t in range(steps):
         carry, r = step_fn(key, carry, jnp.asarray(t, jnp.int32), lr_arg, gs, data)
@@ -380,7 +429,7 @@ def _bind_loss(loss_fn, takes_data, data_op):
     return (lambda x: loss_fn(data_op, x)) if takes_data else loss_fn
 
 
-@functools.lru_cache(maxsize=64)
+@functools.lru_cache(maxsize=192)
 def _trajectory_program(
     steps, cfg, subset_grad_fn, loss_fn, lr_schedule, optimizer, takes_data,
     has_x_star, with_metrics,
@@ -400,9 +449,9 @@ def _trajectory_program(
 
     @jax.jit
     def trajectory(key, x0, lr_op, gs_op, data_op, x_star_op):
-        (x, _), raw = jax.lax.scan(
+        (x, *_), raw = jax.lax.scan(
             bind(key, lr_op, gs_op, data_op),
-            (x0, opt.init(x0)),
+            _init_carry(cfg, x0, opt),
             jnp.arange(steps, dtype=jnp.int32),
         )
         if not with_metrics:
@@ -905,7 +954,7 @@ def grid_compiled_hlo(
     return plan.program.lower(*ops).compile().as_text()
 
 
-@functools.lru_cache(maxsize=128)
+@functools.lru_cache(maxsize=192)
 def _grid_program(
     cfg: ProtocolConfig,
     steps: int,
@@ -960,8 +1009,8 @@ def _grid_program(
             attack_fn=attack_fn,
             server_fn=server_fn,
         )
-        (x, _), raw = jax.lax.scan(
-            body, (x0_lane, opt.init(x0_lane)), jnp.arange(steps, dtype=jnp.int32)
+        (x, *_), raw = jax.lax.scan(
+            body, _init_carry(cfg, x0_lane, opt), jnp.arange(steps, dtype=jnp.int32)
         )
         metrics = _finalize_metrics(
             raw,

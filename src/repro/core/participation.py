@@ -1,0 +1,190 @@
+"""Partial-participation / straggler fault model.
+
+The paper's cyclic redundancy is exactly an erasure code: with computational
+load ``d`` the server can recover the full gradient sum from any ``K`` of
+``N`` coded reports as long as the number of erasures stays within the
+redundancy margin ``s = d - 1`` (see ``coding.cyclic_erasure_decode``).
+This module supplies the *fault model* side: a per-round 0/1 participation
+mask over the ``N`` logical devices, drawn from a deterministic key-derived
+schedule, that the engine threads through its scan carry and
+``protocol_round`` applies at the transmission boundary.
+
+Schedules (``ParticipationSpec.name``):
+
+  * ``"full"``        — every device reports every round.  This is a STATIC
+                        bypass: the engine compiles the exact pre-participation
+                        round body (no mask machinery in the program at all),
+                        which is what keeps the whole existing bitwise test
+                        surface untouched.
+  * ``"iid"``         — each device independently drops with probability
+                        ``rate`` each round (key-derived; ``rate=0.0`` yields
+                        an all-ones mask while still exercising the masked
+                        code path — the regression tests' configuration).
+  * ``"onoff"``       — the last ``n_drop`` devices are *straggler lanes* on
+                        a deterministic duty cycle: straggler ``i`` reports
+                        only in the first ``round(duty * period)`` rounds of
+                        each ``period``-round window (phase-shifted per
+                        device).  No randomness: reproduces DRACO's periodic
+                        straggler regime.
+  * ``"adversarial"`` — worst-case erasure: the SAME ``n_drop`` honest rows
+                        (``[offset, offset + n_drop)`` — callers set
+                        ``offset = n_byz`` so the Byzantine block keeps
+                        reporting) are erased every round.
+  * ``"markov"``      — sticky dropout with genuine per-round *state* (the
+                        previous mask rides the scan carry): a reporting
+                        device fails with probability ``p_drop``; a failed
+                        device recovers with probability ``p_recover``.
+  * ``"external"``    — the mask is supplied by the caller per round (the
+                        multi-process fleet's observed timeout mask —
+                        ``launch/fleet.py``); ``sample_participation``
+                        refuses it, the engine cannot generate it.
+
+Every schedule guarantees at least one reporting device (an all-zero round
+would make every aggregation undefined): if a draw erases everyone, the last
+device is forced back on.
+
+Erasure semantics: the mask applies to the *transmitted* coded vectors —
+after the Byzantine corruption, before the server.  Collusion attacks (ALIE
+/ IPM) therefore compute their honest statistics pre-erasure (an omniscient
+adversary), and an erased Byzantine device contributes nothing (a crashed
+attacker cannot send).  Masked rows are exact ``0.0`` through the fixed-tree
+sums of ``repro/numerics.py``, so the bit-exactness rules hold.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.numerics import tree_sum
+
+__all__ = [
+    "ParticipationSpec",
+    "SCHEDULES",
+    "sample_participation",
+    "init_participation_state",
+    "PARTICIPATION_KEY_SALT",
+]
+
+# protocol_round derives k_assign/k_mask/k_attack/k_comp by splitting the
+# round key in FOUR — a convention every recorded trajectory depends on.  The
+# participation key is therefore folded out-of-band from the round key with
+# this salt instead of widening the split (which would silently shift every
+# existing stream and break all bitwise parity).
+PARTICIPATION_KEY_SALT = 0x5A17
+
+SCHEDULES = ("full", "iid", "onoff", "adversarial", "markov", "external")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParticipationSpec:
+    """Static configuration of the participation fault model (hashable —
+    rides ``ProtocolConfig`` into the engine's compiled-program cache keys
+    and the scenario bucket signatures).
+
+    Attributes:
+      name: schedule family (see module docstring).
+      rate: ``"iid"`` per-round drop probability.
+      n_drop: erased/straggler device count (``"onoff"``/``"adversarial"``).
+      period / duty: the ``"onoff"`` duty cycle (straggler reports in the
+        first ``round(duty * period)`` rounds of each window).
+      offset: first erased row of ``"adversarial"`` (callers set ``n_byz``).
+      p_drop / p_recover: the ``"markov"`` transition probabilities.
+    """
+
+    name: str = "full"
+    rate: float = 0.0
+    n_drop: int = 0
+    period: int = 4
+    duty: float = 0.5
+    offset: int = 0
+    p_drop: float = 0.1
+    p_recover: float = 0.5
+
+    def __post_init__(self):
+        if self.name not in SCHEDULES:
+            raise ValueError(
+                f"unknown participation schedule {self.name!r}; have {SCHEDULES}"
+            )
+        if not 0.0 <= self.rate < 1.0:
+            raise ValueError(f"rate must be in [0, 1), got {self.rate}")
+        if self.n_drop < 0 or self.offset < 0:
+            raise ValueError(f"n_drop/offset must be >= 0, got {self}")
+        if self.period < 1 or not 0.0 < self.duty <= 1.0:
+            raise ValueError(f"bad duty cycle period={self.period} duty={self.duty}")
+
+    @property
+    def active(self) -> bool:
+        """Whether the masked code path is compiled in.  Only ``"full"``
+        bypasses; ``"iid"`` at ``rate=0.0`` is *active on purpose* — it
+        produces all-ones masks through the full mask machinery (the
+        regression tests' bitwise-vs-legacy configuration)."""
+        return self.name != "full"
+
+
+def init_participation_state(spec: ParticipationSpec, n: int) -> jax.Array:
+    """The scan-carry participation state: the previous round's mask
+    (everyone starts reporting).  Stateless schedules carry it untouched so
+    every active schedule shares one carry structure."""
+    del spec
+    return jnp.ones((n,), jnp.float32)
+
+
+def _ensure_one_reporter(mask: jax.Array) -> jax.Array:
+    """Force the last device back on when a draw erased every row — exact:
+    ``tree_sum`` of 0/1 floats is an integer count, and the correction is a
+    ``where`` select, not arithmetic."""
+    n = mask.shape[0]
+    fallback = (jnp.arange(n) == n - 1).astype(jnp.float32)
+    return jnp.where(tree_sum(mask, axis=0) == 0.0, fallback, mask)
+
+
+def sample_participation(
+    spec: ParticipationSpec,
+    key: jax.Array,
+    t: jax.Array,
+    n: int,
+    state: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """The round-``t`` participation mask of ``spec``: ``(N,)`` float32 0/1
+    (1 = device reports) plus the updated carry state.
+
+    ``key`` must be the round key with :data:`PARTICIPATION_KEY_SALT` folded
+    in (the engine does this) so the draw is independent of the
+    assignment/attack/compression streams; ``t`` drives the deterministic
+    schedules; ``state`` is the previous mask (``"markov"`` only — the other
+    schedules pass it through unchanged).
+    """
+    if spec.name == "full":
+        return jnp.ones((n,), jnp.float32), state
+    if spec.name == "iid":
+        mask = (jax.random.uniform(key, (n,)) >= spec.rate).astype(jnp.float32)
+        return _ensure_one_reporter(mask), state
+    if spec.name == "onoff":
+        n_straggle = min(spec.n_drop, n)
+        duty_rounds = max(1, int(round(spec.duty * spec.period)))
+        idx = jnp.arange(n)
+        straggler = idx >= n - n_straggle
+        # phase-shift per device so stragglers do not blink in lockstep
+        phase = (t + idx) % spec.period
+        on = jnp.logical_or(~straggler, phase < duty_rounds)
+        return _ensure_one_reporter(on.astype(jnp.float32)), state
+    if spec.name == "adversarial":
+        idx = jnp.arange(n)
+        erased = (idx >= spec.offset) & (idx < spec.offset + spec.n_drop)
+        mask = (~erased).astype(jnp.float32)
+        return _ensure_one_reporter(mask), state
+    if spec.name == "markov":
+        u = jax.random.uniform(key, (n,))
+        was_up = state > 0.0
+        stays_up = u >= spec.p_drop
+        comes_up = u < spec.p_recover
+        mask = jnp.where(was_up, stays_up, comes_up).astype(jnp.float32)
+        mask = _ensure_one_reporter(mask)
+        return mask, mask
+    # "external": the mask is observed (fleet timeouts), never sampled
+    raise ValueError(
+        f"participation schedule {spec.name!r} cannot be sampled — the mask "
+        "is supplied externally (pass participation_mask= to protocol_round)"
+    )

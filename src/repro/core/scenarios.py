@@ -44,7 +44,9 @@ import jax.numpy as jnp
 from repro.core import engine as engine_lib
 from repro.core.attacks import AttackSpec
 from repro.core.byzantine import ProtocolConfig, make_attack_fn, make_server_fn
+from repro.core.coding import erasure_margin
 from repro.core.compression import CompressionSpec
+from repro.core.participation import ParticipationSpec
 from repro.core.engine import TrajectoryResult, run_trajectory
 from repro.data.synthetic import (
     linear_regression_problem,
@@ -57,6 +59,7 @@ __all__ = [
     "Scenario",
     "section7_grid",
     "synthetic_sweep",
+    "participation_sweep",
     "scenario_name",
     "PAPER_FIG4",
     "PAPER_FIG5",
@@ -90,6 +93,13 @@ class Scenario:
     n_devices: int = 100
     lr: float = 1e-6
     backend: str = "xla"  # kernels/ops backend for the protocol hot path
+    # participation / straggler fault model (core/participation.py):
+    # "full" (default) | "iid" | "onoff" | "adversarial" | "markov"
+    participation: str = "full"
+    p_rate: float = 0.0  # iid per-round drop probability
+    p_drop_n: int = 0  # erased/straggler device count (onoff / adversarial)
+    p_period: int = 4  # onoff duty-cycle window (rounds)
+    p_duty: float = 0.5  # onoff fraction of the window a straggler reports
 
     def protocol(self) -> ProtocolConfig:
         return ProtocolConfig(
@@ -102,6 +112,16 @@ class Scenario:
             attack=AttackSpec(self.attack, n_byz=self.n_byz),
             compression=CompressionSpec(
                 self.compressor, q_hat_frac=self.q_hat_frac, levels=self.quant_levels
+            ),
+            participation=ParticipationSpec(
+                self.participation,
+                rate=self.p_rate,
+                n_drop=self.p_drop_n,
+                period=self.p_period,
+                duty=self.p_duty,
+                # worst-case erasure hits honest rows: the Byzantine block
+                # (rows [0, n_byz) under fixed identities) keeps reporting
+                offset=self.n_byz if self.participation == "adversarial" else 0,
             ),
             backend=self.backend,
         )
@@ -294,6 +314,14 @@ def _bucket_signature(scn: Scenario, exact: bool = True) -> tuple:
         scn.q_hat_frac,
         scn.quant_levels,
         scn.backend,
+        # the participation schedule is static protocol structure: an active
+        # schedule widens the scan carry and switches the server signature,
+        # so rows differing here cannot share a compiled program
+        scn.participation,
+        scn.p_rate,
+        scn.p_drop_n,
+        scn.p_period,
+        scn.p_duty,
     ) + ((scn.aggregator,) if exact else ())
 
 
@@ -590,6 +618,76 @@ def synthetic_sweep(
                 backend=backend,
             )
         )
+    return rows
+
+
+def participation_sweep(
+    *,
+    method: str = "lad",
+    d: int = 4,
+    n_devices: int = 16,
+    n_byz: int = 0,
+    schedules: Sequence[str] = ("iid", "onoff", "adversarial"),
+    aggregators: Sequence[str] = ("decode", "mean"),
+    attacks: Sequence[str] = ("sign_flip",),
+    rate: float = 0.25,
+    n_drop: int | None = None,
+    period: int = 4,
+    duty: float = 0.5,
+    base_lr: float = 1e-5,
+    backend: str = "xla",
+) -> list[Scenario]:
+    """The partial-participation / straggler row-family: schedule x
+    aggregator x attack over the cyclic code at redundancy margin
+    ``s = erasure_margin(d) = d - 1``.
+
+    ``n_drop`` (erased/straggler devices for the deterministic schedules)
+    defaults to the full margin ``s`` — the worst erasure pattern the code
+    still decodes exactly.  The default aggregator pair is the benchmark
+    contrast: ``"decode"`` (the K-of-N erasure decode — *recovered*) vs
+    ``"mean"`` (erased rows imputed, no code exploited — *undefended*
+    against erasure bias).  Each (schedule, aggregator) pair is its own
+    compile bucket (an active schedule is static protocol structure); the
+    attack axis stays traced per lane as everywhere else.
+    """
+    if method == "draco":
+        raise ValueError(
+            "participation_sweep targets the cyclic code; DRACO has its own "
+            "masked group decoder (set aggregator rows on a draco grid instead)"
+        )
+    if n_devices % d != 0:
+        raise ValueError(
+            f"participation rows need d | N (the erasure decode's offset "
+            f"classes must tile the subset circle): N={n_devices} d={d}"
+        )
+    drop = erasure_margin(d) if n_drop is None else n_drop
+    rows = []
+    for i_s, sched in enumerate(schedules):
+        if sched not in ("iid", "onoff", "adversarial", "markov"):
+            raise ValueError(
+                f"unknown participation schedule {sched!r} for a sweep row "
+                "('full' rows are just the plain grid; 'external' is fleet-only)"
+            )
+        for agg in aggregators:
+            for i_a, attack in enumerate(attacks):
+                rows.append(
+                    Scenario(
+                        name=f"part/{sched}/{agg}/{attack}",
+                        method=method,
+                        d=d,
+                        aggregator=agg,
+                        attack=attack,
+                        n_byz=n_byz,
+                        n_devices=n_devices,
+                        lr=base_lr * (1.0 + 0.1 * i_a),
+                        backend=backend,
+                        participation=sched,
+                        p_rate=rate,
+                        p_drop_n=drop,
+                        p_period=period,
+                        p_duty=duty,
+                    )
+                )
     return rows
 
 

@@ -118,3 +118,49 @@ def gather_combine_pallas(
     return gather_combine_pallas_lanes(
         grads[None], subsets[None], weights[None], q_block=q_block, interpret=interpret
     )[0]
+
+
+def _masked_combine_kernel(msgs_ref, w_ref, out_ref):
+    m = msgs_ref[0].astype(jnp.float32)  # (N, q_block): transmitted rows
+    w = w_ref[0].astype(jnp.float32)  # (N,): mask x class-select weights
+    # the K-of-N erasure decode's surviving-row reduce: erased rows carry
+    # weight exactly 0.0, so they cannot perturb the accumulation
+    out_ref[0] = jnp.einsum("nq,n->q", m, w).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("q_block", "interpret"))
+def masked_combine_pallas_lanes(
+    msgs: jax.Array, weights: jax.Array, q_block: int = 2048, interpret: bool = True
+) -> jax.Array:
+    """Weighted row-combine over the device axis, lane-batched.
+
+    msgs: (L, N, Q) transmitted coded vectors, weights: (L, N) per-device
+    row weights (participation mask x decode selection) -> (L, Q).  This is
+    the server-side dual of ``coded_combine_pallas_lanes``: same contraction
+    with the reduce over *devices* instead of assigned subsets, used by the
+    cyclic erasure decode to sum a surviving offset class in one launch.
+    """
+    lanes, n, q = msgs.shape
+    assert weights.shape == (lanes, n), (weights.shape, msgs.shape)
+    q_block = min(q_block, q)
+    assert q % q_block == 0, (q, q_block)
+    return pl.pallas_call(
+        _masked_combine_kernel,
+        grid=(lanes, q // q_block),
+        in_specs=[
+            pl.BlockSpec((1, n, q_block), lambda l, i: (l, 0, i)),
+            pl.BlockSpec((1, n), lambda l, i: (l, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block), lambda l, i: (l, i)),
+        out_shape=jax.ShapeDtypeStruct((lanes, q), msgs.dtype),
+        interpret=interpret,
+    )(msgs, weights)
+
+
+def masked_combine_pallas(
+    msgs: jax.Array, weights: jax.Array, q_block: int = 2048, interpret: bool = True
+) -> jax.Array:
+    """msgs: (N, Q), weights: (N,) -> (Q,) — the L=1 lane."""
+    return masked_combine_pallas_lanes(
+        msgs[None], weights[None], q_block=q_block, interpret=interpret
+    )[0]

@@ -37,6 +37,7 @@ from repro.kernels.attacks import attack_pallas_lanes
 from repro.kernels.coded_combine import (
     coded_combine_pallas_lanes,
     gather_combine_pallas_lanes,
+    masked_combine_pallas_lanes,
 )
 from repro.kernels.cwtm import cwtm_pallas_lanes
 from repro.kernels.nnm_dist import gram_pallas_lanes
@@ -158,6 +159,15 @@ def _gram_fns(q_block: int, interpret: bool):
 
 
 @functools.lru_cache(maxsize=None)
+def _masked_combine_fns(q_block: int, interpret: bool):
+    return _lane_vmap_pair(
+        lambda m, w: masked_combine_pallas_lanes(
+            m, w, q_block=q_block, interpret=interpret
+        )
+    )
+
+
+@functools.lru_cache(maxsize=None)
 def _gather_combine_fns(q_block: int, interpret: bool):
     return _lane_vmap_pair(
         lambda g, s, w: gather_combine_pallas_lanes(
@@ -256,6 +266,26 @@ def coded_combine(
     flat, lead = _flatten_lanes(padded, 2)
     w = jnp.broadcast_to(weights, grads.shape[:-1]).reshape(flat.shape[:-1])
     out = _lane_launch("coded_combine", _combine_fns(qb, _interp(backend)), flat, w)
+    return out.reshape(lead + out.shape[-1:])[..., :q]
+
+
+def masked_combine(
+    msgs: jax.Array, weights: jax.Array, backend: str = DEFAULT_BACKEND, q_block: int = 2048
+) -> jax.Array:
+    """Weighted row-combine over the device axis — the K-of-N erasure
+    decode's surviving-class reduce.  msgs: (..., N, Q), weights: (..., N)
+    per-device row weights (participation mask x class selection, exact 0.0
+    on erased rows) -> (..., Q)."""
+    if backend == "xla":
+        return ref.masked_combine_ref(msgs, weights)
+    q = msgs.shape[-1]
+    qb = _tile(q, q_block)
+    padded = _pad_last(msgs, qb)
+    if msgs.ndim == 2:
+        return _masked_combine_fns(qb, _interp(backend))[0](padded, weights)[:q]
+    flat, lead = _flatten_lanes(padded, 2)
+    w = jnp.broadcast_to(weights, msgs.shape[:-1]).reshape(flat.shape[:-1])
+    out = _lane_launch("masked_combine", _masked_combine_fns(qb, _interp(backend)), flat, w)
     return out.reshape(lead + out.shape[-1:])[..., :q]
 
 

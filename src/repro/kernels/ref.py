@@ -29,6 +29,14 @@ def coded_combine_ref(grads: jax.Array, weights: jax.Array) -> jax.Array:
     ).astype(grads.dtype)
 
 
+def masked_combine_ref(msgs: jax.Array, weights: jax.Array) -> jax.Array:
+    """Weighted row-combine over the device axis (the erasure decode's
+    surviving-class sum).  msgs: (..., N, Q), weights: (..., N) -> (..., Q)."""
+    return jnp.einsum(
+        "...nq,...n->...q", msgs.astype(jnp.float32), weights.astype(jnp.float32)
+    ).astype(msgs.dtype)
+
+
 def stochastic_quantize_ref(
     g: jax.Array, u: jax.Array, levels: int, block: int
 ) -> jax.Array:

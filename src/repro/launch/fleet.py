@@ -1,0 +1,371 @@
+"""Multi-process protocol fleet: the first true multi-host realization.
+
+One OS process per (simulated) host.  The N logical devices are split into
+``procs`` contiguous blocks; every process computes the eq.-(5) coded
+gradients of its block's devices each round and ships them to process 0 (the
+server) over a plain TCP socket.  The server gathers with a **round
+deadline**: blocks that arrive in time form the round's participation mask,
+blocks that miss it — a stalled worker — are erased for that round, and a
+*dead* worker (EOF / connection reset) is permanently erased.  The observed
+mask is then lowered through the exact same machinery as the simulated
+engine path: a ``ProtocolConfig`` with ``ParticipationSpec("external")`` and
+the mask-aware server from ``make_server_fn`` (``aggregator="decode"`` gives
+the cyclic K-of-N erasure decode).  A killed process **is** an erasure — the
+fault semantics of the real fleet and of ``core/engine.py``'s simulated
+schedules are one contract.
+
+Identity layer vs. data plane:
+
+* ``jax.distributed.initialize`` (when ``--distributed``, the default for
+  ``procs > 1``) gives each process its cluster identity — the shape of a
+  real multi-host launch.  It is NOT used for the round gather: jax's SPMD
+  collectives require every participant, so a timeout-and-proceed gather
+  cannot be expressed as one.  The data plane is the TCP loop below.
+* Every process derives the identical per-round assignment from the shared
+  seed via the engine's round-key convention (``fold_in(key, t)`` then a
+  4-way split, assignment stream first) — no assignment broadcast needed.
+
+Run (one line per process, same flags except ``--proc-id``)::
+
+    python -m repro.launch.fleet --procs 3 --proc-id 0 --n-devices 6 --d 3
+    python -m repro.launch.fleet --procs 3 --proc-id 1 --n-devices 6 --d 3
+    python -m repro.launch.fleet --procs 3 --proc-id 2 --n-devices 6 --d 3
+
+Process 0 prints ``RESULT::{json}`` with per-round losses, report counts and
+the dead-process set, then hard-exits (``os._exit``) so a torn-down
+coordinator heartbeat cannot hang a finished run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pickle
+import select
+import socket
+import struct
+import sys
+import time
+
+__all__ = ["main", "run_server", "run_worker", "build_parser"]
+
+_HDR = struct.Struct("!I")
+_MAX_MSG = 1 << 26  # 64 MiB: a block of coded vectors is far smaller
+
+
+# --------------------------------------------------------------------------
+# framing: length-prefixed pickle over a stream socket (trusted local fleet)
+# --------------------------------------------------------------------------
+def _send(sock: socket.socket, obj) -> None:
+    payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    sock.sendall(_HDR.pack(len(payload)) + payload)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes | None:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:  # EOF: peer died
+            return None
+        buf += chunk
+    return buf
+
+
+def _recv(sock: socket.socket):
+    """One framed message, or ``None`` on EOF (dead peer)."""
+    hdr = _recv_exact(sock, _HDR.size)
+    if hdr is None:
+        return None
+    (n,) = _HDR.unpack(hdr)
+    if n > _MAX_MSG:
+        raise ValueError(f"oversized fleet message: {n} bytes")
+    payload = _recv_exact(sock, n)
+    if payload is None:
+        return None
+    return pickle.loads(payload)
+
+
+# --------------------------------------------------------------------------
+# shared round math (imports jax lazily so --help works instantly)
+# --------------------------------------------------------------------------
+def _fleet_state(args):
+    """Everything a process needs that is derivable from the shared seed."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import task_matrix as tm
+    from repro.data.synthetic import linear_regression_problem
+
+    n, d = args.n_devices, args.d
+    if n % args.procs != 0:
+        raise ValueError(f"n_devices={n} not divisible by procs={args.procs}")
+    if n % d != 0:
+        raise ValueError(f"decode exactness needs d | N: N={n} d={d}")
+    z, y = linear_regression_problem(
+        jax.random.PRNGKey(args.seed), n=n, dim=args.dim, sigma_h=args.sigma_h
+    )
+    key = jax.random.PRNGKey(args.seed)
+
+    def round_assignment(t: int):
+        # the engine's round-key convention: fold in t, 4-way split, the
+        # assignment stream is the first key
+        k = jax.random.fold_in(key, t)
+        k_assign = jax.random.split(k, 4)[0]
+        return tm.sample_assignment(k_assign, n, d)
+
+    block = n // args.procs
+
+    def block_rows(t: int, x, proc_id: int):
+        """The (block, dim) coded vectors of this process's devices.
+
+        Only the subset gradients this block's cyclic windows touch are
+        computed — per-device work is exactly the computational load d.
+        """
+        ta = round_assignment(t)
+        sub = ta.subsets[proc_id * block : (proc_id + 1) * block]  # (B, d)
+        need = sub.reshape(-1)
+        from repro.data.synthetic import linreg_subset_grads
+
+        g = linreg_subset_grads(z[need], y[need], x)  # (B*d, dim)
+        return jnp.mean(g.reshape(block, d, x.shape[0]), axis=1)
+
+    return z, y, round_assignment, block, block_rows
+
+
+def _server_decode_fn(args):
+    import jax.numpy as jnp  # noqa: F401
+
+    from repro.core.byzantine import ProtocolConfig, make_server_fn
+    from repro.core.participation import ParticipationSpec
+
+    cfg = ProtocolConfig(
+        n_devices=args.n_devices,
+        d=args.d,
+        method="lad",
+        aggregator=args.aggregator,
+        participation=ParticipationSpec(name="external"),
+    )
+    return make_server_fn(cfg)
+
+
+def _maybe_init_distributed(args) -> bool:
+    """Gated ``jax.distributed.initialize`` — identity layer only."""
+    if not args.distributed or args.procs < 2:
+        return False
+    import jax
+
+    try:
+        jax.distributed.initialize(
+            coordinator_address=args.coordinator,
+            num_processes=args.procs,
+            process_id=args.proc_id,
+            initialization_timeout=int(args.init_timeout),
+        )
+        return True
+    except Exception as exc:  # pragma: no cover - environment-dependent
+        print(f"fleet: jax.distributed unavailable ({exc!r}); "
+              "continuing on the TCP data plane only", file=sys.stderr)
+        return False
+
+
+# --------------------------------------------------------------------------
+# server (process 0)
+# --------------------------------------------------------------------------
+def run_server(args) -> dict:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.data.synthetic import linreg_loss
+
+    z, y, round_assignment, block, block_rows = _fleet_state(args)
+    server = _server_decode_fn(args)
+    n, dim = args.n_devices, args.dim
+
+    lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    lsock.bind((args.host, args.port))
+    lsock.listen(args.procs)
+    conns: dict[int, socket.socket] = {}
+    deadline = time.monotonic() + args.init_timeout
+    while len(conns) < args.procs - 1:
+        if time.monotonic() > deadline:
+            raise TimeoutError(
+                f"fleet server: only {len(conns)}/{args.procs - 1} workers "
+                "connected before --init-timeout"
+            )
+        lsock.settimeout(max(0.1, deadline - time.monotonic()))
+        try:
+            conn, _ = lsock.accept()
+        except socket.timeout:
+            continue
+        hello = _recv(conn)
+        if hello is None or "proc" not in hello:
+            conn.close()
+            continue
+        conns[int(hello["proc"])] = conn
+
+    x = jnp.zeros((dim,), jnp.float32)
+    dead: set[int] = set()
+    losses, n_report, mask_hist = [], [], []
+
+    for t in range(args.steps):
+        xb = np.asarray(x)
+        for pid, conn in list(conns.items()):
+            if pid in dead:
+                continue
+            try:
+                _send(conn, {"t": t, "x": xb, "done": False})
+            except OSError:
+                dead.add(pid)
+
+        # the server's own block always reports (it is the aggregation host)
+        transmitted = np.zeros((n, dim), np.float32)
+        mask = np.zeros((n,), np.float32)
+        transmitted[:block] = np.asarray(block_rows(t, x, 0))
+        mask[:block] = 1.0
+
+        pending = {pid for pid in conns if pid not in dead}
+        round_deadline = time.monotonic() + args.round_timeout
+        while pending:
+            remaining = round_deadline - time.monotonic()
+            if remaining <= 0:
+                break  # stragglers are erased for this round
+            socks = [conns[pid] for pid in pending]
+            readable, _, _ = select.select(socks, [], [], remaining)
+            if not readable:
+                break
+            for conn in readable:
+                pid = next(p for p, c in conns.items() if c is conn)
+                conn.settimeout(max(0.1, round_deadline - time.monotonic()))
+                try:
+                    msg = _recv(conn)
+                except (socket.timeout, OSError):
+                    msg = None
+                if msg is None:  # EOF / reset: the worker is gone for good
+                    dead.add(pid)
+                    pending.discard(pid)
+                    continue
+                if msg["t"] != t:
+                    continue  # stale reply from a straggled round: discard
+                lo = pid * block
+                transmitted[lo : lo + block] = msg["rows"]
+                mask[lo : lo + block] = 1.0
+                pending.discard(pid)
+
+        ta = round_assignment(t)
+        pm = jnp.asarray(mask)
+        decoded = server(
+            jnp.asarray(transmitted) * pm[:, None], pm, ta.task_index.astype(jnp.int32)
+        )
+        x = x - args.lr * float(n) * decoded
+        losses.append(float(linreg_loss(z, y, x)))
+        n_report.append(int(mask.sum()))
+        mask_hist.append(mask.astype(int).tolist())
+
+    for pid, conn in conns.items():
+        if pid not in dead:
+            try:
+                _send(conn, {"done": True})
+            except OSError:
+                pass
+        conn.close()
+    lsock.close()
+    return {
+        "losses": losses,
+        "n_report": n_report,
+        "mask_hist": mask_hist,
+        "dead": sorted(dead),
+        "final_loss": losses[-1],
+    }
+
+
+# --------------------------------------------------------------------------
+# worker (processes 1..P-1)
+# --------------------------------------------------------------------------
+def run_worker(args) -> dict:
+    import jax.numpy as jnp
+    import numpy as np
+
+    _, _, _, _, block_rows = _fleet_state(args)
+
+    sock = None
+    deadline = time.monotonic() + args.init_timeout
+    while sock is None:
+        try:
+            sock = socket.create_connection((args.host, args.port), timeout=2.0)
+        except OSError:
+            if time.monotonic() > deadline:
+                raise
+            time.sleep(0.1)
+    sock.settimeout(None)
+    _send(sock, {"proc": args.proc_id})
+
+    rounds = 0
+    while True:
+        msg = _recv(sock)
+        if msg is None or msg.get("done"):
+            break
+        t = int(msg["t"])
+        if 0 <= args.die_after_round <= t:
+            # simulate a crashed host mid-round: vanish without replying
+            sock.close()
+            os._exit(17)
+        if 0 <= args.stall_after_round <= t:
+            time.sleep(args.round_timeout * 4.0)  # straggle past the deadline
+        x = jnp.asarray(np.asarray(msg["x"]))
+        rows = np.asarray(block_rows(t, x, args.proc_id))
+        try:
+            _send(sock, {"t": t, "proc": args.proc_id, "rows": rows})
+        except OSError:
+            break
+        rounds += 1
+    sock.close()
+    return {"proc": args.proc_id, "rounds": rounds}
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--procs", type=int, default=1, help="fleet size (processes)")
+    p.add_argument("--proc-id", type=int, default=0, help="this process (0 = server)")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=57313, help="server gather port")
+    p.add_argument("--coordinator", default="127.0.0.1:57312",
+                   help="jax.distributed coordinator address")
+    p.add_argument("--distributed", action=argparse.BooleanOptionalAction,
+                   default=True, help="run jax.distributed.initialize (identity)")
+    p.add_argument("--n-devices", type=int, default=6)
+    p.add_argument("--d", type=int, default=3, help="computational load / redundancy")
+    p.add_argument("--dim", type=int, default=8)
+    p.add_argument("--sigma-h", type=float, default=0.3)
+    p.add_argument("--steps", type=int, default=6)
+    p.add_argument("--lr", type=float, default=1e-5)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--aggregator", default="decode",
+                   help="masked server rule (decode = cyclic K-of-N erasure decode)")
+    p.add_argument("--round-timeout", type=float, default=10.0,
+                   help="seconds the server waits per round before erasing")
+    p.add_argument("--init-timeout", type=float, default=60.0)
+    p.add_argument("--die-after-round", type=int, default=-1,
+                   help="test hook: worker hard-exits when it sees this round")
+    p.add_argument("--stall-after-round", type=int, default=-1,
+                   help="test hook: worker sleeps past the deadline from this round")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if not (0 <= args.proc_id < args.procs):
+        raise SystemExit(f"--proc-id {args.proc_id} out of range for --procs {args.procs}")
+    _maybe_init_distributed(args)
+    out = run_server(args) if args.proc_id == 0 else run_worker(args)
+    print("RESULT::" + json.dumps(out), flush=True)
+    # hard exit: a killed sibling can leave the jax.distributed heartbeat
+    # wedged; results are already on stdout and buffers are flushed
+    os._exit(0)
+
+
+if __name__ == "__main__":
+    main()

@@ -40,7 +40,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["tree_sum", "stable_norm", "stable_mean0"]
+__all__ = ["tree_sum", "stable_norm", "stable_mean0", "stable_masked_mean0"]
 
 
 def _pad_pow2(v: jax.Array, axis: int) -> jax.Array:
@@ -79,3 +79,21 @@ def stable_norm(v: jax.Array) -> jax.Array:
 def stable_mean0(m: jax.Array) -> jax.Array:
     """Mean over axis 0 (the device axis) with a fixed-tree accumulation."""
     return tree_sum(m.astype(jnp.float32), axis=0) * jnp.float32(1.0 / m.shape[0])
+
+
+def stable_masked_mean0(m: jax.Array, mask: jax.Array) -> jax.Array:
+    """Mean over the reporting rows of axis 0 (``mask`` is ``(N,)`` 0/1
+    float32) with a fixed-tree accumulation.
+
+    Masked rows contribute exact ``0.0`` terms to the add tree — the
+    participation-erasure contract — and the count divisor is the exact
+    integer-valued ``tree_sum(mask)``.  NOTE: at an all-ones mask this is
+    ``tree_sum(m) / N``, a true division, whereas :func:`stable_mean0` is a
+    multiply by ``1/N`` — bitwise different when ``1/N`` is not dyadic.
+    Callers needing all-ones == legacy bitwise must use the impute-then-
+    aggregate pattern (see ``byzantine.make_server_fn``) instead.
+    """
+    m = m.astype(jnp.float32)
+    w = mask.astype(jnp.float32)
+    num = tree_sum(m * w[:, None] if m.ndim == 2 else m * w, axis=0)
+    return num / jnp.maximum(tree_sum(w, axis=0), 1.0)

@@ -110,6 +110,58 @@ def test_validate_lm_engine_json_rejects_drift():
             bench_smoke.validate_lm_engine_json(bad)
 
 
+@pytest.mark.slow
+def test_participation_smoke_and_json_schema():
+    """The K-of-N erasure sweep bench runs at tiny shapes — with its
+    erasure-invariance (recovery) assertion — and its JSON validates.
+    Slow-marked like the LM-engine smoke: every push still runs it via the
+    CI determinism job's standalone ``scripts/bench_smoke.py``, and nightly
+    via --runslow; the pure-dict drift test below stays tier-1."""
+    payload = bench_smoke.smoke_participation()
+    bench_smoke.validate_participation_json(payload)  # idempotent re-check
+    assert payload["margin"] == payload["d"] - 1
+    names = {r["name"] for r in payload["rows"]}
+    for e in range(payload["margin"] + 1):
+        assert {f"e{e}/decode", f"e{e}/mean"} <= names
+    assert payload["rel_spread"]["decode"] <= 1e-4
+
+
+def _participation_base():
+    return {
+        "schema_version": 1, "device_count": 1, "n_devices": 8, "d": 2,
+        "margin": 1, "steps": 4, "dim": 12,
+        "rows": [
+            {"name": f"e{e}/{agg}", "erasures": e, "k_of_n": 8 - e,
+             "aggregator": agg, "final_loss": 1.0}
+            for e in (0, 1) for agg in ("decode", "mean")
+        ],
+        "timings": [
+            {"name": "grid_cold", "seconds": 1.0},
+            {"name": "grid_warm", "seconds": 0.5},
+        ],
+        "rel_spread": {"decode": 0.0, "mean": 0.01},
+    }
+
+
+def test_validate_participation_json_rejects_drift():
+    bench_smoke.validate_participation_json(_participation_base())
+    base = _participation_base()
+    for breakage in (
+        {"schema_version": 999},
+        {"margin": 3},  # margin must equal d - 1
+        {"rows": []},
+        {"rows": base["rows"][:2]},  # an erasure level went missing
+        {"rows": [dict(r, k_of_n=99) for r in base["rows"]]},
+        {"rows": [dict(r, aggregator="decode") for r in base["rows"]]},
+        {"timings": [{"name": "grid_cold", "seconds": 1.0}]},  # warm missing
+        {"rel_spread": {"decode": 0.5, "mean": 0.01}},  # recovery violated
+        {"rel_spread": {"decode": 0.0}},
+    ):
+        bad = {**_participation_base(), **breakage}
+        with pytest.raises(AssertionError):
+            bench_smoke.validate_participation_json(bad)
+
+
 def _scaling_row(devices, warm_s=1.0, lanes_per_s=64.0, speedup=1.0):
     return {
         "devices": devices, "platform": "cpu", "lanes": 64, "steps": 6,

@@ -14,10 +14,24 @@ sys.path.insert(0, str(SCRIPTS))
 import check_docs  # noqa: E402
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("relpath", check_docs.DOC_FILES)
 def test_doc_snippets_execute(relpath):
+    """Slow-marked (the two files cost ~45 s of snippet compiles — the
+    largest single tier-1 item): every push still executes every snippet
+    via the CI determinism job's standalone ``scripts/check_docs.py``, and
+    nightly via --runslow.  The fence-extraction sanity check below stays
+    tier-1 so a fence typo fails fast locally."""
     n = check_docs.run_file(relpath)
     assert n > 0, f"{relpath}: no python snippets found (fence drift?)"
+
+
+def test_doc_snippets_extract():
+    """Tier-1 guard that the extractor still finds snippets in every doc
+    file (the execution itself is the slow-marked case above)."""
+    for rel in check_docs.DOC_FILES:
+        blocks = check_docs.snippets(check_docs.REPO_ROOT / rel)
+        assert blocks, f"{rel}: no python snippets found (fence drift?)"
 
 
 def test_all_doc_files_exist():

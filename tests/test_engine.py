@@ -350,6 +350,33 @@ def test_run_trajectory_program_cache_zero_retrace(key):
         assert not np.array_equal(np.asarray(cold.x), np.asarray(warm.x))
 
 
+def test_engine_run_grid_active_participation(key):
+    """Direct engine.run_grid with an active schedule: the widened stateful
+    carry vmaps per-lane, n_report batches, and lane 0 equals its standalone
+    trajectory bitwise."""
+    from repro.core import engine
+    from repro.core.participation import ParticipationSpec
+
+    n = 16
+    z, y = linear_regression_problem(key, n=n, dim=16, sigma_h=0.3)
+    cfg = ProtocolConfig(
+        n_devices=n, d=4, aggregator="decode", attack=AttackSpec("none"),
+        participation=ParticipationSpec("adversarial", n_drop=3),
+    )
+    keys = jnp.stack([key, jax.random.fold_in(key, 7)])
+    sgf = lambda d, x: linreg_subset_grads(z, y, x)
+    res = engine.run_grid(cfg, keys, jnp.zeros((16,)), sgf, steps=6,
+                          lr=jnp.array([1e-6, 2e-6]), grad_scale=float(n))
+    assert res.metrics["n_report"].shape == (2, 6)
+    np.testing.assert_array_equal(
+        np.asarray(res.metrics["n_report"]), np.full((2, 6), float(n - 3))
+    )
+    single = run_trajectory(cfg, key, jnp.zeros((16,)),
+                            lambda x: linreg_subset_grads(z, y, x),
+                            steps=6, lr=1e-6, grad_scale=float(n))
+    np.testing.assert_array_equal(np.asarray(res.lane(0).x), np.asarray(single.x))
+
+
 def test_run_trajectory_without_metrics(key):
     """with_metrics=False skips the raw metric stacks (large-Q runs) while
     keeping the final iterate bitwise-equal across modes."""

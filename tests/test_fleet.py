@@ -1,0 +1,93 @@
+"""Multi-process fleet conformance: real jax.distributed processes, a worker
+killed mid-run, and the server decoding through the observed erasure mask.
+
+These spawn 3 OS processes (`python -m repro.launch.fleet`) per scenario —
+jax import + jax.distributed.initialize per process — so they ride the slow
+lane with the subprocess mesh tests (``--runslow``, the nightly job).
+
+The fault contract under test (one semantics for simulated and real paths):
+a killed worker's block is PERMANENTLY erased (EOF on its socket), a stalled
+worker is erased per-round (deadline miss), and with N=6, d=3 each worker
+block is 2 rows = erasure_margin(3) — within the margin, so the cyclic
+K-of-N decode keeps recovering the full gradient mean and training
+converges.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+_PORT_KILL = (57461, 57460)  # (gather, coordinator) per scenario: no reuse
+_PORT_STALL = (57463, 57462)
+
+
+def _run_fleet(ports, extra_by_proc, steps=8, round_timeout=15.0):
+    gather, coord = ports
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    base = [
+        sys.executable, "-m", "repro.launch.fleet",
+        "--procs", "3", "--n-devices", "6", "--d", "3", "--dim", "8",
+        "--steps", str(steps), "--lr", "1e-5", "--seed", "0",
+        "--round-timeout", str(round_timeout),
+        "--port", str(gather), "--coordinator", f"127.0.0.1:{coord}",
+    ]
+    procs = [
+        subprocess.Popen(
+            base + ["--proc-id", str(pid)] + extra_by_proc.get(pid, []),
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        )
+        for pid in range(3)
+    ]
+    outs = [p.communicate(timeout=600) for p in procs]
+    server_out, server_err = outs[0]
+    assert procs[0].returncode == 0, server_err[-4000:]
+    lines = [l for l in server_out.splitlines() if l.startswith("RESULT::")]
+    assert lines, (server_out, server_err[-2000:])
+    return json.loads(lines[0][len("RESULT::"):]), procs, outs
+
+
+@pytest.fixture(scope="module")
+def killed_worker():
+    """Worker 2 hard-exits when it sees round 2: rounds 0-1 are full, rounds
+    2+ run with its 2-row block permanently erased."""
+    res, procs, outs = _run_fleet(
+        _PORT_KILL, {2: ["--die-after-round", "2"]}
+    )
+    assert procs[2].returncode == 17, outs[2][1][-2000:]  # the kill hook fired
+    return res
+
+
+def test_killed_worker_is_permanent_erasure(killed_worker):
+    assert killed_worker["dead"] == [2]
+    assert killed_worker["n_report"] == [6, 6, 4, 4, 4, 4, 4, 4]
+    for t, mask in enumerate(killed_worker["mask_hist"]):
+        expect = [1, 1, 1, 1, 1, 1] if t < 2 else [1, 1, 1, 1, 0, 0]
+        assert mask == expect, (t, mask)
+
+
+def test_server_converges_through_the_kill(killed_worker):
+    losses = killed_worker["losses"]
+    assert all(l > 0 for l in losses)
+    # monotone descent across the kill boundary: 2 erasures == margin(d=3),
+    # the decode still recovers the full gradient mean every round
+    assert all(b < a for a, b in zip(losses, losses[1:])), losses
+    assert losses[-1] < losses[0]
+
+
+def test_stalled_worker_is_per_round_erasure():
+    """A stalling (not dead) worker misses every deadline from round 2 on:
+    erased each round but never marked dead — the straggler regime."""
+    res, procs, outs = _run_fleet(
+        _PORT_STALL, {1: ["--stall-after-round", "2"]},
+        steps=4, round_timeout=2.0,
+    )
+    assert res["dead"] == []
+    assert res["n_report"] == [6, 6, 4, 4]
+    for mask in res["mask_hist"][2:]:
+        assert mask == [1, 1, 0, 0, 1, 1]
+    assert res["losses"][-1] < res["losses"][0]

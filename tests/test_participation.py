@@ -1,0 +1,440 @@
+"""Partial-participation fault model: spec/schedule semantics, the K-of-N
+erasure-decode exactness property, and the all-ones == legacy bitwise
+regression (the engine's participation contract — see README "Engine
+guarantees").
+
+Exactness strategy: the property tests draw INTEGER subset gradients with
+``d`` a power of two and ``N = d * 2^m <= 32``, so every eq.-(5) coded value
+and every decode quotient is an exact dyadic rational in f32 — the decode is
+arithmetically exact and can be compared BITWISE against the
+full-participation mean regardless of summation order.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ProtocolConfig, run_trajectory, scenarios
+from repro.core import task_matrix as tm
+from repro.core.attacks import AttackSpec
+from repro.core.byzantine import make_server_fn, protocol_round
+from repro.core.coding import cyclic_erasure_decode, draco_decode, erasure_margin
+from repro.core.participation import (
+    ParticipationSpec,
+    init_participation_state,
+    sample_participation,
+)
+from repro.data.synthetic import (
+    linear_regression_problem,
+    linreg_loss,
+    linreg_subset_grads,
+)
+from repro.testing import given, settings, strategies as st
+
+# ------------------------------------------------------------------ spec
+
+
+def test_spec_validation_and_active_property():
+    with pytest.raises(ValueError, match="unknown participation schedule"):
+        ParticipationSpec(name="sometimes")
+    with pytest.raises(ValueError, match="rate"):
+        ParticipationSpec(name="iid", rate=1.0)
+    with pytest.raises(ValueError, match="n_drop"):
+        ParticipationSpec(name="adversarial", n_drop=-1)
+    with pytest.raises(ValueError, match="duty"):
+        ParticipationSpec(name="onoff", period=0)
+    with pytest.raises(ValueError, match="duty"):
+        ParticipationSpec(name="onoff", duty=0.0)
+    assert not ParticipationSpec().active
+    # iid at rate 0 is active ON PURPOSE: all-ones masks through the masked
+    # machinery — the regression tests' configuration
+    assert ParticipationSpec(name="iid", rate=0.0).active
+    assert ParticipationSpec(name="external").active
+
+
+def test_schedules_are_deterministic_and_shaped(key):
+    n = 12
+    state = init_participation_state(ParticipationSpec(), n)
+    for spec in (
+        ParticipationSpec("iid", rate=0.4),
+        ParticipationSpec("onoff", n_drop=3, period=4, duty=0.5),
+        ParticipationSpec("adversarial", n_drop=2, offset=5),
+        ParticipationSpec("markov", p_drop=0.3, p_recover=0.5),
+    ):
+        m1, s1 = sample_participation(spec, key, jnp.asarray(3), n, state)
+        m2, _ = sample_participation(spec, key, jnp.asarray(3), n, state)
+        np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2), err_msg=spec.name)
+        assert m1.shape == (n,) and m1.dtype == jnp.float32
+        vals = set(np.asarray(m1).tolist())
+        assert vals <= {0.0, 1.0}, spec.name
+        assert float(jnp.sum(m1)) >= 1.0, f"{spec.name}: all-zero mask escaped"
+        assert s1.shape == (n,)
+
+
+def test_iid_rate_zero_is_all_ones(key):
+    m, _ = sample_participation(
+        ParticipationSpec("iid", rate=0.0), key, jnp.asarray(0), 16,
+        init_participation_state(ParticipationSpec(), 16),
+    )
+    np.testing.assert_array_equal(np.asarray(m), np.ones(16, np.float32))
+
+
+def test_onoff_duty_cycle_pattern(key):
+    """Stragglers (the last n_drop rows) blink on a phase-shifted duty cycle;
+    everyone else always reports."""
+    n, spec = 8, ParticipationSpec("onoff", n_drop=2, period=4, duty=0.5)
+    state = init_participation_state(spec, n)
+    masks = np.stack([
+        np.asarray(sample_participation(spec, key, jnp.asarray(t), n, state)[0])
+        for t in range(8)
+    ])
+    np.testing.assert_array_equal(masks[:, : n - 2], np.ones((8, n - 2)))
+    for i in (n - 2, n - 1):
+        col = masks[:, i]
+        assert 0.0 < col.mean() < 1.0, f"straggler {i} never blinked: {col}"
+        # deterministic duty cycle: period-4 repetition
+        np.testing.assert_array_equal(col[:4], col[4:])
+    # phase shift: the two stragglers are not in lockstep
+    assert not np.array_equal(masks[:, n - 2], masks[:, n - 1])
+
+
+def test_adversarial_hits_fixed_rows_every_round(key):
+    spec = ParticipationSpec("adversarial", n_drop=3, offset=2)
+    state = init_participation_state(spec, 10)
+    for t in (0, 1, 17):
+        m, _ = sample_participation(spec, key, jnp.asarray(t), 10, state)
+        expect = np.ones(10, np.float32)
+        expect[2:5] = 0.0
+        np.testing.assert_array_equal(np.asarray(m), expect)
+
+
+def test_all_erased_forces_one_reporter(key):
+    spec = ParticipationSpec("adversarial", n_drop=6, offset=0)
+    m, _ = sample_participation(
+        spec, key, jnp.asarray(0), 6, init_participation_state(spec, 6)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(m), np.array([0, 0, 0, 0, 0, 1], np.float32)
+    )
+
+
+def test_markov_threads_state(key):
+    spec = ParticipationSpec("markov", p_drop=0.4, p_recover=0.3)
+    n, state = 16, init_participation_state(ParticipationSpec(), 16)
+    seen = []
+    for t in range(6):
+        m, state = sample_participation(
+            spec, jax.random.fold_in(key, t), jnp.asarray(t), n, state
+        )
+        np.testing.assert_array_equal(np.asarray(state), np.asarray(m))
+        seen.append(int(jnp.sum(m)))
+    assert min(seen) >= 1 and len(set(seen)) > 1, seen
+
+
+def test_external_schedule_cannot_be_sampled(key):
+    spec = ParticipationSpec("external")
+    with pytest.raises(ValueError, match="supplied externally"):
+        sample_participation(
+            spec, key, jnp.asarray(0), 4, init_participation_state(spec, 4)
+        )
+
+
+# ------------------------------------------------- decode exactness property
+
+
+def _dyadic_case(seed: int, d: int, m: int, q: int = 6):
+    """Integer subset gradients + a random round assignment at load d,
+    N = d * 2^m: every decode quantity is exactly representable."""
+    n = d * (2**m)
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.integers(-8, 9, size=(n, q)).astype(np.float32))
+    key = jax.random.PRNGKey(seed)
+    ta = tm.sample_assignment(key, n, d)
+    coded = jnp.mean(g[ta.subsets], axis=1)  # (N, q) eq.-(5), exact dyadic
+    full_mean = jnp.mean(g, axis=0)  # exact: integer sum / power of two
+    return n, g, ta, coded, full_mean, rng
+
+
+@given(st.integers(0, 10**6), st.sampled_from((2, 4)), st.integers(1, 2))
+@settings(max_examples=15, deadline=None)
+def test_decode_recovers_full_sum_within_margin(seed, d, m):
+    """ANY erasure pattern of e <= erasure_margin(d) = d - 1 lanes decodes to
+    the full-participation gradient mean BITWISE (dyadic-exact inputs)."""
+    n, _, ta, coded, full_mean, rng = _dyadic_case(seed, d, m)
+    e = int(rng.integers(0, erasure_margin(d) + 1))
+    erased = rng.choice(n, size=e, replace=False)
+    mask = np.ones(n, np.float32)
+    mask[erased] = 0.0
+    got = cyclic_erasure_decode(
+        coded * jnp.asarray(mask)[:, None], jnp.asarray(mask),
+        ta.task_index.astype(jnp.int32), d,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(full_mean))
+
+
+@given(st.integers(0, 10**6), st.sampled_from((2, 4)), st.integers(1, 3))
+@settings(max_examples=15, deadline=None)
+def test_decode_beyond_margin_degrades_gracefully(seed, d, m):
+    """e > s erasures: the decode is the documented graceful semantics — the
+    masked mean over the best-covered offset class's surviving rows (an
+    unbiased partial estimate), finite, and still exact when the erasures
+    happen to spare a full class."""
+    n, _, ta, coded, full_mean, rng = _dyadic_case(seed, d, m)
+    e = int(rng.integers(d, n))  # beyond the margin (but never everyone)
+    erased = rng.choice(n, size=e, replace=False)
+    mask = np.ones(n, np.float32)
+    mask[erased] = 0.0
+    got = np.asarray(
+        cyclic_erasure_decode(
+            coded * jnp.asarray(mask)[:, None], jnp.asarray(mask),
+            ta.task_index.astype(jnp.int32), d,
+        )
+    )
+    assert np.all(np.isfinite(got))
+    # reimplement the documented contract: best-covered class, masked mean
+    cls = np.asarray(ta.task_index) % d
+    counts = [mask[cls == j].sum() for j in range(d)]
+    j_star = int(np.argmax(counts))
+    w = mask * (cls == j_star)
+    expect = (np.asarray(coded) * w[:, None]).sum(0) / max(w.sum(), 1.0)
+    np.testing.assert_allclose(got, expect, rtol=1e-6, atol=1e-6)
+    if counts[j_star] == n // d:  # a full class survived: exact after all
+        np.testing.assert_array_equal(got, np.asarray(full_mean))
+
+
+@given(st.integers(0, 10**6), st.sampled_from((2, 4)), st.integers(1, 2))
+@settings(max_examples=10, deadline=None)
+def test_protocol_round_external_mask_matches_direct_decode(seed, d, m):
+    """The full protocol path (external schedule + decode server) equals the
+    direct decode call — and within the margin, the uncoded gradient mean."""
+    n, g, ta, coded, full_mean, rng = _dyadic_case(seed, d, m)
+    e = int(rng.integers(0, erasure_margin(d) + 1))
+    erased = rng.choice(n, size=e, replace=False)
+    mask = np.ones(n, np.float32)
+    mask[erased] = 0.0
+    cfg = ProtocolConfig(
+        n_devices=n, d=d, method="lad", aggregator="decode",
+        attack=AttackSpec("none"),
+        participation=ParticipationSpec("external"),
+    )
+    key = jax.random.PRNGKey(seed)  # _dyadic_case derived ta from this key's
+    # 4-way split, matching protocol_round's round-key convention
+    got = protocol_round(cfg, key, g, participation_mask=jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(full_mean))
+
+
+# ------------------------------------------------------- masked DRACO decode
+
+
+def test_masked_draco_all_ones_is_legacy_bitwise(key):
+    msgs = jax.random.normal(key, (12, 7))
+    legacy = draco_decode(msgs, 4)
+    masked = draco_decode(msgs, 4, mask=jnp.ones((12,), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(masked), np.asarray(legacy))
+
+
+def test_masked_draco_medians_over_reporting_members():
+    """One erased member: the group median runs over the K reporting rows;
+    a fully-erased group drops out of the cross-group mean."""
+    # group 0: replicated value 1, one Byzantine-free erasure -> median of
+    # [1, 1, 5] over reporting rows [1, 5] = 3 ... use explicit numbers:
+    msgs = jnp.asarray(
+        [[1.0], [3.0], [5.0], [10.0], [20.0], [30.0]], jnp.float32
+    )
+    # full: medians 3 and 20 -> mean 11.5
+    np.testing.assert_allclose(float(draco_decode(msgs, 3)[0]), 11.5)
+    # erase row 1 (value 3): group-0 median over [1, 5] = 3 -> unchanged here
+    m = jnp.asarray([1, 0, 1, 1, 1, 1], jnp.float32)
+    np.testing.assert_allclose(float(draco_decode(msgs, 3, mask=m)[0]), 11.5)
+    # erase rows 0,1 (group 0 keeps only 5): medians 5, 20 -> 12.5
+    m = jnp.asarray([0, 0, 1, 1, 1, 1], jnp.float32)
+    np.testing.assert_allclose(float(draco_decode(msgs, 3, mask=m)[0]), 12.5)
+    # erase group 1 entirely: only group 0's median 3 survives
+    m = jnp.asarray([1, 1, 1, 0, 0, 0], jnp.float32)
+    np.testing.assert_allclose(float(draco_decode(msgs, 3, mask=m)[0]), 3.0)
+
+
+# ------------------------------------------------------------- config wiring
+
+
+def test_decode_server_requires_active_participation():
+    cfg = ProtocolConfig(n_devices=8, d=4, aggregator="decode")
+    with pytest.raises(ValueError, match="active participation"):
+        make_server_fn(cfg)
+
+
+def test_decode_server_rejects_draco_and_non_divisible():
+    with pytest.raises(ValueError, match="draco"):
+        make_server_fn(ProtocolConfig(
+            n_devices=8, d=4, method="draco", aggregator="decode",
+            participation=ParticipationSpec("iid", rate=0.1),
+        ))
+    with pytest.raises(ValueError, match="d | N"):
+        make_server_fn(ProtocolConfig(
+            n_devices=10, d=4, aggregator="decode",
+            participation=ParticipationSpec("iid", rate=0.1),
+        ))
+
+
+def test_mask_requires_active_schedule(key):
+    cfg = ProtocolConfig(n_devices=8, d=2, aggregator="mean", attack=AttackSpec("none"))
+    g = jax.random.normal(key, (8, 4))
+    with pytest.raises(ValueError, match="participation_mask"):
+        protocol_round(cfg, key, g, participation_mask=jnp.ones((8,)))
+
+
+# --------------------------------------- all-ones == legacy bitwise (engine)
+
+
+def _problem_fns(key, n, dim=12):
+    z, y = linear_regression_problem(key, n=n, dim=dim, sigma_h=0.3)
+    return (
+        lambda x: linreg_subset_grads(z, y, x),
+        lambda x: linreg_loss(z, y, x),
+    )
+
+
+@pytest.mark.parametrize("backend", ("xla", "interpret"))
+@pytest.mark.parametrize("n", (10, 16, 32))
+def test_all_ones_mask_bitwise_reproduces_legacy_engine(n, backend, key):
+    """The regression contract: iid at rate 0.0 routes all-ones masks through
+    the FULL masked machinery (widened carry, post-attack erasure multiply,
+    mask-aware server) and must still reproduce the legacy full-participation
+    trajectory BITWISE at every clean parity scale, on XLA and the kernel
+    interpret backend."""
+    grad_fn, loss_fn = _problem_fns(key, n)
+    base = dict(n_devices=n, d=4, aggregator="cwtm", trim_frac=0.2, n_byz=2,
+                attack=AttackSpec("sign_flip", n_byz=2), backend=backend)
+    kw = dict(steps=4, lr=1e-6, grad_scale=float(n), loss_fn=loss_fn)
+    legacy = run_trajectory(ProtocolConfig(**base), key, jnp.zeros((12,)),
+                            grad_fn, **kw)
+    masked = run_trajectory(
+        ProtocolConfig(participation=ParticipationSpec("iid", rate=0.0), **base),
+        key, jnp.zeros((12,)), grad_fn, **kw,
+    )
+    np.testing.assert_array_equal(np.asarray(masked.x), np.asarray(legacy.x))
+    for k in legacy.metrics:  # masked adds n_report on top of the legacy set
+        np.testing.assert_array_equal(
+            np.asarray(masked.metrics[k]), np.asarray(legacy.metrics[k]), err_msg=k
+        )
+    np.testing.assert_array_equal(
+        np.asarray(masked.metrics["n_report"]), np.full((4,), float(n))
+    )
+
+
+def test_all_ones_mask_bitwise_scan_loop_and_draco(key):
+    """The same contract on the stateful carry shapes: scan == loop under an
+    active schedule, and the masked DRACO server at all-ones == legacy."""
+    n = 16
+    grad_fn, loss_fn = _problem_fns(key, n)
+    kw = dict(steps=5, lr=1e-6, grad_scale=float(n), loss_fn=loss_fn)
+    # one config: draco (the masked group decoder); cwtm all-ones coverage
+    # lives in the legacy-bitwise matrix above
+    for extra in (
+        dict(d=4, method="draco"),
+    ):
+        base = dict(n_devices=n, n_byz=2,
+                    attack=AttackSpec("sign_flip", n_byz=2), **extra)
+        legacy = run_trajectory(ProtocolConfig(**base), key, jnp.zeros((12,)),
+                                grad_fn, **kw)
+        cfg = ProtocolConfig(
+            participation=ParticipationSpec("iid", rate=0.0), **base
+        )
+        scan = run_trajectory(cfg, key, jnp.zeros((12,)), grad_fn, **kw)
+        loop = run_trajectory(cfg, key, jnp.zeros((12,)), grad_fn, mode="loop", **kw)
+        np.testing.assert_array_equal(np.asarray(scan.x), np.asarray(legacy.x))
+        np.testing.assert_array_equal(np.asarray(scan.x), np.asarray(loop.x))
+        for k in scan.metrics:
+            np.testing.assert_array_equal(
+                np.asarray(scan.metrics[k]), np.asarray(loop.metrics[k]), err_msg=k
+            )
+
+
+def test_participation_trajectory_program_cache_warm(key):
+    """Active-participation trajectory programs ride the same lru cache: a
+    warm repeat makes zero program-cache misses."""
+    from repro.core import engine
+
+    n = 16
+    grad_fn, _ = _problem_fns(key, n)
+    cfg = ProtocolConfig(
+        n_devices=n, d=4, aggregator="decode", attack=AttackSpec("none"),
+        participation=ParticipationSpec("iid", rate=0.2),
+    )
+    kw = dict(steps=4, lr=1e-6, grad_scale=float(n))
+    run_trajectory(cfg, key, jnp.zeros((12,)), grad_fn, **kw)  # cold
+    misses0 = engine._trajectory_program.cache_info().misses
+    run_trajectory(cfg, jax.random.fold_in(key, 1), jnp.zeros((12,)), grad_fn, **kw)
+    assert engine._trajectory_program.cache_info().misses == misses0
+
+
+# ------------------------------------------------------------ scenario rows
+
+
+def test_participation_sweep_registry():
+    rows = scenarios.participation_sweep(d=4, n_devices=16)
+    names = [s.name for s in rows]
+    assert len(set(names)) == len(names)
+    assert {s.participation for s in rows} == {"iid", "onoff", "adversarial"}
+    assert {s.aggregator for s in rows} == {"decode", "mean"}
+    # active schedules change carry + server signature: distinct buckets from
+    # any full-participation row, but schedule-mates share
+    full = scenarios.synthetic_sweep(1, n_devices=16)[0]
+    assert all(
+        scenarios._bucket_signature(s) != scenarios._bucket_signature(full)
+        for s in rows
+    )
+    with pytest.raises(ValueError, match="draco"):
+        scenarios.participation_sweep(method="draco")
+    with pytest.raises(ValueError, match="d | N"):
+        scenarios.participation_sweep(d=3, n_devices=16)
+
+
+@pytest.mark.slow
+def test_participation_grid_bitwise_and_n_report(key):
+    """The vmapped grid over participation rows == per-row scan BITWISE, and
+    the n_report metric reflects each schedule's erasure pattern.
+    Slow-marked (4 grid buckets + 4 scan references): every push still runs
+    it via the CI determinism job's dedicated ``--runslow`` participation
+    step, and nightly; the all-ones bitwise matrix above stays tier-1."""
+    # two schedules keep this at 4 compile buckets (+4 scan references);
+    # iid already executes through the trajectory-level tests above
+    rows = scenarios.participation_sweep(
+        d=4, n_devices=16, rate=0.25, n_drop=3,
+        schedules=("onoff", "adversarial"), attacks=("sign_flip",)
+    )
+    grid = scenarios.run_grid(rows, 4, dim=12)
+    ref = scenarios.run_grid(rows, 4, dim=12, mode="scan")
+    for name, r in ref.items():
+        g = grid[name]
+        np.testing.assert_array_equal(np.asarray(g.x), np.asarray(r.x), err_msg=name)
+        assert sorted(g.metrics) == sorted(r.metrics)
+        for k in r.metrics:
+            np.testing.assert_array_equal(
+                np.asarray(g.metrics[k]), np.asarray(r.metrics[k]),
+                err_msg=f"{name}: {k}",
+            )
+    for name, res in grid.items():
+        nr = np.asarray(res.metrics["n_report"])
+        assert np.all(nr >= 1) and np.all(nr <= 16)
+        if "/adversarial/" in name:  # fixed 3 honest rows erased every round
+            np.testing.assert_array_equal(nr, np.full((4,), 13.0))
+
+
+@pytest.mark.slow
+def test_participation_recovers_attacked_training(key):
+    """End-to-end claim: under adversarial erasure within the margin, the
+    decode server tracks the uncoded full-gradient descent, while the
+    undefended mean server sees only the surviving rows' biased mix.
+    Slow-marked: every push via the CI determinism job's ``--runslow``
+    participation step (BENCH_participation.json asserts the same claim at
+    sweep scale), and nightly."""
+    rows = scenarios.participation_sweep(
+        d=4, n_devices=16, n_drop=3, schedules=("adversarial",),
+        aggregators=("decode", "mean"), attacks=("none",), base_lr=2e-6,
+    )
+    grid = scenarios.run_grid(rows, 30, dim=12)
+    dec = [r for n, r in grid.items() if "/decode/" in n][0]
+    assert float(dec.metrics["loss"][-1]) < float(dec.metrics["loss"][0])

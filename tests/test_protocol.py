@@ -47,7 +47,7 @@ def test_redundancy_reduces_variance(key):
         @jax.jit
         def sweep(g):
             def body(_, t):
-                coded, _ = _device_coded_gradients(cfg, jax.random.fold_in(key, t), g)
+                coded, *_ = _device_coded_gradients(cfg, jax.random.fold_in(key, t), g)
                 return None, jnp.mean(jnp.sum((coded - mu[None]) ** 2, axis=1))
 
             return jax.lax.scan(body, None, jnp.arange(rounds))[1]

@@ -116,6 +116,57 @@ def test_sharded_warm_zero_compiles_zero_dispatch(monkeypatch):
     assert engine._grid_program.cache_info().misses == misses0
 
 
+@pytest.mark.parametrize("n", (10, 32))
+def test_all_ones_participation_grid_bitwise_vs_legacy(n):
+    """iid at rate 0.0 — all-ones masks through the FULL masked machinery
+    (widened scan carry, erasure multiply, mask-aware server) — must
+    reproduce the legacy full-participation grid BITWISE, unsharded and
+    under shard_map.  Grid-level runs the edge scales; the full N=10/16/32
+    x backend matrix lives in test_participation.py at trajectory level."""
+    legacy_rows = scenarios.synthetic_sweep(3, n_devices=n, n_byz=2)
+    rows = [
+        dataclasses.replace(s, participation="iid", p_rate=0.0)
+        for s in legacy_rows
+    ]
+    ref = scenarios.run_grid(legacy_rows, STEPS, dim=DIM)
+    got = scenarios.run_grid(rows, STEPS, dim=DIM)
+    for name, r in ref.items():
+        g = got[name]
+        np.testing.assert_array_equal(
+            np.asarray(g.x), np.asarray(r.x), err_msg=f"{name}: x"
+        )
+        for k in r.metrics:  # the masked run adds n_report on top
+            np.testing.assert_array_equal(
+                np.asarray(g.metrics[k]), np.asarray(r.metrics[k]),
+                err_msg=f"{name}: {k}",
+            )
+        np.testing.assert_array_equal(
+            np.asarray(g.metrics["n_report"]), np.full((STEPS,), float(n)),
+            err_msg=name,
+        )
+    _match(scenarios.run_grid(rows, STEPS, dim=DIM, shard="shard_map"), got)
+
+
+def test_participation_sharded_warm_zero_compiles(monkeypatch):
+    """The zero-warm-compile contract extends to active-participation lanes:
+    the stateful carry and the mask-aware server ride the same lru-cached
+    one-program-per-bucket grid path, sharded."""
+    rows = scenarios.participation_sweep(
+        d=4, n_devices=16, schedules=("iid", "adversarial"),
+        aggregators=("decode",), attacks=("sign_flip",),
+    )
+    kw = dict(dim=DIM, shard="shard_map")
+    scenarios.run_grid(rows, STEPS, **kw)  # cold: compiles + caches
+    misses0 = engine._grid_program.cache_info().misses
+
+    def _boom(*a, **k):
+        raise AssertionError("run_grid(mode='grid') dispatched per-scenario")
+
+    monkeypatch.setattr(scenarios, "run_scenario", _boom)
+    scenarios.run_grid(rows, STEPS, **kw)  # warm
+    assert engine._grid_program.cache_info().misses == misses0
+
+
 def test_engine_level_sharded_axes(key):
     """Direct engine.run_grid under shard: batched x0 + batched lr + shared
     data (the axis combinations scenarios.run_grid never produces) must
