@@ -1,0 +1,174 @@
+"""Chaos-conformance bench for the self-healing fleet.
+
+Runs the real multi-process fleet (``python -m repro.launch.fleet``, 3 OS
+processes per case) under every seeded fault schedule of
+``scenarios.fleet_chaos_cases`` — duplicate frames, corrupted frames,
+dropped frames, delays, a partition-then-rejoin — plus a no-chaos baseline,
+and asserts the self-healing contract on each:
+
+  * the server process exits 0 under every schedule (unkillable by payload);
+  * the ``healthy`` (empty) chaos schedule produces a RESULT line
+    **byte-identical** to the plain fleet (the chaos layer is a true
+    pass-through);
+  * every within-margin case's final loss stays inside the erasure-decode
+    envelope (``rel_dev <= ENVELOPE_RTOL`` vs the baseline): per-round
+    erasures up to ``erasure_margin(d)`` are *recovered*, not averaged
+    around, so faults within the margin cannot move the trajectory beyond
+    decode-order float noise.
+
+The machine-readable result is ``benchmarks/out/BENCH_fleet_chaos.json``
+(schema below); ``scripts/bench_smoke.py::validate_fleet_chaos_json``
+checks the committed baseline in tier-1 and the CI ``fleet-chaos`` job
+regenerates + uploads a fresh one every push.
+
+Standalone:
+
+    PYTHONPATH=src:. python benchmarks/fleet_bench.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (REPO_ROOT, os.path.join(REPO_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+FLEET_CHAOS_SCHEMA_VERSION = 1
+
+# the recovery envelope: within-margin erasures are decoded exactly in real
+# arithmetic; the decode's offset-class selection reorders a handful of f32
+# adds, so the observed deviation is float noise (measured ~5e-7 at the
+# bench geometry) — 1e-3 is the claim "recovered, not degraded"
+ENVELOPE_RTOL = 1e-3
+
+DEFAULTS = dict(procs=3, n_devices=6, d=3, dim=8, steps=8,
+                lr=1e-5, seed=0, round_timeout=2.5)
+
+
+def _run_fleet(port: int, *, chaos: dict | None, procs: int, n_devices: int,
+               d: int, dim: int, steps: int, lr: float, seed: int,
+               round_timeout: float, timeout_s: float = 300.0):
+    """One fleet run; returns (server RESULT dict, raw RESULT line, rcs)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    base = [
+        sys.executable, "-m", "repro.launch.fleet",
+        "--procs", str(procs), "--n-devices", str(n_devices), "--d", str(d),
+        "--dim", str(dim), "--steps", str(steps), "--lr", str(lr),
+        "--seed", str(seed), "--round-timeout", str(round_timeout),
+        "--port", str(port), "--no-distributed",
+    ]
+    worker_extra = ["--rejoin-timeout", "30"]
+    if chaos is not None:
+        worker_extra += ["--chaos", json.dumps(chaos, sort_keys=True)]
+    children = [
+        subprocess.Popen(
+            base + ["--proc-id", str(pid)] + (worker_extra if pid else []),
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        )
+        for pid in range(procs)
+    ]
+    outs = [c.communicate(timeout=timeout_s) for c in children]
+    rcs = [c.returncode for c in children]
+    server_out, server_err = outs[0]
+    lines = [l for l in server_out.splitlines() if l.startswith("RESULT::")]
+    assert lines, (rcs, server_err[-3000:])
+    return json.loads(lines[0][len("RESULT::"):]), lines[0], rcs
+
+
+def fleet_chaos_bench(
+    *,
+    procs: int = DEFAULTS["procs"],
+    n_devices: int = DEFAULTS["n_devices"],
+    d: int = DEFAULTS["d"],
+    dim: int = DEFAULTS["dim"],
+    steps: int = DEFAULTS["steps"],
+    lr: float = DEFAULTS["lr"],
+    seed: int = DEFAULTS["seed"],
+    round_timeout: float = DEFAULTS["round_timeout"],
+    port_base: int = 57520,
+    cases: list[dict] | None = None,
+    out_path: str = os.path.join(REPO_ROOT, "benchmarks", "out",
+                                 "BENCH_fleet_chaos.json"),
+) -> dict:
+    from repro.core import scenarios
+    from repro.core.coding import erasure_margin
+
+    if cases is None:
+        cases = scenarios.fleet_chaos_cases(procs, steps=steps)
+    common = dict(procs=procs, n_devices=n_devices, d=d, dim=dim, steps=steps,
+                  lr=lr, seed=seed, round_timeout=round_timeout)
+
+    plain, plain_line, plain_rcs = _run_fleet(port_base, chaos=None, **common)
+    assert plain_rcs[0] == 0, plain_rcs
+    baseline_final = plain["final_loss"]
+
+    rows = []
+    healthy_identical = False
+    for i, case in enumerate(cases):
+        res, line, rcs = _run_fleet(port_base + 1 + i, chaos=case["chaos"], **common)
+        assert rcs[0] == 0, (case["name"], rcs)  # the server never crashes
+        rel_dev = abs(res["final_loss"] - baseline_final) / abs(baseline_final)
+        if case["name"] == "healthy":
+            healthy_identical = line == plain_line
+            assert healthy_identical, "empty chaos schedule is not a pass-through"
+        if case["within_margin"]:
+            assert res["stats"]["max_erasures"] <= res["stats"]["margin"], res["stats"]
+            assert rel_dev <= ENVELOPE_RTOL, (case["name"], rel_dev)
+        rows.append({
+            "name": case["name"],
+            "final_loss": res["final_loss"],
+            "rel_dev": rel_dev,
+            "server_rc": rcs[0],
+            "dead": res["dead"],
+            "rejoins": res["rejoins"],
+            "wire": res["wire"],
+            "n_report_min": min(res["n_report"]),
+            "within_margin": case["within_margin"],
+        })
+        print(f"fleet chaos [{case['name']}]: final={res['final_loss']:.6g} "
+              f"rel_dev={rel_dev:.2e} rejoins={res['rejoins']} "
+              f"wire={ {k: v for k, v in res['wire'].items() if v} }")
+
+    payload = {
+        "schema_version": FLEET_CHAOS_SCHEMA_VERSION,
+        "procs": procs,
+        "n_devices": n_devices,
+        "d": d,
+        "margin": int(erasure_margin(d)),
+        "dim": dim,
+        "steps": steps,
+        "round_timeout": round_timeout,
+        "baseline_final_loss": baseline_final,
+        "healthy_identical": healthy_identical,
+        "rows": rows,
+    }
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path} ({len(rows)} chaos cases, "
+          f"healthy_identical={healthy_identical})")
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=os.path.join(REPO_ROOT, "benchmarks",
+                                                  "out", "BENCH_fleet_chaos.json"))
+    ap.add_argument("--steps", type=int, default=DEFAULTS["steps"])
+    ap.add_argument("--round-timeout", type=float, default=DEFAULTS["round_timeout"])
+    ap.add_argument("--port-base", type=int, default=57520)
+    args = ap.parse_args(argv)
+    fleet_chaos_bench(steps=args.steps, round_timeout=args.round_timeout,
+                      port_base=args.port_base, out_path=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

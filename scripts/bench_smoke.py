@@ -310,6 +310,66 @@ def smoke_scaling() -> dict:
     return payload
 
 
+def validate_fleet_chaos_json(payload: dict) -> None:
+    """Assert the BENCH_fleet_chaos.json schema AND the self-healing claims
+    it records (see fleet_bench.FLEET_CHAOS_SCHEMA_VERSION)."""
+    from benchmarks.fleet_bench import ENVELOPE_RTOL, FLEET_CHAOS_SCHEMA_VERSION
+    from repro.launch.fleet import WIRE_KEYS
+
+    assert isinstance(payload, dict), type(payload)
+    assert payload.get("schema_version") == FLEET_CHAOS_SCHEMA_VERSION, (
+        payload.get("schema_version")
+    )
+    for field in ("procs", "n_devices", "d", "dim", "steps"):
+        v = payload.get(field)
+        assert isinstance(v, int) and v >= 1, (field, v)
+    assert payload["procs"] >= 3, "chaos conformance needs >= 2 workers"
+    assert payload["margin"] == payload["d"] - 1, payload.get("margin")
+    assert isinstance(payload.get("round_timeout"), float), payload.get("round_timeout")
+    base = payload.get("baseline_final_loss")
+    assert isinstance(base, float) and base > 0, base
+    # the pass-through claim: an empty chaos schedule was byte-identical
+    assert payload.get("healthy_identical") is True, payload.get("healthy_identical")
+    rows = payload.get("rows")
+    assert isinstance(rows, list) and rows, "rows must be a non-empty list"
+    names = set()
+    for row in rows:
+        assert set(row) == {"name", "final_loss", "rel_dev", "server_rc", "dead",
+                            "rejoins", "wire", "n_report_min", "within_margin"}, (
+            sorted(row)
+        )
+        assert isinstance(row["name"], str) and row["name"], row
+        assert isinstance(row["final_loss"], float) and row["final_loss"] > 0, row
+        assert isinstance(row["rel_dev"], float) and row["rel_dev"] >= 0, row
+        # the unkillable-server claim: every schedule exited cleanly
+        assert row["server_rc"] == 0, row
+        assert isinstance(row["dead"], list), row
+        assert isinstance(row["rejoins"], int) and row["rejoins"] >= 0, row
+        assert isinstance(row["wire"], dict) and set(row["wire"]) == set(WIRE_KEYS), row
+        assert all(isinstance(v, int) and v >= 0 for v in row["wire"].values()), row
+        assert isinstance(row["n_report_min"], int) and row["n_report_min"] >= 1, row
+        assert isinstance(row["within_margin"], bool), row
+        # the recovery claim: within-margin faults stay inside the envelope
+        if row["within_margin"]:
+            assert row["rel_dev"] <= ENVELOPE_RTOL, row
+        names.add(row["name"])
+    assert len(names) == len(rows), "duplicate row names"
+    for req in ("healthy", "corrupt", "partition_rejoin"):
+        assert req in names, f"missing required chaos case {req!r}"
+
+
+def smoke_fleet_chaos() -> dict:
+    """Schema + claims validation of the committed BENCH_fleet_chaos.json
+    baseline (the subprocess fan-out itself is the CI fleet-chaos job's
+    work, not tier-1's — same split as smoke_scaling)."""
+    baseline = os.path.join(REPO_ROOT, "benchmarks", "out",
+                            "BENCH_fleet_chaos.json")
+    with open(baseline) as f:
+        committed = json.load(f)
+    validate_fleet_chaos_json(committed)
+    return committed
+
+
 def smoke_grid_timing() -> list:
     """Miniature whole-grid-vs-per-scenario timing (with its bitwise check),
     on both the XLA and the kernel backend."""
@@ -354,6 +414,11 @@ def main() -> int:
     print(
         f"scaling smoke: {len(scaling['rows'])} in-process row(s) + committed "
         f"baseline, schema OK"
+    )
+    chaos = smoke_fleet_chaos()
+    print(
+        f"fleet chaos smoke: {len(chaos['rows'])} committed cases, "
+        f"healthy_identical={chaos['healthy_identical']}, schema + claims OK"
     )
     return 0
 

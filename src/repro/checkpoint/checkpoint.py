@@ -4,6 +4,11 @@ Arrays are gathered to host (``jax.device_get``) and written as a flat npz
 keyed by the pytree path; a JSON sidecar stores the treedef, dtypes and the
 logical sharding spec of every leaf so a restore can re-``device_put`` onto
 the production mesh layout.
+
+Writes are atomic (tmp file + ``os.replace`` per file) so a process killed
+mid-save — the fleet's crash-recovery regime, ``launch/fleet.py`` — can
+never leave a half-written npz/sidecar behind: a reader sees either the
+previous complete checkpoint or the new one.
 """
 from __future__ import annotations
 
@@ -33,7 +38,9 @@ def save_checkpoint(path: str, params, step: int = 0, specs=None) -> None:
             else v)
         for k, v in arrays.items()
     }
-    np.savez(path + ".npz", **stored)
+    tmp_npz = path + ".tmp.npz"
+    np.savez(tmp_npz, **stored)
+    os.replace(tmp_npz, path + ".npz")
     meta = {
         "step": step,
         "keys": sorted(arrays.keys()),
@@ -45,8 +52,10 @@ def save_checkpoint(path: str, params, step: int = 0, specs=None) -> None:
             jax.tree.map(lambda s: list(s), specs, is_leaf=lambda x: isinstance(x, tuple))
         )
         meta["specs"] = {k: v for k, v in flat_specs.items()}
-    with open(path + ".json", "w") as f:
+    tmp_json = path + ".tmp.json"
+    with open(tmp_json, "w") as f:
         json.dump(meta, f, indent=1, default=str)
+    os.replace(tmp_json, path + ".json")
 
 
 def load_checkpoint(path: str, like) -> tuple[Any, int]:

@@ -64,6 +64,7 @@ __all__ = [
     "SCHEDULES",
     "sample_participation",
     "init_participation_state",
+    "mask_stats",
     "PARTICIPATION_KEY_SALT",
 ]
 
@@ -188,3 +189,26 @@ def sample_participation(
         f"participation schedule {spec.name!r} cannot be sampled — the mask "
         "is supplied externally (pass participation_mask= to protocol_round)"
     )
+
+
+def mask_stats(mask_hist, d: int) -> dict:
+    """Summarize an observed per-round participation history against the
+    code's redundancy margin.
+
+    ``mask_hist`` is a round-major sequence of 0/1 masks over the N devices
+    (the fleet's RESULT / an ``"external"`` trace).  Returns plain-int
+    counters: how many rounds stayed within ``erasure_margin(d)`` — where
+    the K-of-N decode recovers the exact full-participation gradient — how
+    many were full, and the worst per-round erasure count.
+    """
+    from repro.core.coding import erasure_margin
+
+    margin = int(erasure_margin(d))
+    erasures = [int(len(m)) - int(sum(int(v) for v in m)) for m in mask_hist]
+    return {
+        "rounds": len(erasures),
+        "margin": margin,
+        "max_erasures": max(erasures, default=0),
+        "within_margin_rounds": sum(1 for e in erasures if e <= margin),
+        "full_rounds": sum(1 for e in erasures if e == 0),
+    }

@@ -60,6 +60,7 @@ __all__ = [
     "section7_grid",
     "synthetic_sweep",
     "participation_sweep",
+    "fleet_chaos_cases",
     "scenario_name",
     "PAPER_FIG4",
     "PAPER_FIG5",
@@ -689,6 +690,49 @@ def participation_sweep(
                     )
                 )
     return rows
+
+
+def fleet_chaos_cases(procs: int = 3, steps: int = 8) -> list[dict]:
+    """The fleet's chaos-conformance row-family: one seeded fault schedule
+    per failure mode of the self-healing transport (``launch/chaos.py``).
+
+    Declarative plain-data rows (no launch import — the registry stays
+    engine-side): each case is ``{"name", "chaos", "within_margin"}`` where
+    ``chaos`` is a ``launch.chaos.parse_chaos`` schedule dict.  Every
+    default case keeps per-round erasures within ``erasure_margin(d)`` for
+    the bench's N=6 / d=3 / 2-rows-per-block geometry — one faulted worker
+    block is exactly the margin — so the K-of-N decode keeps recovering the
+    full gradient and the final loss must sit inside the erasure-decode
+    envelope (``benchmarks/fleet_bench.py`` asserts it).
+
+    ``partition_rejoin`` pads every round with a small honest ``delay`` on
+    worker 1 so the round cadence is slow enough for worker ``procs-1``'s
+    0.5 s partition to heal while training is still running — the rejoin
+    path is the subject under test, not a race.
+    """
+    if procs < 3:
+        raise ValueError(f"chaos cases need >= 2 workers (procs >= 3), got {procs}")
+    w1, w2 = 1, procs - 1
+    return [
+        {"name": "healthy", "within_margin": True,
+         "chaos": {"seed": 0, "faults": []}},
+        {"name": "dup", "within_margin": True,
+         "chaos": {"seed": 1, "faults": [
+             {"op": "dup", "proc": w1, "rounds": [1, 2, 3]}]}},
+        {"name": "corrupt", "within_margin": True,
+         "chaos": {"seed": 2, "faults": [
+             {"op": "corrupt", "proc": w2, "rounds": [2, 3]}]}},
+        {"name": "drop", "within_margin": True,
+         "chaos": {"seed": 3, "faults": [
+             {"op": "drop", "proc": w2, "rounds": [2]}]}},
+        {"name": "delay", "within_margin": True,
+         "chaos": {"seed": 4, "faults": [
+             {"op": "delay", "proc": w1, "rounds": [1, 2], "arg": 0.2}]}},
+        {"name": "partition_rejoin", "within_margin": True,
+         "chaos": {"seed": 5, "faults": [
+             {"op": "delay", "proc": w1, "rounds": list(range(steps)), "arg": 0.25},
+             {"op": "partition", "proc": w2, "rounds": [2], "arg": 0.5}]}},
+    ]
 
 
 @functools.lru_cache(maxsize=1)

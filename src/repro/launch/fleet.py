@@ -1,18 +1,51 @@
-"""Multi-process protocol fleet: the first true multi-host realization.
+"""Self-healing multi-process protocol fleet.
 
 One OS process per (simulated) host.  The N logical devices are split into
 ``procs`` contiguous blocks; every process computes the eq.-(5) coded
 gradients of its block's devices each round and ships them to process 0 (the
-server) over a plain TCP socket.  The server gathers with a **round
-deadline**: blocks that arrive in time form the round's participation mask,
-blocks that miss it — a stalled worker — are erased for that round, and a
-*dead* worker (EOF / connection reset) is permanently erased.  The observed
-mask is then lowered through the exact same machinery as the simulated
-engine path: a ``ProtocolConfig`` with ``ParticipationSpec("external")`` and
-the mask-aware server from ``make_server_fn`` (``aggregator="decode"`` gives
-the cyclic K-of-N erasure decode).  A killed process **is** an erasure — the
-fault semantics of the real fleet and of ``core/engine.py``'s simulated
-schedules are one contract.
+server) over TCP.  The server gathers with a **round deadline**: blocks that
+arrive in time form the round's participation mask, blocks that miss it are
+erased for that round.  The observed mask is lowered through the exact same
+machinery as the simulated engine path: a ``ProtocolConfig`` with
+``ParticipationSpec("external")`` and the mask-aware server from
+``make_server_fn`` (``aggregator="decode"`` gives the cyclic K-of-N erasure
+decode).  A killed process **is** an erasure — the fault semantics of the
+real fleet and of ``core/engine.py``'s simulated schedules are one contract.
+
+The fleet is *self-healing* (the paper's threat model lets Byzantine devices
+send arbitrary messages, and real hosts crash):
+
+* **Byzantine-tolerant transport.**  Every message is a versioned frame —
+  magic + schema version + kind + CRC32 + declared length, with the array
+  payloads carrying an explicit dtype/shape header (no pickle anywhere, so
+  no payload can execute code).  Any malformed, corrupt, oversized,
+  truncated, wrong-shaped, wrong-round or wrong-worker frame raises
+  :class:`FrameError`, which the server converts into a *per-round erasure*
+  of that worker (the connection is dropped, the block's mask rows go to 0,
+  the fault is tallied in the ``wire`` stats) — never an exception.  The
+  server is unkillable by payload.  Stale replies from a straggled round and
+  duplicate replies are tolerated and counted, not punished.
+* **Worker rejoin.**  The listen socket stays live during training: a
+  crashed or partitioned worker reconnects with exponential backoff,
+  re-hellos, and resumes contributing from the current round — ``dead`` is
+  per-round state (the set of currently-disconnected workers), not a death
+  sentence.  A worker that faulted *this* round cannot un-erase it by
+  racing a rejoin.
+* **Adaptive deadlines.**  The per-round deadline is derived from observed
+  honest round latencies (median + k·MAD over a sliding window, floored by
+  ``--round-timeout``) so stalls are cut fast without starving
+  slow-but-honest hosts — see :func:`adaptive_deadline`.
+* **Checkpointed crash recovery.**  With ``--checkpoint PATH
+  --checkpoint-every K`` the server persists its full round state
+  ``(x, t, losses, mask history, wire stats)`` through
+  ``repro/checkpoint`` every K rounds (atomic tmp+rename writes);
+  ``--resume`` restarts a killed server mid-training and the resumed loss
+  trajectory bitwise-matches an uninterrupted run (everything else —
+  data, assignment — is derived from the shared seed).
+* **Deterministic chaos.**  ``--chaos`` wraps the worker's sends in
+  ``launch/chaos.py``'s seeded fault-injection schedule (drop / delay /
+  dup / corrupt / partition / kill per proc×round).  A no-fault schedule
+  is byte-identical to the plain fleet.
 
 Identity layer vs. data plane:
 
@@ -31,58 +64,255 @@ Run (one line per process, same flags except ``--proc-id``)::
     python -m repro.launch.fleet --procs 3 --proc-id 1 --n-devices 6 --d 3
     python -m repro.launch.fleet --procs 3 --proc-id 2 --n-devices 6 --d 3
 
-Process 0 prints ``RESULT::{json}`` with per-round losses, report counts and
-the dead-process set, then hard-exits (``os._exit``) so a torn-down
-coordinator heartbeat cannot hang a finished run.
+Process 0 prints ``RESULT::{json}`` with per-round losses, report counts,
+the currently-dead set, the wire-fault tallies and the rejoin count, then
+hard-exits (``os._exit``) so a torn-down coordinator heartbeat cannot hang
+a finished run.
 """
 from __future__ import annotations
 
 import argparse
+import collections
 import json
 import os
-import pickle
 import select
 import socket
+import statistics
 import struct
 import sys
 import time
+import zlib
 
-__all__ = ["main", "run_server", "run_worker", "build_parser"]
+import numpy as np
 
-_HDR = struct.Struct("!I")
+from repro.timing import wallclock
+
+__all__ = [
+    "main",
+    "run_server",
+    "run_worker",
+    "build_parser",
+    "FrameError",
+    "WIRE_KEYS",
+    "WIRE_VERSION",
+    "K_HELLO",
+    "K_ROUND",
+    "K_ROWS",
+    "K_DONE",
+    "encode_frame",
+    "decode_frame_bytes",
+    "recv_frame",
+    "pack_hello",
+    "unpack_hello",
+    "pack_round",
+    "unpack_round",
+    "pack_rows",
+    "unpack_rows",
+    "adaptive_deadline",
+]
+
+# --------------------------------------------------------------------------
+# framing: versioned, CRC-checked, shape-declared frames (no pickle — a
+# Byzantine peer controls every byte, so nothing on the wire may carry code)
+# --------------------------------------------------------------------------
+_MAGIC = b"RFLT"
+WIRE_VERSION = 1
+_FRAME = struct.Struct("!4sBBII")  # magic, version, kind, crc32(payload), len
 _MAX_MSG = 1 << 26  # 64 MiB: a block of coded vectors is far smaller
 
+K_HELLO, K_ROUND, K_ROWS, K_DONE = 1, 2, 3, 4
+_KINDS = (K_HELLO, K_ROUND, K_ROWS, K_DONE)
 
-# --------------------------------------------------------------------------
-# framing: length-prefixed pickle over a stream socket (trusted local fleet)
-# --------------------------------------------------------------------------
-def _send(sock: socket.socket, obj) -> None:
-    payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
-    sock.sendall(_HDR.pack(len(payload)) + payload)
+# every way a frame can be rejected; the server tallies these in RESULT
+WIRE_KEYS = (
+    "bad_magic",      # wrong 4-byte magic — not our protocol at all
+    "bad_version",    # schema version mismatch
+    "bad_kind",       # unknown frame kind, or a kind illegal in this state
+    "bad_crc",        # payload CRC32 mismatch (corruption in flight)
+    "oversize",       # declared length over _MAX_MSG (memory-exhaustion DoS)
+    "truncated",      # EOF or timeout mid-frame
+    "bad_payload",    # payload fails structural decode (dtype/ndim/length)
+    "wrong_shape",    # well-formed array of the wrong declared shape
+    "bad_hello",      # malformed hello, or proc id out of range
+    "pid_mismatch",   # rows claim a different worker than the connection's
+    "future_round",   # rows for a round the server has not started
+    "stale",          # rows for an already-finished round (tolerated)
+    "duplicate",      # second delivery for the same round (tolerated)
+)
+
+_U32 = struct.Struct("!I")
+_ROWS_HDR = struct.Struct("!II")  # round, proc
+_ARR = struct.Struct("!BB")       # dtype code, ndim
+_DIM = struct.Struct("!I")
+_DT_F32 = 0
+_DTYPES = {_DT_F32: "<f4"}
 
 
-def _recv_exact(sock: socket.socket, n: int) -> bytes | None:
+class FrameError(Exception):
+    """A rejected frame; ``reason`` is one of :data:`WIRE_KEYS`."""
+
+    def __init__(self, reason: str):
+        if reason not in WIRE_KEYS:
+            raise ValueError(f"unknown frame-error reason {reason!r}")
+        super().__init__(reason)
+        self.reason = reason
+
+
+def encode_frame(kind: int, payload: bytes = b"") -> bytes:
+    if kind not in _KINDS:
+        raise ValueError(f"unknown frame kind {kind}")
+    if len(payload) > _MAX_MSG:
+        raise ValueError(f"payload over _MAX_MSG: {len(payload)}")
+    return _FRAME.pack(_MAGIC, WIRE_VERSION, kind, zlib.crc32(payload), len(payload)) + payload
+
+
+def decode_frame_bytes(data: bytes) -> tuple[int, bytes]:
+    """Decode exactly one frame from a bytes buffer (tests / docs helper)."""
+    if len(data) < _FRAME.size:
+        raise FrameError("truncated")
+    magic, ver, kind, crc, ln = _FRAME.unpack_from(data, 0)
+    if magic != _MAGIC:
+        raise FrameError("bad_magic")
+    if ver != WIRE_VERSION:
+        raise FrameError("bad_version")
+    if kind not in _KINDS:
+        raise FrameError("bad_kind")
+    if ln > _MAX_MSG:
+        raise FrameError("oversize")
+    if len(data) < _FRAME.size + ln:
+        raise FrameError("truncated")
+    if len(data) > _FRAME.size + ln:
+        raise FrameError("bad_payload")
+    payload = data[_FRAME.size : _FRAME.size + ln]
+    if zlib.crc32(payload) != crc:
+        raise FrameError("bad_crc")
+    return kind, payload
+
+
+def _recv_exact(sock: socket.socket, n: int, *, start: bool) -> bytes | None:
+    """``n`` bytes, ``None`` on EOF at a frame boundary (``start=True``)."""
     buf = b""
     while len(buf) < n:
-        chunk = sock.recv(n - len(buf))
-        if not chunk:  # EOF: peer died
-            return None
+        try:
+            chunk = sock.recv(n - len(buf))
+        except socket.timeout:
+            raise FrameError("truncated") from None
+        if not chunk:
+            if start and not buf:
+                return None  # clean EOF between frames: the peer hung up
+            raise FrameError("truncated")
         buf += chunk
     return buf
 
 
-def _recv(sock: socket.socket):
-    """One framed message, or ``None`` on EOF (dead peer)."""
-    hdr = _recv_exact(sock, _HDR.size)
+def recv_frame(sock: socket.socket) -> tuple[int, bytes] | None:
+    """One validated frame, ``None`` on clean EOF, :class:`FrameError` else."""
+    hdr = _recv_exact(sock, _FRAME.size, start=True)
     if hdr is None:
         return None
-    (n,) = _HDR.unpack(hdr)
-    if n > _MAX_MSG:
-        raise ValueError(f"oversized fleet message: {n} bytes")
-    payload = _recv_exact(sock, n)
-    if payload is None:
-        return None
-    return pickle.loads(payload)
+    magic, ver, kind, crc, ln = _FRAME.unpack(hdr)
+    if magic != _MAGIC:
+        raise FrameError("bad_magic")
+    if ver != WIRE_VERSION:
+        raise FrameError("bad_version")
+    if kind not in _KINDS:
+        raise FrameError("bad_kind")
+    if ln > _MAX_MSG:
+        raise FrameError("oversize")
+    payload = _recv_exact(sock, ln, start=False) if ln else b""
+    if zlib.crc32(payload) != crc:
+        raise FrameError("bad_crc")
+    return kind, payload
+
+
+def _pack_array(a) -> bytes:
+    a = np.ascontiguousarray(np.asarray(a, dtype="<f4"))
+    parts = [_ARR.pack(_DT_F32, a.ndim)]
+    parts.extend(_DIM.pack(s) for s in a.shape)
+    parts.append(a.tobytes())
+    return b"".join(parts)
+
+
+def _unpack_array(buf: bytes, expect_shape=None) -> np.ndarray:
+    if len(buf) < _ARR.size:
+        raise FrameError("bad_payload")
+    code, ndim = _ARR.unpack_from(buf, 0)
+    if code not in _DTYPES or ndim > 4:
+        raise FrameError("bad_payload")
+    off = _ARR.size
+    shape = []
+    for _ in range(ndim):
+        if len(buf) < off + _DIM.size:
+            raise FrameError("bad_payload")
+        (s,) = _DIM.unpack_from(buf, off)
+        off += _DIM.size
+        shape.append(s)
+    count = 1
+    for s in shape:
+        count *= s
+    itemsize = np.dtype(_DTYPES[code]).itemsize
+    if count > _MAX_MSG // itemsize:
+        raise FrameError("oversize")
+    if len(buf) - off != count * itemsize:
+        raise FrameError("bad_payload")
+    if expect_shape is not None and tuple(shape) != tuple(expect_shape):
+        raise FrameError("wrong_shape")
+    return np.frombuffer(buf, dtype=_DTYPES[code], count=count, offset=off).reshape(shape)
+
+
+def pack_hello(proc: int) -> bytes:
+    return _U32.pack(proc)
+
+
+def unpack_hello(payload: bytes, procs: int) -> int:
+    if len(payload) != _U32.size:
+        raise FrameError("bad_hello")
+    (pid,) = _U32.unpack(payload)
+    if not (1 <= pid < procs):
+        raise FrameError("bad_hello")
+    return pid
+
+
+def pack_round(t: int, x) -> bytes:
+    return _U32.pack(t) + _pack_array(x)
+
+
+def unpack_round(payload: bytes, dim: int) -> tuple[int, np.ndarray]:
+    if len(payload) < _U32.size:
+        raise FrameError("bad_payload")
+    (t,) = _U32.unpack_from(payload, 0)
+    return t, _unpack_array(payload[_U32.size :], expect_shape=(dim,))
+
+
+def pack_rows(t: int, proc: int, rows) -> bytes:
+    return _ROWS_HDR.pack(t, proc) + _pack_array(rows)
+
+
+def unpack_rows(payload: bytes, expect_shape) -> tuple[int, int, np.ndarray]:
+    if len(payload) < _ROWS_HDR.size:
+        raise FrameError("bad_payload")
+    t, proc = _ROWS_HDR.unpack_from(payload, 0)
+    return t, proc, _unpack_array(payload[_ROWS_HDR.size :], expect_shape=expect_shape)
+
+
+# --------------------------------------------------------------------------
+# adaptive round deadline
+# --------------------------------------------------------------------------
+def adaptive_deadline(latencies, floor: float, k: float = 4.0, min_samples: int = 4) -> float:
+    """Round deadline from observed honest latencies: ``median + k·MAD``.
+
+    Floored by ``floor`` (``--round-timeout``) and by the floor alone until
+    ``min_samples`` observations exist.  Only *accepted* deliveries feed the
+    window, so a stalled worker cannot inflate the deadline it is measured
+    against — the straggler is cut at the floor while slow-but-honest hosts
+    (which do deliver, slowly) raise it.
+    """
+    lat = list(latencies)
+    if len(lat) < min_samples:
+        return float(floor)
+    med = statistics.median(lat)
+    mad = statistics.median(abs(v - med) for v in lat)
+    return max(float(floor), med + k * mad)
 
 
 # --------------------------------------------------------------------------
@@ -169,54 +399,151 @@ def _maybe_init_distributed(args) -> bool:
 
 
 # --------------------------------------------------------------------------
+# server checkpointing (crash recovery through repro/checkpoint)
+# --------------------------------------------------------------------------
+_CKPT_KEYS = ("x", "t", "losses", "n_report", "mask_hist", "wire", "rejoins", "lat")
+
+
+def save_server_checkpoint(path, *, x, step, losses, n_report, mask_hist,
+                           wire, rejoins, lat, n) -> None:
+    from repro.checkpoint import save_checkpoint
+
+    state = {
+        "x": np.asarray(x, np.float32),
+        # step also lives INSIDE the npz so a torn write (npz/json from
+        # different saves) is detectable at load time
+        "t": np.asarray(step, np.int64),
+        "losses": np.asarray(losses, np.float64),
+        "n_report": np.asarray(n_report, np.int32),
+        "mask_hist": np.asarray(mask_hist, np.int8).reshape(len(mask_hist), n),
+        "wire": np.asarray([wire[k] for k in WIRE_KEYS], np.int64),
+        "rejoins": np.asarray(rejoins, np.int64),
+        "lat": np.asarray(list(lat), np.float64),
+    }
+    save_checkpoint(path, state, step=step)
+
+
+def load_server_checkpoint(path):
+    """``(state, step)`` or ``(None, 0)`` if absent/torn (start fresh)."""
+    if not (os.path.exists(path + ".npz") and os.path.exists(path + ".json")):
+        return None, 0
+    from repro.checkpoint import load_checkpoint
+
+    state, step = load_checkpoint(path, {k: 0 for k in _CKPT_KEYS})
+    if int(state["t"]) != int(step):
+        print(f"fleet: checkpoint {path} is torn (npz round {int(state['t'])} "
+              f"!= sidecar step {step}); starting fresh", file=sys.stderr)
+        return None, 0
+    return state, int(step)
+
+
+# --------------------------------------------------------------------------
 # server (process 0)
 # --------------------------------------------------------------------------
 def run_server(args) -> dict:
     import jax.numpy as jnp
-    import numpy as np
 
+    from repro.core.participation import mask_stats
     from repro.data.synthetic import linreg_loss
 
     z, y, round_assignment, block, block_rows = _fleet_state(args)
     server = _server_decode_fn(args)
-    n, dim = args.n_devices, args.dim
+    n, dim, procs = args.n_devices, args.dim, args.procs
 
+    # --- state (possibly resumed) --------------------------------------
+    x = jnp.zeros((dim,), jnp.float32)
+    t0 = 0
+    resumed_from = 0
+    losses: list[float] = []
+    n_report: list[int] = []
+    mask_hist: list[list[int]] = []
+    wire = {k: 0 for k in WIRE_KEYS}
+    rejoins = 0
+    lat = collections.deque(maxlen=args.deadline_window)
+    if args.resume:
+        if not args.checkpoint:
+            raise SystemExit("--resume requires --checkpoint PATH")
+        state, step = load_server_checkpoint(args.checkpoint)
+        if state is not None:
+            x = jnp.asarray(np.asarray(state["x"], np.float32))
+            t0 = resumed_from = step
+            losses = [float(v) for v in state["losses"]]
+            n_report = [int(v) for v in state["n_report"]]
+            mask_hist = [[int(b) for b in row] for row in state["mask_hist"]]
+            wire = {k: int(v) for k, v in zip(WIRE_KEYS, state["wire"])}
+            rejoins = int(state["rejoins"])
+            lat.extend(float(v) for v in state["lat"])
+            print(f"fleet: resumed from {args.checkpoint} at round {t0}",
+                  file=sys.stderr)
+
+    # --- connections ----------------------------------------------------
     lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
     lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
     lsock.bind((args.host, args.port))
     lsock.listen(args.procs)
     conns: dict[int, socket.socket] = {}
-    deadline = time.monotonic() + args.init_timeout
-    while len(conns) < args.procs - 1:
-        if time.monotonic() > deadline:
+    sock2pid: dict[socket.socket, int] = {}  # O(1) reverse lookup (accept-time)
+
+    def register(conn) -> int | None:
+        """Hello handshake; on success the conn replaces any stale one."""
+        conn.settimeout(2.0)
+        try:
+            got = recv_frame(conn)
+            if got is None:
+                raise FrameError("truncated")
+            kind, payload = got
+            if kind != K_HELLO:
+                raise FrameError("bad_hello")
+            pid = unpack_hello(payload, procs)
+        except (FrameError, OSError) as exc:
+            reason = exc.reason if isinstance(exc, FrameError) else "truncated"
+            wire[reason] += 1
+            conn.close()
+            return None
+        conn.settimeout(None)
+        old = conns.pop(pid, None)
+        if old is not None:
+            sock2pid.pop(old, None)
+            try:
+                old.close()
+            except OSError:
+                pass
+        conns[pid] = conn
+        sock2pid[conn] = pid
+        return pid
+
+    def drop_conn(pid: int) -> None:
+        conn = conns.pop(pid, None)
+        if conn is not None:
+            sock2pid.pop(conn, None)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    init_deadline = wallclock() + args.init_timeout
+    while len(conns) < procs - 1:
+        if wallclock() > init_deadline:
             raise TimeoutError(
-                f"fleet server: only {len(conns)}/{args.procs - 1} workers "
+                f"fleet server: only {len(conns)}/{procs - 1} workers "
                 "connected before --init-timeout"
             )
-        lsock.settimeout(max(0.1, deadline - time.monotonic()))
+        lsock.settimeout(max(0.1, init_deadline - wallclock()))
         try:
             conn, _ = lsock.accept()
         except socket.timeout:
             continue
-        hello = _recv(conn)
-        if hello is None or "proc" not in hello:
-            conn.close()
-            continue
-        conns[int(hello["proc"])] = conn
+        register(conn)
+    lsock.settimeout(None)  # select() drives readiness from here on
 
-    x = jnp.zeros((dim,), jnp.float32)
-    dead: set[int] = set()
-    losses, n_report, mask_hist = [], [], []
-
-    for t in range(args.steps):
-        xb = np.asarray(x)
-        for pid, conn in list(conns.items()):
-            if pid in dead:
-                continue
+    # --- rounds ----------------------------------------------------------
+    for t in range(t0, args.steps):
+        round_frame = encode_frame(K_ROUND, pack_round(t, np.asarray(x)))
+        for pid in list(conns):
             try:
-                _send(conn, {"t": t, "x": xb, "done": False})
+                conns[pid].sendall(round_frame)
             except OSError:
-                dead.add(pid)
+                drop_conn(pid)
 
         # the server's own block always reports (it is the aggregation host)
         transmitted = np.zeros((n, dim), np.float32)
@@ -224,33 +551,90 @@ def run_server(args) -> dict:
         transmitted[:block] = np.asarray(block_rows(t, x, 0))
         mask[:block] = 1.0
 
-        pending = {pid for pid in conns if pid not in dead}
-        round_deadline = time.monotonic() + args.round_timeout
-        while pending:
-            remaining = round_deadline - time.monotonic()
+        delivered: set[int] = {0}
+        erased: set[int] = set()  # faulted THIS round: a rejoin can't undo it
+        start = wallclock()
+        deadline = start + adaptive_deadline(lat, args.round_timeout, k=args.deadline_k)
+
+        while True:
+            pending = [p for p in conns if p not in delivered and p not in erased]
+            # with every worker gone, idle at the deadline instead of racing
+            # through rounds faster than any rejoin could land
+            waiting_rejoin = not conns and len(delivered) < procs
+            if not pending and not waiting_rejoin:
+                break
+            remaining = deadline - wallclock()
             if remaining <= 0:
                 break  # stragglers are erased for this round
-            socks = [conns[pid] for pid in pending]
-            readable, _, _ = select.select(socks, [], [], remaining)
-            if not readable:
-                break
-            for conn in readable:
-                pid = next(p for p, c in conns.items() if c is conn)
-                conn.settimeout(max(0.1, round_deadline - time.monotonic()))
-                try:
-                    msg = _recv(conn)
-                except (socket.timeout, OSError):
-                    msg = None
-                if msg is None:  # EOF / reset: the worker is gone for good
-                    dead.add(pid)
-                    pending.discard(pid)
+            readable, _, _ = select.select([lsock, *sock2pid], [], [], remaining)
+            for s in readable:
+                if s is lsock:
+                    try:
+                        conn, _ = lsock.accept()
+                    except OSError:
+                        continue
+                    pid = register(conn)
+                    if pid is not None:
+                        rejoins += 1
+                        if pid not in erased:  # faulted rounds stay erased
+                            try:
+                                conns[pid].sendall(round_frame)
+                            except OSError:
+                                drop_conn(pid)
                     continue
-                if msg["t"] != t:
-                    continue  # stale reply from a straggled round: discard
+                pid = sock2pid.get(s)
+                if pid is None:
+                    continue  # replaced by a rejoin within this batch
+                s.settimeout(max(0.05, deadline - wallclock()))
+                try:
+                    got = recv_frame(s)
+                except FrameError as exc:
+                    wire[exc.reason] += 1
+                    erased.add(pid)
+                    drop_conn(pid)
+                    continue
+                except OSError:  # reset mid-read: gone, same as clean EOF
+                    drop_conn(pid)
+                    continue
+                if got is None:  # clean EOF: worker gone (until it rejoins)
+                    drop_conn(pid)
+                    continue
+                if conns.get(pid) is s:
+                    s.settimeout(None)
+                kind, payload = got
+                if kind != K_ROWS:
+                    wire["bad_kind"] += 1
+                    erased.add(pid)
+                    drop_conn(pid)
+                    continue
+                try:
+                    tm_, pid_claim, rows = unpack_rows(payload, expect_shape=(block, dim))
+                except FrameError as exc:
+                    wire[exc.reason] += 1
+                    erased.add(pid)
+                    drop_conn(pid)
+                    continue
+                if pid_claim != pid:
+                    wire["pid_mismatch"] += 1
+                    erased.add(pid)
+                    drop_conn(pid)
+                    continue
+                if tm_ < t:
+                    wire["stale"] += 1  # straggled round: discard, keep conn
+                    continue
+                if tm_ > t:
+                    wire["future_round"] += 1
+                    erased.add(pid)
+                    drop_conn(pid)
+                    continue
+                if pid in delivered:
+                    wire["duplicate"] += 1  # retransmit: discard, keep conn
+                    continue
                 lo = pid * block
-                transmitted[lo : lo + block] = msg["rows"]
+                transmitted[lo : lo + block] = rows
                 mask[lo : lo + block] = 1.0
-                pending.discard(pid)
+                delivered.add(pid)
+                lat.append(wallclock() - start)
 
         ta = round_assignment(t)
         pm = jnp.asarray(mask)
@@ -262,20 +646,35 @@ def run_server(args) -> dict:
         n_report.append(int(mask.sum()))
         mask_hist.append(mask.astype(int).tolist())
 
-    for pid, conn in conns.items():
-        if pid not in dead:
-            try:
-                _send(conn, {"done": True})
-            except OSError:
-                pass
-        conn.close()
+        if args.checkpoint and args.checkpoint_every > 0 and (t + 1) % args.checkpoint_every == 0:
+            save_server_checkpoint(
+                args.checkpoint, x=x, step=t + 1, losses=losses, n_report=n_report,
+                mask_hist=mask_hist, wire=wire, rejoins=rejoins, lat=lat, n=n,
+            )
+        if 0 <= args.server_crash_after_round <= t:
+            # test hook: die AFTER the round completed (post-checkpoint when
+            # due) — the crash-recovery conformance tests resume from here
+            os._exit(23)
+
+    dead = sorted(set(range(1, procs)) - set(conns))  # before teardown
+    done_frame = encode_frame(K_DONE)
+    for pid in list(conns):
+        try:
+            conns[pid].sendall(done_frame)
+        except OSError:
+            pass
+        drop_conn(pid)
     lsock.close()
     return {
         "losses": losses,
         "n_report": n_report,
         "mask_hist": mask_hist,
-        "dead": sorted(dead),
+        "dead": dead,
         "final_loss": losses[-1],
+        "wire": wire,
+        "rejoins": rejoins,
+        "resumed_from": resumed_from,
+        "stats": mask_stats(mask_hist, args.d),
     }
 
 
@@ -284,43 +683,102 @@ def run_server(args) -> dict:
 # --------------------------------------------------------------------------
 def run_worker(args) -> dict:
     import jax.numpy as jnp
-    import numpy as np
+
+    from repro.launch.chaos import ChaosTransport
 
     _, _, _, _, block_rows = _fleet_state(args)
+    chaos = ChaosTransport(args.chaos, args.proc_id) if args.chaos else None
+    stall_s = args.stall_seconds if args.stall_seconds > 0 else args.round_timeout * 4.0
+    hello = encode_frame(K_HELLO, pack_hello(args.proc_id))
 
-    sock = None
-    deadline = time.monotonic() + args.init_timeout
-    while sock is None:
-        try:
-            sock = socket.create_connection((args.host, args.port), timeout=2.0)
-        except OSError:
-            if time.monotonic() > deadline:
-                raise
-            time.sleep(0.1)
-    sock.settimeout(None)
-    _send(sock, {"proc": args.proc_id})
-
+    sock: socket.socket | None = None
+    ever_connected = False
+    give_up = wallclock() + args.init_timeout
+    backoff = 0.05
     rounds = 0
-    while True:
-        msg = _recv(sock)
-        if msg is None or msg.get("done"):
+    rejoins = 0
+    done = False
+
+    def lost() -> None:
+        nonlocal sock, give_up
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+        sock = None
+        give_up = wallclock() + args.rejoin_timeout
+
+    while not done:
+        if sock is None:
+            if wallclock() > give_up:
+                if ever_connected:
+                    break  # the server is gone for good: exit quietly
+                raise TimeoutError(
+                    "fleet worker: server never accepted before --init-timeout"
+                )
+            try:
+                sock = socket.create_connection((args.host, args.port), timeout=2.0)
+                sock.settimeout(None)
+                sock.sendall(hello)
+            except OSError:
+                if sock is not None:
+                    sock.close()
+                    sock = None
+                time.sleep(backoff)
+                backoff = min(backoff * 2.0, 2.0)  # exponential, capped
+                continue
+            if ever_connected:
+                rejoins += 1
+            ever_connected = True
+            backoff = 0.05
+        try:
+            got = recv_frame(sock)
+        except (FrameError, OSError):
+            got = None  # garbled stream or reset: resync by reconnecting
+        if got is None:
+            lost()
+            continue
+        kind, payload = got
+        if kind == K_DONE:
+            done = True
             break
-        t = int(msg["t"])
+        if kind != K_ROUND:
+            lost()
+            continue
+        try:
+            t, xb = unpack_round(payload, args.dim)
+        except FrameError:
+            lost()
+            continue
         if 0 <= args.die_after_round <= t:
             # simulate a crashed host mid-round: vanish without replying
             sock.close()
             os._exit(17)
         if 0 <= args.stall_after_round <= t:
-            time.sleep(args.round_timeout * 4.0)  # straggle past the deadline
-        x = jnp.asarray(np.asarray(msg["x"]))
-        rows = np.asarray(block_rows(t, x, args.proc_id))
-        try:
-            _send(sock, {"t": t, "proc": args.proc_id, "rows": rows})
-        except OSError:
-            break
+            time.sleep(stall_s)  # straggle past the deadline
+        rows = np.asarray(block_rows(t, jnp.asarray(xb), args.proc_id))
+        frame = encode_frame(K_ROWS, pack_rows(t, args.proc_id, rows))
+        if chaos is None:
+            try:
+                sock.sendall(frame)
+            except OSError:
+                lost()
+                continue
+        else:
+            status, arg = chaos.send(sock, frame, t)
+            if status == "partition":
+                lost()
+                time.sleep(arg)  # dark for the partition window, then rejoin
+                give_up = wallclock() + args.rejoin_timeout
+                continue
+            if status == "error":
+                lost()
+                continue
         rounds += 1
-    sock.close()
-    return {"proc": args.proc_id, "rounds": rounds}
+    if sock is not None:
+        sock.close()
+    return {"proc": args.proc_id, "rounds": rounds, "rejoins": rejoins}
 
 
 # --------------------------------------------------------------------------
@@ -346,12 +804,30 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--aggregator", default="decode",
                    help="masked server rule (decode = cyclic K-of-N erasure decode)")
     p.add_argument("--round-timeout", type=float, default=10.0,
-                   help="seconds the server waits per round before erasing")
+                   help="floor of the adaptive per-round deadline")
+    p.add_argument("--deadline-k", type=float, default=4.0,
+                   help="adaptive deadline spread multiplier (median + k*MAD)")
+    p.add_argument("--deadline-window", type=int, default=32,
+                   help="sliding window of honest latencies the deadline sees")
     p.add_argument("--init-timeout", type=float, default=60.0)
+    p.add_argument("--rejoin-timeout", type=float, default=30.0,
+                   help="how long a disconnected worker keeps retrying")
+    p.add_argument("--checkpoint", default="",
+                   help="server state checkpoint path prefix (empty = off)")
+    p.add_argument("--checkpoint-every", type=int, default=0,
+                   help="persist server state every K rounds (0 = off)")
+    p.add_argument("--resume", action="store_true",
+                   help="resume the server from --checkpoint if present")
+    p.add_argument("--chaos", default="",
+                   help="fault-injection schedule (JSON or path; launch/chaos.py)")
     p.add_argument("--die-after-round", type=int, default=-1,
                    help="test hook: worker hard-exits when it sees this round")
     p.add_argument("--stall-after-round", type=int, default=-1,
                    help="test hook: worker sleeps past the deadline from this round")
+    p.add_argument("--stall-seconds", type=float, default=-1.0,
+                   help="injected stall length (default: 4x --round-timeout)")
+    p.add_argument("--server-crash-after-round", type=int, default=-1,
+                   help="test hook: server hard-exits after finishing this round")
     return p
 
 

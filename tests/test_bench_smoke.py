@@ -162,6 +162,54 @@ def test_validate_participation_json_rejects_drift():
             bench_smoke.validate_participation_json(bad)
 
 
+def test_fleet_chaos_committed_baseline():
+    """The committed BENCH_fleet_chaos.json still records the self-healing
+    claims: every server exited 0, the empty schedule was byte-identical,
+    within-margin faults stayed inside the erasure-decode envelope.  (The
+    subprocess fan-out that *regenerates* it is the CI fleet-chaos job.)"""
+    payload = bench_smoke.smoke_fleet_chaos()
+    assert payload["healthy_identical"] is True
+    names = {r["name"] for r in payload["rows"]}
+    assert {"healthy", "corrupt", "partition_rejoin"} <= names
+
+
+def _fleet_chaos_base():
+    from repro.launch.fleet import WIRE_KEYS
+
+    def row(name, **kw):
+        r = {"name": name, "final_loss": 1.0, "rel_dev": 0.0, "server_rc": 0,
+             "dead": [], "rejoins": 0, "wire": {k: 0 for k in WIRE_KEYS},
+             "n_report_min": 4, "within_margin": True}
+        r.update(kw)
+        return r
+
+    return {
+        "schema_version": 1, "procs": 3, "n_devices": 6, "d": 3, "margin": 2,
+        "dim": 8, "steps": 8, "round_timeout": 2.5,
+        "baseline_final_loss": 1.0, "healthy_identical": True,
+        "rows": [row("healthy"), row("corrupt", rejoins=2),
+                 row("partition_rejoin", rejoins=1)],
+    }
+
+
+def test_validate_fleet_chaos_json_rejects_drift():
+    bench_smoke.validate_fleet_chaos_json(_fleet_chaos_base())
+    base = _fleet_chaos_base()
+    for breakage in (
+        {"schema_version": 999},
+        {"healthy_identical": False},  # pass-through claim violated
+        {"margin": 1},  # margin must equal d - 1
+        {"rows": []},
+        {"rows": base["rows"][:2]},  # partition_rejoin case went missing
+        {"rows": [dict(r, server_rc=1) for r in base["rows"]]},  # a crash
+        {"rows": [dict(r, rel_dev=0.5) for r in base["rows"]]},  # envelope
+        {"rows": [dict(r, wire={}) for r in base["rows"]]},  # wire keys
+    ):
+        bad = {**_fleet_chaos_base(), **breakage}
+        with pytest.raises(AssertionError):
+            bench_smoke.validate_fleet_chaos_json(bad)
+
+
 def _scaling_row(devices, warm_s=1.0, lanes_per_s=64.0, speedup=1.0):
     return {
         "devices": devices, "platform": "cpu", "lanes": 64, "steps": 6,

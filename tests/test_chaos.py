@@ -1,0 +1,286 @@
+"""Byzantine-tolerant transport + deterministic chaos harness conformance.
+
+Fast tier (tier-1): the frame codec rejects every corruption class with the
+right :data:`WIRE_KEYS` reason, the chaos layer is deterministic and a
+byte-exact pass-through when empty, and the adaptive deadline respects its
+floor.  These are pure host-side units — no subprocess, no engine.
+
+Slow tier (``--runslow``, run every push by the CI fleet-chaos job): real
+3-process fleets under seeded fault schedules — corrupt frames become
+per-round erasures and the worker rejoins; an all-healthy chaos fleet is
+byte-identical to the plain fleet; a partitioned worker heals.  Ports are
+unique per scenario (no reuse with test_fleet.py: 5746x there, 5748x here).
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.launch import chaos as C
+from repro.launch import fleet as F
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# fast tier: frame codec
+# --------------------------------------------------------------------------
+def _good_rows_frame():
+    return F.encode_frame(F.K_ROWS, F.pack_rows(0, 1, np.zeros((2, 8), np.float32)))
+
+
+def _reason(data):
+    try:
+        F.decode_frame_bytes(data)
+    except F.FrameError as exc:
+        return exc.reason
+    return None
+
+
+def test_frame_roundtrip_all_kinds():
+    x = np.arange(8, dtype=np.float32)
+    rows = np.full((2, 8), 2.5, np.float32)
+    for kind, payload in [
+        (F.K_HELLO, F.pack_hello(2)),
+        (F.K_ROUND, F.pack_round(3, x)),
+        (F.K_ROWS, F.pack_rows(5, 1, rows)),
+        (F.K_DONE, b""),
+    ]:
+        k, p = F.decode_frame_bytes(F.encode_frame(kind, payload))
+        assert (k, p) == (kind, payload)
+    t, x2 = F.unpack_round(F.pack_round(3, x), 8)
+    assert t == 3 and np.array_equal(x2, x)
+    t, pid, r2 = F.unpack_rows(F.pack_rows(5, 1, rows), (2, 8))
+    assert (t, pid) == (5, 1) and np.array_equal(r2, rows)
+
+
+def test_every_corruption_class_has_a_reason():
+    good = _good_rows_frame()
+    assert _reason(good) is None
+    assert _reason(b"XXXX" + good[4:]) == "bad_magic"
+    assert _reason(good[:4] + bytes([99]) + good[5:]) == "bad_version"
+    assert _reason(good[:5] + bytes([77]) + good[6:]) == "bad_kind"
+    assert _reason(good[:-1]) == "truncated"      # EOF mid-payload
+    assert _reason(good[:10]) == "truncated"      # EOF mid-header
+    flipped = bytearray(good)
+    flipped[-1] ^= 0xFF
+    assert _reason(bytes(flipped)) == "bad_crc"
+    import struct
+
+    huge = struct.pack("!4sBBII", b"RFLT", F.WIRE_VERSION, F.K_ROWS, 0, 1 << 30)
+    assert _reason(huge) == "oversize"
+    # every reason the codec can emit is a tallied wire key
+    for r in ("bad_magic", "bad_version", "bad_kind", "bad_crc", "oversize",
+              "truncated", "bad_payload", "wrong_shape", "bad_hello"):
+        assert r in F.WIRE_KEYS
+
+
+def test_array_payload_validation():
+    _, payload = F.decode_frame_bytes(_good_rows_frame())
+    with pytest.raises(F.FrameError) as e:
+        F.unpack_rows(payload, (3, 8))  # well-formed, wrong declared shape
+    assert e.value.reason == "wrong_shape"
+    with pytest.raises(F.FrameError) as e:
+        F.unpack_rows(payload[: F._ROWS_HDR.size + 1], (2, 8))
+    assert e.value.reason == "bad_payload"
+    with pytest.raises(F.FrameError) as e:
+        F.unpack_hello(F.pack_hello(7), procs=3)  # proc id out of range
+    assert e.value.reason == "bad_hello"
+    with pytest.raises(F.FrameError) as e:
+        F.unpack_hello(b"xx", procs=3)
+    assert e.value.reason == "bad_hello"
+
+
+# --------------------------------------------------------------------------
+# fast tier: chaos layer
+# --------------------------------------------------------------------------
+def test_parse_chaos_dict_json_and_validation(tmp_path):
+    spec = {"seed": 7, "faults": [{"op": "corrupt", "proc": 2, "rounds": [2, 3]}]}
+    parsed = C.parse_chaos(spec)
+    assert parsed == C.parse_chaos(json.dumps(spec))
+    path = tmp_path / "chaos.json"
+    path.write_text(json.dumps(spec))
+    assert parsed == C.parse_chaos(str(path))
+    assert parsed.ops_for(2, 2).keys() == {"corrupt"}
+    assert parsed.ops_for(2, 4) == {} and parsed.ops_for(1, 2) == {}
+    # round-trip through the spec's own serialization
+    assert C.parse_chaos(parsed.to_json()) == parsed
+
+    for bad in (
+        {"seed": 0, "faults": [{"op": "explode", "proc": 1, "rounds": [0]}]},
+        {"seed": 0, "faults": [{"op": "drop", "proc": 0, "rounds": [0]}]},
+        {"seed": 0, "faults": [{"op": "drop", "proc": 1, "rounds": []}]},
+        {"seed": 0, "faults": [{"op": "drop", "proc": 1, "rounds": [0], "x": 1}]},
+        {"seed": 0, "unknown_key": 1},
+    ):
+        with pytest.raises(ValueError):
+            C.parse_chaos(bad)
+
+
+def test_corrupt_bytes_is_seeded_and_rejected():
+    good = _good_rows_frame()
+    c1 = C.corrupt_bytes(good, C.fault_rng(2, 2, 2, "corrupt"))
+    c2 = C.corrupt_bytes(good, C.fault_rng(2, 2, 2, "corrupt"))
+    c3 = C.corrupt_bytes(good, C.fault_rng(2, 2, 3, "corrupt"))
+    assert c1 == c2, "same (seed, proc, round, op) must corrupt identically"
+    assert c1 != good and c3 != c1
+    # whatever field the flips land on, the codec must reject the frame
+    for t in range(8):
+        cb = C.corrupt_bytes(good, C.fault_rng(2, 2, t, "corrupt"))
+        assert _reason(cb) is not None, t
+
+
+class _FakeSock:
+    def __init__(self):
+        self.sent = b""
+
+    def sendall(self, data):
+        self.sent += data
+
+
+def test_chaos_transport_empty_schedule_is_byte_exact_passthrough():
+    frame = _good_rows_frame()
+    sock = _FakeSock()
+    tr = C.ChaosTransport({"seed": 0, "faults": []}, proc=1)
+    for t in range(4):
+        assert tr.send(sock, frame, t) == ("sent", 0.0)
+    assert sock.sent == frame * 4
+    assert all(v == 0 for v in tr.events.values())
+
+
+def test_chaos_transport_ops():
+    frame = _good_rows_frame()
+    sock = _FakeSock()
+    tr = C.ChaosTransport(
+        {"seed": 1, "faults": [{"op": "dup", "proc": 1, "rounds": [0]},
+                               {"op": "drop", "proc": 1, "rounds": [1]},
+                               {"op": "partition", "proc": 1, "rounds": [2],
+                                "arg": 0.25},
+                               {"op": "corrupt", "proc": 1, "rounds": [3]}]},
+        proc=1,
+    )
+    assert tr.send(sock, frame, 0) == ("sent", 0.0)
+    assert sock.sent == frame * 2  # dup
+    assert tr.send(sock, frame, 1) == ("dropped", 0.0)
+    assert sock.sent == frame * 2  # drop: nothing new on the wire
+    assert tr.send(sock, frame, 2) == ("partition", 0.25)
+    assert sock.sent == frame * 2  # partition: nothing sent
+    assert tr.send(sock, frame, 3) == ("sent", 0.0)
+    corrupted = sock.sent[len(frame) * 2 :]
+    assert corrupted != frame and _reason(corrupted) is not None
+    assert tr.events["dup"] == 1 and tr.events["corrupt"] == 1
+    # a different proc sees none of it
+    other = _FakeSock()
+    tr2 = C.ChaosTransport(tr.spec, proc=2)
+    assert tr2.send(other, frame, 0) == ("sent", 0.0)
+    assert other.sent == frame
+
+
+def test_adaptive_deadline_floor_and_spread():
+    # too few samples, or a fast-honest fleet: the floor rules
+    assert F.adaptive_deadline([], 2.0) == 2.0
+    assert F.adaptive_deadline([0.1, 0.1], 2.0) == 2.0
+    assert F.adaptive_deadline([0.01] * 16, 2.0) == 2.0
+    # slow-but-honest hosts raise the deadline above the floor
+    slow = [5.0, 5.2, 4.8, 5.1, 5.0]
+    dl = F.adaptive_deadline(slow, 2.0, k=4.0)
+    assert dl >= 5.0
+    # ...by median + k*MAD, not by max (one outlier cannot run away with it)
+    assert dl < 5.0 + 4.0 * 1.0
+
+
+def test_mask_stats_counts_margin():
+    from repro.core.participation import mask_stats
+
+    hist = [[1, 1, 1, 1, 1, 1], [1, 1, 1, 1, 0, 0], [1, 0, 0, 0, 1, 1]]
+    st = mask_stats(hist, d=3)
+    assert st == {"rounds": 3, "margin": 2, "max_erasures": 3,
+                  "within_margin_rounds": 2, "full_rounds": 1}
+    assert mask_stats([], d=4) == {"rounds": 0, "margin": 3, "max_erasures": 0,
+                                   "within_margin_rounds": 0, "full_rounds": 0}
+
+
+# --------------------------------------------------------------------------
+# slow tier: real 3-process fleets under seeded schedules
+# --------------------------------------------------------------------------
+def _run_fleet(port, extra_by_proc, steps=8, round_timeout=3.0):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    base = [
+        sys.executable, "-m", "repro.launch.fleet",
+        "--procs", "3", "--n-devices", "6", "--d", "3", "--dim", "8",
+        "--steps", str(steps), "--lr", "1e-5", "--seed", "0",
+        "--round-timeout", str(round_timeout),
+        "--port", str(port), "--no-distributed",
+    ]
+    procs = [
+        subprocess.Popen(
+            base + ["--proc-id", str(pid)] + extra_by_proc.get(pid, []),
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        )
+        for pid in range(3)
+    ]
+    outs = [p.communicate(timeout=600) for p in procs]
+    server_out, server_err = outs[0]
+    assert procs[0].returncode == 0, server_err[-4000:]
+    lines = [l for l in server_out.splitlines() if l.startswith("RESULT::")]
+    assert lines, (server_out, server_err[-2000:])
+    return json.loads(lines[0][len("RESULT::"):]), lines[0], procs, outs
+
+
+@pytest.mark.slow
+def test_corrupt_frames_become_per_round_erasures_then_rejoin():
+    """Worker 2 ships corrupted frames on rounds 2-3: each is rejected at
+    the transport (CRC/shape/kind validation), the block is erased for that
+    round only, the connection is cut, and the worker's reconnect loop
+    brings it back — rounds 4+ are full again and nobody is dead."""
+    chaos = json.dumps({"seed": 2, "faults": [
+        {"op": "corrupt", "proc": 2, "rounds": [2, 3]}]})
+    res, _, _, _ = _run_fleet(
+        57481, {2: ["--chaos", chaos, "--rejoin-timeout", "30"]}
+    )
+    for t in (2, 3):
+        assert res["mask_hist"][t] == [1, 1, 1, 1, 0, 0], (t, res["mask_hist"])
+    assert res["mask_hist"][-1] == [1, 1, 1, 1, 1, 1], res["mask_hist"]
+    assert res["dead"] == [] and res["rejoins"] >= 1
+    assert sum(res["wire"].values()) >= 2  # both bad frames were tallied
+    assert res["stats"]["max_erasures"] <= res["stats"]["margin"]
+    assert res["losses"][-1] < res["losses"][0]
+
+
+@pytest.mark.slow
+def test_healthy_chaos_schedule_is_byte_identical_to_plain_fleet():
+    """The chaos layer with an empty schedule must be invisible: the
+    server's entire RESULT line — losses, masks, wire tallies, stats —
+    is byte-identical to a fleet run with no --chaos flag at all."""
+    empty = json.dumps({"seed": 0, "faults": []})
+    _, plain_line, _, _ = _run_fleet(57483, {})
+    _, chaos_line, _, _ = _run_fleet(
+        57485, {1: ["--chaos", empty], 2: ["--chaos", empty]}
+    )
+    assert chaos_line == plain_line
+
+
+@pytest.mark.slow
+def test_partition_then_rejoin_heals_within_margin():
+    """Worker 2 is partitioned for 0.5 s at round 2 (worker 1 carries a
+    0.25 s/round honest delay so the round cadence outlives the partition):
+    the partitioned rounds are erasures within the margin, the rejoin lands
+    while training is live, and the final rounds are full again."""
+    delay = {"op": "delay", "proc": 1, "rounds": list(range(8)), "arg": 0.25}
+    part = {"op": "partition", "proc": 2, "rounds": [2], "arg": 0.5}
+    c1 = json.dumps({"seed": 5, "faults": [delay]})
+    c2 = json.dumps({"seed": 5, "faults": [delay, part]})
+    res, _, _, _ = _run_fleet(
+        57487,
+        {1: ["--chaos", c1, "--rejoin-timeout", "30"],
+         2: ["--chaos", c2, "--rejoin-timeout", "30"]},
+    )
+    assert res["mask_hist"][2][4:] == [0, 0], res["mask_hist"]
+    assert res["mask_hist"][-1] == [1, 1, 1, 1, 1, 1], res["mask_hist"]
+    assert res["dead"] == [] and res["rejoins"] >= 1
+    assert res["stats"]["max_erasures"] <= res["stats"]["margin"]
+    assert res["stats"]["within_margin_rounds"] == res["stats"]["rounds"]

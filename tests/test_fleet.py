@@ -23,19 +23,32 @@ pytestmark = pytest.mark.slow
 
 _PORT_KILL = (57461, 57460)  # (gather, coordinator) per scenario: no reuse
 _PORT_STALL = (57463, 57462)
+_PORT_REF = (57465, None)  # None coordinator = --no-distributed (host-only)
+_PORT_RESUME_A = (57467, None)
+_PORT_RESUME_B = (57469, None)
+_PORT_CRASH = (57471, None)
 
 
-def _run_fleet(ports, extra_by_proc, steps=8, round_timeout=15.0):
+def _fleet_cmd(ports, steps, round_timeout):
     gather, coord = ports
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     base = [
         sys.executable, "-m", "repro.launch.fleet",
         "--procs", "3", "--n-devices", "6", "--d", "3", "--dim", "8",
         "--steps", str(steps), "--lr", "1e-5", "--seed", "0",
         "--round-timeout", str(round_timeout),
-        "--port", str(gather), "--coordinator", f"127.0.0.1:{coord}",
+        "--port", str(gather),
     ]
+    if coord is None:
+        base += ["--no-distributed"]
+    else:
+        base += ["--coordinator", f"127.0.0.1:{coord}"]
+    return base
+
+
+def _run_fleet(ports, extra_by_proc, steps=8, round_timeout=15.0):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    base = _fleet_cmd(ports, steps, round_timeout)
     procs = [
         subprocess.Popen(
             base + ["--proc-id", str(pid)] + extra_by_proc.get(pid, []),
@@ -81,9 +94,14 @@ def test_server_converges_through_the_kill(killed_worker):
 
 def test_stalled_worker_is_per_round_erasure():
     """A stalling (not dead) worker misses every deadline from round 2 on:
-    erased each round but never marked dead — the straggler regime."""
+    erased each round but never marked dead — the straggler regime.  The
+    stall length is the real ``--stall-seconds`` flag (6 s > every remaining
+    2 s deadline), and the short ``--rejoin-timeout`` proves a stalled-then-
+    expired worker exits quietly instead of hanging the harness."""
     res, procs, outs = _run_fleet(
-        _PORT_STALL, {1: ["--stall-after-round", "2"]},
+        _PORT_STALL,
+        {1: ["--stall-after-round", "2", "--stall-seconds", "6.0",
+             "--rejoin-timeout", "3.0"]},
         steps=4, round_timeout=2.0,
     )
     assert res["dead"] == []
@@ -91,3 +109,78 @@ def test_stalled_worker_is_per_round_erasure():
     for mask in res["mask_hist"][2:]:
         assert mask == [1, 1, 0, 0, 1, 1]
     assert res["losses"][-1] < res["losses"][0]
+
+
+@pytest.fixture(scope="module")
+def uninterrupted_reference():
+    """Plain 8-step fleet (host-only transport): the trajectory every
+    resume scenario must reproduce exactly."""
+    res, _, _ = _run_fleet(_PORT_REF, {})
+    assert res["dead"] == [] and res["n_report"] == [6] * 8
+    return res
+
+
+def test_resume_from_checkpoint_matches_uninterrupted(
+    uninterrupted_reference, tmp_path
+):
+    """Leg 1 trains 4 of 8 rounds and checkpoints every 2; leg 2 relaunches
+    with ``--resume`` and finishes.  The stitched trajectory is bitwise the
+    uninterrupted run's: server state (x, t, losses, masks, wire, latency
+    window) round-trips through the checkpoint, and the round keys are
+    derived from (seed, t) alone."""
+    ck = str(tmp_path / "fleet_ck")
+    res_a, _, _ = _run_fleet(
+        _PORT_RESUME_A,
+        {0: ["--checkpoint", ck, "--checkpoint-every", "2"]},
+        steps=4,
+    )
+    assert res_a["n_report"] == [6] * 4
+    res_b, _, _ = _run_fleet(
+        _PORT_RESUME_B,
+        {0: ["--checkpoint", ck, "--resume"]},
+        steps=8,
+    )
+    ref = uninterrupted_reference
+    assert res_b["resumed_from"] == 4
+    assert res_b["losses"] == ref["losses"]
+    assert res_b["n_report"] == ref["n_report"]
+    assert res_b["mask_hist"] == ref["mask_hist"]
+    assert res_b["final_loss"] == ref["final_loss"]
+
+
+def test_server_crash_recovery_mid_training(uninterrupted_reference, tmp_path):
+    """The server hard-exits after round 3 (checkpoint landed at step 4);
+    a replacement server ``--resume``s on the same port while the original
+    workers ride their reconnect backoff.  Final trajectory == reference."""
+    ck = str(tmp_path / "crash_ck")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    base = _fleet_cmd(_PORT_CRASH, steps=8, round_timeout=15.0)
+
+    def popen(argv):
+        return subprocess.Popen(argv, env=env, stdout=subprocess.PIPE,
+                                stderr=subprocess.PIPE, text=True)
+
+    server1 = popen(base + ["--proc-id", "0", "--checkpoint", ck,
+                            "--checkpoint-every", "2",
+                            "--server-crash-after-round", "3"])
+    workers = [popen(base + ["--proc-id", str(pid), "--rejoin-timeout", "60"])
+               for pid in (1, 2)]
+    out1 = server1.communicate(timeout=600)
+    assert server1.returncode == 23, out1[1][-2000:]  # the crash hook fired
+
+    server2 = popen(base + ["--proc-id", "0", "--checkpoint", ck, "--resume"])
+    out2 = server2.communicate(timeout=600)
+    worker_outs = [w.communicate(timeout=600) for w in workers]
+    assert server2.returncode == 0, out2[1][-4000:]
+    assert [w.returncode for w in workers] == [0, 0], [
+        o[1][-1500:] for o in worker_outs
+    ]
+    lines = [l for l in out2[0].splitlines() if l.startswith("RESULT::")]
+    assert lines, (out2[0], out2[1][-2000:])
+    res = json.loads(lines[0][len("RESULT::"):])
+    ref = uninterrupted_reference
+    assert res["resumed_from"] == 4
+    assert res["losses"] == ref["losses"]
+    assert res["final_loss"] == ref["final_loss"]
+    assert res["dead"] == []
