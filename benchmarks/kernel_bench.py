@@ -144,12 +144,8 @@ def compression_bench(q: int = 1 << 20, iters: int = 10):
     key = jax.random.PRNGKey(2)
     g = jax.random.normal(key, (q,))
     rows = []
-    for spec in [
-        CompressionSpec("rand_sparse", q_hat_frac=0.3),
-        CompressionSpec("rand_sparse_shared", q_hat_frac=0.3),
-        CompressionSpec("quant", levels=16, chunk=1024),
-        CompressionSpec("top_k", q_hat_frac=0.3),
-    ]:
+    for text in ["randk:0.3", "randk_shared:0.3", "quant:16", "topk:0.3"]:
+        spec = CompressionSpec.parse(text)
         c = jax.jit(spec.make(g.shape[0]))
         us = _time(lambda k: c(k, g), key, iters=iters)
         from repro.core.compression import wire_bits

@@ -18,11 +18,9 @@ def main():
     problem = linear_regression_problem(jax.random.PRNGKey(0), n=100, dim=100, sigma_h=0.3)
 
     print("wire bytes per message:")
-    dense_bits = wire_bits(CompressionSpec("none"), 100)
-    for spec in [CompressionSpec("none"),
-                 CompressionSpec("rand_sparse", q_hat_frac=0.3),
-                 CompressionSpec("rand_sparse_shared", q_hat_frac=0.3),
-                 CompressionSpec("quant", levels=16, chunk=100)]:
+    dense_bits = wire_bits(CompressionSpec.parse("identity"), 100)
+    for text in ["identity", "randk:0.3", "randk_shared:0.3", "quant:16:100"]:
+        spec = CompressionSpec.parse(text)
         bits = wire_bits(spec, 100)
         print(f"  {spec.name:20s} {bits / 8:7.0f} B  ({bits / dense_bits:.0%} of dense)")
 

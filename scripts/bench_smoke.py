@@ -310,11 +310,26 @@ def smoke_scaling() -> dict:
     return payload
 
 
+def _validate_wire(wire: dict) -> None:
+    """Assert the v2 nested wire schema: faults per WIRE_KEYS + per-kind
+    [frames, bytes] sent/recv tallies."""
+    from repro.launch.fleet import KIND_NAMES, WIRE_KEYS
+
+    assert isinstance(wire, dict) and set(wire) == {"faults", "sent", "recv"}, wire
+    assert set(wire["faults"]) == set(WIRE_KEYS), sorted(wire["faults"])
+    assert all(isinstance(v, int) and v >= 0 for v in wire["faults"].values()), wire
+    for d in (wire["sent"], wire["recv"]):
+        assert set(d) == set(KIND_NAMES.values()), sorted(d)
+        for frames, nbytes in d.values():
+            assert isinstance(frames, int) and frames >= 0, d
+            assert isinstance(nbytes, int) and nbytes >= 0, d
+            assert (frames == 0) == (nbytes == 0), d
+
+
 def validate_fleet_chaos_json(payload: dict) -> None:
     """Assert the BENCH_fleet_chaos.json schema AND the self-healing claims
     it records (see fleet_bench.FLEET_CHAOS_SCHEMA_VERSION)."""
     from benchmarks.fleet_bench import ENVELOPE_RTOL, FLEET_CHAOS_SCHEMA_VERSION
-    from repro.launch.fleet import WIRE_KEYS
 
     assert isinstance(payload, dict), type(payload)
     assert payload.get("schema_version") == FLEET_CHAOS_SCHEMA_VERSION, (
@@ -345,8 +360,7 @@ def validate_fleet_chaos_json(payload: dict) -> None:
         assert row["server_rc"] == 0, row
         assert isinstance(row["dead"], list), row
         assert isinstance(row["rejoins"], int) and row["rejoins"] >= 0, row
-        assert isinstance(row["wire"], dict) and set(row["wire"]) == set(WIRE_KEYS), row
-        assert all(isinstance(v, int) and v >= 0 for v in row["wire"].values()), row
+        _validate_wire(row["wire"])
         assert isinstance(row["n_report_min"], int) and row["n_report_min"] >= 1, row
         assert isinstance(row["within_margin"], bool), row
         # the recovery claim: within-margin faults stay inside the envelope
@@ -367,6 +381,87 @@ def smoke_fleet_chaos() -> dict:
     with open(baseline) as f:
         committed = json.load(f)
     validate_fleet_chaos_json(committed)
+    return committed
+
+
+def validate_fleet_comlad_json(payload: dict) -> None:
+    """Assert the BENCH_fleet_comlad.json schema AND the Com-LAD-over-the-
+    wire claims it records (see fleet_bench.FLEET_COMLAD_SCHEMA_VERSION)."""
+    from benchmarks.fleet_bench import ENVELOPE_RTOL, FLEET_COMLAD_SCHEMA_VERSION
+    from repro.core.compression import CompressionSpec
+    from repro.launch.fleet import WIRE_KEYS
+
+    assert isinstance(payload, dict), type(payload)
+    assert payload.get("schema_version") == FLEET_COMLAD_SCHEMA_VERSION, (
+        payload.get("schema_version")
+    )
+    for field in ("procs", "n_devices", "d", "dim", "steps"):
+        v = payload.get(field)
+        assert isinstance(v, int) and v >= 1, (field, v)
+    assert payload["procs"] >= 3, "comlad conformance needs >= 2 workers"
+    for field in ("lr", "round_timeout", "baseline_final_loss",
+                  "baseline_uplink_bytes_per_round", "quant4_ratio"):
+        v = payload.get(field)
+        assert isinstance(v, float) and v > 0, (field, v)
+    # the byte-identity claim: --compress identity matched the plain fleet
+    assert payload.get("identity_identical") is True, payload.get("identity_identical")
+    # the headline claim: quant:4 cuts measured uplink bytes/round >= 4x
+    assert payload["quant4_ratio"] >= 4.0, payload["quant4_ratio"]
+    rows = payload.get("rows")
+    assert isinstance(rows, list) and rows, "rows must be a non-empty list"
+    names = set()
+    for row in rows:
+        assert set(row) == {"name", "spec", "final_loss", "rel_dev",
+                            "uplink_bytes_per_round", "uplink_frames",
+                            "uplink_bytes", "ratio_vs_identity",
+                            "frame_bytes_predicted", "frame_bytes_measured",
+                            "wire_bits_predicted", "wire_bits_measured",
+                            "server_rc", "faults", "within_envelope",
+                            "min_ratio"}, sorted(row)
+        assert isinstance(row["name"], str) and row["name"], row
+        # every recorded spec parses under the one registry grammar
+        try:
+            canonical = CompressionSpec.parse(row["spec"]).canonical()
+        except ValueError:
+            canonical = None
+        assert canonical == row["spec"], row
+        assert isinstance(row["final_loss"], float) and row["final_loss"] > 0, row
+        assert isinstance(row["rel_dev"], float) and row["rel_dev"] >= 0, row
+        assert row["server_rc"] == 0, row
+        for f in ("uplink_bytes_per_round", "ratio_vs_identity",
+                  "frame_bytes_predicted", "frame_bytes_measured",
+                  "wire_bits_predicted", "wire_bits_measured", "min_ratio"):
+            assert isinstance(row[f], (int, float)) and row[f] >= 0, (f, row)
+        for f in ("uplink_frames", "uplink_bytes"):
+            assert isinstance(row[f], int) and row[f] >= 1, (f, row)
+        assert isinstance(row["faults"], dict), row
+        assert set(row["faults"]) == set(WIRE_KEYS), sorted(row["faults"])
+        assert isinstance(row["within_envelope"], bool), row
+        # the loss-vs-bytes frontier claims the bench enforced
+        assert row["ratio_vs_identity"] >= row["min_ratio"], row
+        if row["within_envelope"]:
+            assert row["rel_dev"] <= ENVELOPE_RTOL, row
+        names.add(row["name"])
+    assert len(names) == len(rows), "duplicate row names"
+    for req in ("identity", "quant4", "quant4_chaos_byz"):
+        assert req in names, f"missing required comlad case {req!r}"
+    # the chaos case: compressed-frame faults landed as tallied erasures
+    byz = next(r for r in rows if r["name"] == "quant4_chaos_byz")
+    assert sum(byz["faults"].values()) >= 1, byz["faults"]
+    assert byz["faults"]["wrong_shape"] + byz["faults"]["bad_payload"] >= 1, (
+        byz["faults"]
+    )
+
+
+def smoke_fleet_comlad() -> dict:
+    """Schema + claims validation of the committed BENCH_fleet_comlad.json
+    baseline (the subprocess fan-out itself is the CI fleet-chaos job's
+    work, not tier-1's — same split as smoke_fleet_chaos)."""
+    baseline = os.path.join(REPO_ROOT, "benchmarks", "out",
+                            "BENCH_fleet_comlad.json")
+    with open(baseline) as f:
+        committed = json.load(f)
+    validate_fleet_comlad_json(committed)
     return committed
 
 
@@ -419,6 +514,11 @@ def main() -> int:
     print(
         f"fleet chaos smoke: {len(chaos['rows'])} committed cases, "
         f"healthy_identical={chaos['healthy_identical']}, schema + claims OK"
+    )
+    comlad = smoke_fleet_comlad()
+    print(
+        f"fleet comlad smoke: {len(comlad['rows'])} committed cases, "
+        f"quant4_ratio={comlad['quant4_ratio']:.2f}x, schema + claims OK"
     )
     return 0
 

@@ -344,13 +344,10 @@ def protocol_round(
                 coded, u, spec.levels, spec.chunk, backend=cfg.backend
             )
         else:
-            compressor = spec.make(q)
-            if spec.name == "rand_sparse_shared":
-                # round-shared mask: same key for every device
-                coded = jax.vmap(lambda g: compressor(k_comp, g))(coded)
-            else:
-                dev_keys = jax.random.split(k_comp, n)
-                coded = jax.vmap(compressor)(dev_keys, coded)
+            # single compression stage shared with the fleet's workers
+            # (compress_rows slices the same per-device key fan-out), so
+            # worker-side compression is bit-identical to this path
+            coded = comp_lib.compress_rows(spec, k_comp, coded, n_total=n)
 
     # --- Byzantine corruption ----------------------------------------------
     mask = attack_lib.sample_byzantine_mask(

@@ -21,15 +21,30 @@ vectors; ``compress_pytree`` maps it over a gradient pytree with split keys.
 ``wire_bits`` reports the number of payload bits actually needed on the wire
 (the dense output is the paper's mathematical abstraction; byte accounting is
 explicit so the roofline can charge the true collective cost).
+
+Beyond the mathematical operators this module owns the *one spelling* of a
+compression condition used everywhere — CLI flags, scenario rows and the
+fleet's wire negotiation all speak :meth:`CompressionSpec.parse` strings
+(``"identity" | "quant:4" | "randk:8" | "randk_shared:8" | "topk:8"``) —
+and the **physical wire codec**: :func:`pack_payload` /
+:func:`unpack_payload` turn a compressed dense block into the genuinely
+smaller byte payload the fleet ships (bit-packed quantization levels with
+per-chunk fp32 scales; sorted index+value records for the sparse family)
+and back, bit-identically.  :func:`compress_rows` is the engine's Com-LAD
+compression stage factored out so the multi-process fleet's worker-side
+compression is *the same function* on the same out-of-band round keys.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+import struct
 from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Compressor = Callable[[jax.Array, jax.Array], jax.Array]
 
@@ -43,6 +58,13 @@ __all__ = [
     "delta_of",
     "wire_bits",
     "CompressionSpec",
+    "spec_from",
+    "compress_rows",
+    "PayloadError",
+    "quant_level_bits",
+    "pack_payload",
+    "unpack_payload",
+    "packed_nbytes",
 ]
 
 
@@ -112,14 +134,44 @@ def top_k(key: jax.Array, g: jax.Array, q_hat: int) -> jax.Array:
     return g * mask
 
 
+# one short spelling per compressor, shared by CLI flags / scenario rows /
+# wire negotiation; long (module-level) names parse too
+_SHORT_TO_NAME = {
+    "identity": "none",
+    "none": "none",
+    "randk": "rand_sparse",
+    "rand_sparse": "rand_sparse",
+    "randk_shared": "rand_sparse_shared",
+    "rand_sparse_shared": "rand_sparse_shared",
+    "topk": "top_k",
+    "top_k": "top_k",
+    "quant": "quant",
+}
+_NAME_TO_SHORT = {
+    "none": "identity",
+    "rand_sparse": "randk",
+    "rand_sparse_shared": "randk_shared",
+    "top_k": "topk",
+    "quant": "quant",
+}
+_DEFAULT_CHUNK = 1024
+
+
 @dataclasses.dataclass(frozen=True)
 class CompressionSpec:
-    """Config-level description of the wire compression."""
+    """Config-level description of the wire compression.
+
+    The sparsification budget can be given either as a kept *fraction*
+    (``q_hat_frac``, the paper's parameterization) or as an absolute kept
+    *count* (``q_hat > 0`` wins over the fraction) — ``"randk:8"`` parses to
+    the latter, ``"randk:0.3"`` to the former.
+    """
 
     name: str = "none"  # none | rand_sparse | rand_sparse_shared | quant | top_k
     q_hat_frac: float = 0.3  # for sparsification: kept fraction q_hat / Q
     levels: int = 16  # for quantization
     chunk: int = 1024
+    q_hat: int = 0  # absolute kept count; 0 = use q_hat_frac
 
     def make(self, q: int) -> Compressor:
         return make_compressor(self, q)
@@ -130,15 +182,102 @@ class CompressionSpec:
     def bits_per_coord(self) -> float:
         return wire_bits(self, q=1_000_000) / 1_000_000
 
+    def kept(self, q: int) -> int:
+        """The resolved sparsification count ``q_hat`` for vectors of length q."""
+        if self.q_hat > 0:
+            return min(int(self.q_hat), q)
+        return max(1, int(self.q_hat_frac * q))
+
+    @classmethod
+    def parse(cls, text: str) -> "CompressionSpec":
+        """The one spelling of a compression condition (registry constructor).
+
+        Grammar: ``short[:param[:chunk]]`` where ``short`` is one of
+        ``identity | randk | randk_shared | topk | quant`` (long names accepted).
+        For the sparse family ``param`` is the kept count (int) or kept
+        fraction (float with a ``.``); for ``quant`` it is the level count,
+        with an optional third ``chunk`` field.  ``parse(spec.canonical())``
+        round-trips.
+        """
+        if not isinstance(text, str) or not text:
+            raise ValueError(f"compression spec must be a non-empty string, got {text!r}")
+        parts = text.strip().split(":")
+        short = parts[0]
+        if short not in _SHORT_TO_NAME:
+            raise ValueError(
+                f"unknown compressor {short!r}; known: {sorted(set(_NAME_TO_SHORT.values()))}"
+            )
+        name = _SHORT_TO_NAME[short]
+        if name == "none":
+            if len(parts) != 1:
+                raise ValueError(f"identity takes no parameters, got {text!r}")
+            return cls(name="none")
+        if name == "quant":
+            if len(parts) not in (2, 3):
+                raise ValueError(f"quant spec is quant:LEVELS[:CHUNK], got {text!r}")
+            levels = int(parts[1])
+            chunk = int(parts[2]) if len(parts) == 3 else _DEFAULT_CHUNK
+            if levels < 1 or chunk < 1:
+                raise ValueError(f"quant levels/chunk must be >= 1, got {text!r}")
+            return cls(name="quant", levels=levels, chunk=chunk)
+        # sparse family: randk / randk_shared / topk
+        if len(parts) != 2:
+            raise ValueError(f"{short} spec is {short}:COUNT or {short}:FRAC, got {text!r}")
+        if "." in parts[1]:
+            frac = float(parts[1])
+            if not (0.0 < frac <= 1.0):
+                raise ValueError(f"kept fraction must be in (0, 1], got {text!r}")
+            return cls(name=name, q_hat_frac=frac)
+        k = int(parts[1])
+        if k < 1:
+            raise ValueError(f"kept count must be >= 1, got {text!r}")
+        return cls(name=name, q_hat=k)
+
+    def canonical(self) -> str:
+        """The registry spelling of this spec; ``parse(canonical())`` round-trips.
+
+        This string is also the fleet's wire-negotiation token (declared in
+        ``HELLO``), so it must be a pure function of the fields a worker and
+        the server must agree on.
+        """
+        short = _NAME_TO_SHORT[_SHORT_TO_NAME.get(self.name, self.name)]
+        if self.name in ("none", "identity"):
+            return "identity"
+        if self.name == "quant":
+            if self.chunk != _DEFAULT_CHUNK:
+                return f"quant:{self.levels}:{self.chunk}"
+            return f"quant:{self.levels}"
+        if self.q_hat > 0:
+            return f"{short}:{self.q_hat}"
+        return f"{short}:{self.q_hat_frac:g}"
+
+
+def spec_from(
+    name: str,
+    *,
+    q_hat_frac: float = 0.3,
+    levels: int = 16,
+    chunk: int = 1024,
+) -> CompressionSpec:
+    """Lower a config-level compressor field to a :class:`CompressionSpec`.
+
+    Accepts both the registry spelling (anything with parameters, e.g.
+    ``"quant:8"`` — routed through :meth:`CompressionSpec.parse`) and the
+    legacy bare-name + keyword-fields form used by ``Scenario`` /
+    ``TrainConfig`` rows.
+    """
+    if ":" in name:
+        return CompressionSpec.parse(name)
+    return CompressionSpec(name=name, q_hat_frac=q_hat_frac, levels=levels, chunk=chunk)
+
 
 def make_compressor(spec: CompressionSpec, q: int) -> Compressor:
     if spec.name in ("none", "identity"):
         return identity
     if spec.name == "rand_sparse":
-        q_hat = max(1, int(spec.q_hat_frac * q))
-        return partial(random_sparsification, q_hat=q_hat)
+        return partial(random_sparsification, q_hat=spec.kept(q))
     if spec.name == "rand_sparse_shared":
-        q_hat = max(1, int(spec.q_hat_frac * q))
+        q_hat = spec.kept(q)
 
         def shared(key: jax.Array, g: jax.Array) -> jax.Array:
             # NOTE: caller must pass the *round-shared* key, not a per-device key.
@@ -149,9 +288,39 @@ def make_compressor(spec: CompressionSpec, q: int) -> Compressor:
     if spec.name == "quant":
         return partial(stochastic_quantization, levels=spec.levels, chunk=spec.chunk)
     if spec.name == "top_k":
-        q_hat = max(1, int(spec.q_hat_frac * q))
-        return partial(top_k, q_hat=q_hat)
+        return partial(top_k, q_hat=spec.kept(q))
     raise KeyError(f"unknown compressor {spec.name!r}")
+
+
+def compress_rows(
+    spec: CompressionSpec,
+    key: jax.Array,
+    rows: jax.Array,
+    *,
+    offset: int = 0,
+    n_total: int | None = None,
+) -> jax.Array:
+    """Apply ``spec`` to a ``(R, Q)`` block of coded rows under the engine's
+    per-device key convention.
+
+    ``rows`` are the coded vectors of devices ``[offset, offset + R)`` out of
+    ``n_total`` logical devices; device ``i``'s compressor key is
+    ``jax.random.split(key, n_total)[i]`` (``key`` is the round's ``k_comp``
+    stream).  ``rand_sparse_shared`` uses the round key itself for every
+    device.  This is the single compression stage shared by
+    ``byzantine.protocol_round`` (offset 0, all devices) and the fleet's
+    workers (one block each) — which is what makes worker-side compression
+    bit-identical to the in-engine Com-LAD path.
+    """
+    r, q = rows.shape
+    n_total = r if n_total is None else n_total
+    if spec.name in ("none", "identity"):
+        return rows
+    compressor = make_compressor(spec, q)
+    if spec.name == "rand_sparse_shared":
+        return jax.vmap(lambda g: compressor(key, g))(rows)
+    dev_keys = jax.random.split(key, n_total)[offset : offset + r]
+    return jax.vmap(compressor)(dev_keys, rows)
 
 
 def delta_of(spec: CompressionSpec, q: int) -> float:
@@ -159,15 +328,14 @@ def delta_of(spec: CompressionSpec, q: int) -> float:
     if spec.name in ("none", "identity"):
         return 0.0
     if spec.name in ("rand_sparse", "rand_sparse_shared"):
-        q_hat = max(1, int(spec.q_hat_frac * q))
-        return q / q_hat - 1.0
+        return q / spec.kept(q) - 1.0
     if spec.name == "quant":
         # QSGD bound: delta <= min(Q/levels^2, sqrt(Q)/levels) for full-vector
         # scaling; with per-chunk scaling Q -> chunk.
         c = min(spec.chunk, q)
         return min(c / spec.levels**2, (c**0.5) / spec.levels)
     if spec.name == "top_k":
-        return 1.0 - spec.q_hat_frac  # contraction parameter (biased class)
+        return 1.0 - spec.kept(q) / q  # contraction parameter (biased class)
     raise KeyError(spec.name)
 
 
@@ -176,24 +344,212 @@ def wire_bits(spec: CompressionSpec, q: int, value_bits: int = 32) -> float:
     if spec.name in ("none", "identity"):
         return float(q * value_bits)
     if spec.name == "rand_sparse":
-        q_hat = max(1, int(spec.q_hat_frac * q))
-        import math
-
         idx_bits = max(1, math.ceil(math.log2(max(q, 2))))
-        return float(q_hat * (value_bits + idx_bits))
+        return float(spec.kept(q) * (value_bits + idx_bits))
     if spec.name == "rand_sparse_shared":
-        q_hat = max(1, int(spec.q_hat_frac * q))
-        return float(q_hat * value_bits)  # mask derived from the shared round key
+        return float(spec.kept(q) * value_bits)  # mask derived from the shared round key
     if spec.name == "quant":
-        import math
-
         bits = math.ceil(math.log2(2 * spec.levels + 1))
         n_chunks = -(-q // spec.chunk)
         return float(q * bits + n_chunks * 32)
     if spec.name == "top_k":
-        q_hat = max(1, int(spec.q_hat_frac * q))
-        import math
-
         idx_bits = max(1, math.ceil(math.log2(max(q, 2))))
-        return float(q_hat * (value_bits + idx_bits))
+        return float(spec.kept(q) * (value_bits + idx_bits))
+    raise KeyError(spec.name)
+
+
+# ---------------------------------------------------------------------------
+# Physical payload codec (numpy-only: runs on the fleet's socket path with no
+# jax tracing).  A packed payload is self-describing:
+#
+#     _CHDR(rows, q)  +  codec body
+#
+# quant body, per row:  n_chunks x f32 chunk scales, then q coordinates
+#     bit-packed at quant_level_bits(levels) bits each (little bit order),
+#     each coordinate stored as the unsigned level u = yq + levels in
+#     [0, 2*levels].
+# sparse body (randk / randk_shared / topk), per row:  u16 nonzero count,
+#     count x u32 strictly-increasing indices, count x f32 values.
+# identity body:  raw row-major f32 (the fleet ships identity rows as plain
+#     ROWS frames, but the codec stays total for conformance tests).
+#
+# Lossless by construction: the packed representation is re-derived from the
+# *dense* compressed vector (the engine's dequantized output), and unpacking
+# replicates the engine's dequantization op order in float32, so
+# unpack(pack(rows)) == rows bitwise (up to +0.0 vs -0.0 at dropped sparse
+# coordinates).
+# ---------------------------------------------------------------------------
+
+_CHDR = struct.Struct("!HI")  # (rows, q)
+_CNT = struct.Struct("!H")  # sparse per-row nonzero count
+
+
+class PayloadError(ValueError):
+    """A structurally invalid compressed payload.
+
+    ``reason`` is one of the fleet's WIRE_KEYS buckets: ``"wrong_shape"`` for
+    a header that disagrees with the negotiated geometry, ``"bad_payload"``
+    for everything else (truncation, out-of-range levels, unsorted or
+    out-of-bounds sparse indices).
+    """
+
+    def __init__(self, reason: str, detail: str = ""):
+        super().__init__(f"{reason}: {detail}" if detail else reason)
+        self.reason = reason
+
+
+def quant_level_bits(levels: int) -> int:
+    """Bits per coordinate for the unsigned level u in [0, 2*levels]."""
+    return max(1, math.ceil(math.log2(2 * levels + 1)))
+
+
+def _quant_geometry(spec: CompressionSpec, q: int) -> tuple[int, int, int]:
+    """(n_chunks, bits_per_coord, packed bytes per row) for the quant codec."""
+    n_chunks = -(-q // spec.chunk)
+    b = quant_level_bits(spec.levels)
+    data_bytes = -(-(q * b) // 8)
+    return n_chunks, b, n_chunks * 4 + data_bytes
+
+
+def packed_nbytes(spec: CompressionSpec, shape: tuple[int, int]) -> int:
+    """Exact payload size in bytes for deterministic codecs (identity /
+    quant), the worst case for the sparse family (every kept coordinate
+    nonzero).  Used as the *predicted* uplink cost next to the measured one.
+    """
+    rows, q = shape
+    if spec.name in ("none", "identity"):
+        return _CHDR.size + rows * q * 4
+    if spec.name == "quant":
+        _, _, per_row = _quant_geometry(spec, q)
+        return _CHDR.size + rows * per_row
+    if spec.name in ("rand_sparse", "rand_sparse_shared", "top_k"):
+        k = spec.kept(q)
+        return _CHDR.size + rows * (_CNT.size + k * 8)
+    raise KeyError(spec.name)
+
+
+def _pack_quant_row(spec: CompressionSpec, row: np.ndarray) -> bytes:
+    q = row.shape[0]
+    pad = (-q) % spec.chunk
+    gc = np.pad(row, (0, pad)).reshape(-1, spec.chunk)
+    # the argmax coordinate dequantizes to +/-scale exactly, so the chunk
+    # scale is recoverable from the dense output without a side channel
+    scale = np.max(np.abs(gc), axis=1, keepdims=True).astype(np.float32)
+    safe = np.where(scale > 0, scale, np.float32(1.0))
+    yq = np.rint(gc / safe * np.float32(spec.levels))  # integer recovery, err << 0.5
+    u = (yq.reshape(-1)[:q] + spec.levels).astype(np.uint32)
+    b = quant_level_bits(spec.levels)
+    bits = ((u[:, None] >> np.arange(b, dtype=np.uint32)) & 1).astype(np.uint8)
+    packed = np.packbits(bits.reshape(-1), bitorder="little")
+    return scale.astype("<f4").tobytes() + packed.tobytes()
+
+
+def _unpack_quant_row(spec: CompressionSpec, buf: memoryview, q: int) -> np.ndarray:
+    n_chunks, b, _ = _quant_geometry(spec, q)
+    scale = np.frombuffer(buf[: n_chunks * 4], dtype="<f4").reshape(-1, 1)
+    if not np.all(np.isfinite(scale)) or np.any(scale < 0):
+        raise PayloadError("bad_payload", "non-finite or negative chunk scale")
+    raw = np.unpackbits(
+        np.frombuffer(buf[n_chunks * 4 :], dtype=np.uint8),
+        count=q * b,
+        bitorder="little",
+    )
+    u = (raw.reshape(q, b).astype(np.uint32) << np.arange(b, dtype=np.uint32)).sum(
+        axis=1
+    )
+    if np.any(u > 2 * spec.levels):
+        raise PayloadError("bad_payload", "quant level out of range")
+    # replicate the engine's dequantization op order in float32:
+    #   out = yq / levels * safe;  out = where(scale > 0, out, 0)
+    yq = u.astype(np.float32) - np.float32(spec.levels)
+    pad = (-q) % spec.chunk
+    yq = np.pad(yq, (0, pad)).reshape(-1, spec.chunk)
+    safe = np.where(scale > 0, scale, np.float32(1.0))
+    out = yq / np.float32(spec.levels) * safe
+    out = np.where(scale > 0, out, np.float32(0.0))
+    return out.reshape(-1)[:q].astype(np.float32)
+
+
+def pack_payload(spec: CompressionSpec, rows: np.ndarray) -> bytes:
+    """Encode a dense ``(R, Q)`` float32 block of compressed rows into the
+    spec's wire representation (see module comment for the layout)."""
+    rows = np.asarray(rows, dtype=np.float32)
+    if rows.ndim != 2:
+        raise ValueError(f"expected (rows, q) block, got shape {rows.shape}")
+    r, q = rows.shape
+    if r > 0xFFFF:
+        raise ValueError(f"too many rows to pack: {r}")
+    head = _CHDR.pack(r, q)
+    if spec.name in ("none", "identity"):
+        return head + rows.astype("<f4").tobytes()
+    if spec.name == "quant":
+        return head + b"".join(_pack_quant_row(spec, rows[i]) for i in range(r))
+    if spec.name in ("rand_sparse", "rand_sparse_shared", "top_k"):
+        parts = [head]
+        for i in range(r):
+            idx = np.flatnonzero(rows[i]).astype(np.uint32)
+            if idx.size > 0xFFFF:
+                raise ValueError(f"sparse row too dense to pack: {idx.size} nonzeros")
+            parts.append(_CNT.pack(idx.size))
+            parts.append(idx.astype(">u4").tobytes())
+            parts.append(rows[i, idx].astype(">f4").tobytes())
+        return b"".join(parts)
+    raise KeyError(spec.name)
+
+
+def unpack_payload(
+    spec: CompressionSpec, buf: bytes, expect_shape: tuple[int, int]
+) -> np.ndarray:
+    """Decode ``pack_payload`` output back to the dense ``(R, Q)`` float32
+    block, validating structure; raises :class:`PayloadError` (never returns
+    garbage) so the fleet can tally a malformed payload as an erasure.
+    """
+    mv = memoryview(buf)
+    if len(mv) < _CHDR.size:
+        raise PayloadError("bad_payload", "truncated header")
+    r, q = _CHDR.unpack_from(mv, 0)
+    if (r, q) != tuple(expect_shape):
+        raise PayloadError(
+            "wrong_shape", f"declared {(r, q)} != negotiated {tuple(expect_shape)}"
+        )
+    body = mv[_CHDR.size :]
+    if spec.name in ("none", "identity"):
+        if len(body) != r * q * 4:
+            raise PayloadError("bad_payload", "identity body size mismatch")
+        return np.frombuffer(body, dtype="<f4").reshape(r, q).astype(np.float32)
+    if spec.name == "quant":
+        _, _, per_row = _quant_geometry(spec, q)
+        if len(body) != r * per_row:
+            raise PayloadError("bad_payload", "quant body size mismatch")
+        out = np.empty((r, q), dtype=np.float32)
+        for i in range(r):
+            out[i] = _unpack_quant_row(spec, body[i * per_row : (i + 1) * per_row], q)
+        return out
+    if spec.name in ("rand_sparse", "rand_sparse_shared", "top_k"):
+        k_max = spec.kept(q)
+        out = np.zeros((r, q), dtype=np.float32)
+        off = 0
+        for i in range(r):
+            if len(body) - off < _CNT.size:
+                raise PayloadError("bad_payload", "truncated sparse row header")
+            (count,) = _CNT.unpack_from(body, off)
+            off += _CNT.size
+            if count > k_max:
+                raise PayloadError(
+                    "bad_payload", f"sparse count {count} exceeds budget {k_max}"
+                )
+            rec = count * 8
+            if len(body) - off < rec:
+                raise PayloadError("bad_payload", "truncated sparse row body")
+            idx = np.frombuffer(body[off : off + count * 4], dtype=">u4")
+            vals = np.frombuffer(
+                body[off + count * 4 : off + rec], dtype=">f4"
+            ).astype(np.float32)
+            off += rec
+            if count and (idx[-1] >= q or np.any(np.diff(idx.astype(np.int64)) <= 0)):
+                raise PayloadError("bad_payload", "sparse indices unsorted or out of range")
+            out[i, idx.astype(np.int64)] = vals
+        if off != len(body):
+            raise PayloadError("bad_payload", "trailing bytes after sparse rows")
+        return out
     raise KeyError(spec.name)

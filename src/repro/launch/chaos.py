@@ -19,6 +19,12 @@ Ops (applied to the worker's outgoing ``K_ROWS`` frame for that round):
   * ``corrupt``   — flip bytes of the encoded frame before sending
                     (``corrupt_bytes``; the server's CRC/shape validation
                     must turn this into a per-round erasure, never a crash).
+  * ``byz_payload`` — flip bytes of the *payload's structural header* and
+                    re-seal the frame CRC (``byz_payload_bytes``): a
+                    Byzantine worker sending a well-framed lie, not line
+                    noise.  The CRC passes; the codec-level shape/payload
+                    validation (dense or compressed) must reject it as a
+                    tallied per-round erasure.
   * ``partition`` — close the connection without sending, stay dark for
                     ``arg`` seconds, then rejoin through the worker's
                     reconnect-with-backoff loop.
@@ -41,6 +47,7 @@ import dataclasses
 import json
 import os
 import random
+import struct
 import time
 import zlib
 
@@ -52,9 +59,10 @@ __all__ = [
     "parse_chaos",
     "fault_rng",
     "corrupt_bytes",
+    "byz_payload_bytes",
 ]
 
-OPS = ("drop", "delay", "dup", "corrupt", "partition", "kill")
+OPS = ("drop", "delay", "dup", "corrupt", "byz_payload", "partition", "kill")
 
 _FAULT_KEYS = {"op", "proc", "rounds", "arg"}
 _SPEC_KEYS = {"seed", "faults"}
@@ -160,6 +168,35 @@ def corrupt_bytes(data: bytes, rng: random.Random, n_flips: int = 4) -> bytes:
     return bytes(buf)
 
 
+# mirror of the fleet's frame header (kept in sync by tests/test_chaos.py;
+# duplicated here because this module must stay stdlib-only)
+_FRAME = struct.Struct("!4sBBII")  # magic, version, kind, crc32(payload), len
+
+
+def byz_payload_bytes(frame: bytes, rng: random.Random, n_flips: int = 2) -> bytes:
+    """Corrupt the payload's structural header *and re-seal the CRC*.
+
+    Unlike ``corrupt_bytes`` (line noise the CRC catches), this models a
+    Byzantine worker: the frame stays perfectly well-formed — magic, version,
+    CRC all valid — but the payload lies.  Flips land in payload bytes
+    [8, 14): just past the 8-byte round header, the region where both row
+    codecs declare their shape (the dense path's dtype/ndim/dims, the
+    compressed path's rows/q header), so the server's *codec-level*
+    validation must reject it deterministically (``wrong_shape`` /
+    ``bad_payload``), never the CRC check.
+    """
+    if len(frame) <= _FRAME.size + 8:
+        return frame  # too short to carry a row payload: pass through
+    magic, ver, kind, _, _ = _FRAME.unpack_from(frame, 0)
+    payload = bytearray(frame[_FRAME.size :])
+    lo, hi = 8, min(14, len(payload))
+    for _ in range(n_flips):
+        i = lo + rng.randrange(hi - lo)
+        payload[i] ^= 1 + rng.randrange(255)
+    payload = bytes(payload)
+    return _FRAME.pack(magic, ver, kind, zlib.crc32(payload), len(payload)) + payload
+
+
 class ChaosTransport:
     """Applies a schedule to one worker's outgoing row frames.
 
@@ -189,6 +226,12 @@ class ChaosTransport:
             self.events["drop"] += 1
             return "dropped", 0.0
         data = frame
+        if "byz_payload" in ops:
+            # re-sealed before corrupt: a later corrupt breaks the CRC anyway
+            self.events["byz_payload"] += 1
+            data = byz_payload_bytes(
+                data, fault_rng(self.spec.seed, self.proc, t, "byz_payload")
+            )
         if "corrupt" in ops:
             self.events["corrupt"] += 1
             data = corrupt_bytes(data, fault_rng(self.spec.seed, self.proc, t, "corrupt"))

@@ -44,8 +44,24 @@ send arbitrary messages, and real hosts crash):
   data, assignment — is derived from the shared seed).
 * **Deterministic chaos.**  ``--chaos`` wraps the worker's sends in
   ``launch/chaos.py``'s seeded fault-injection schedule (drop / delay /
-  dup / corrupt / partition / kill per proc×round).  A no-fault schedule
-  is byte-identical to the plain fleet.
+  dup / corrupt / byz_payload / partition / kill per proc×round).  A
+  no-fault schedule is byte-identical to the plain fleet.
+* **Com-LAD compressed uplink.**  ``--compress quant:4`` (or ``randk:K`` /
+  ``randk_shared:K`` / ``topk:K`` — the one registry spelling of
+  ``CompressionSpec.parse``) makes every worker apply the engine's
+  Definition-2 compressor to its coded rows *and ship the genuinely smaller
+  representation*: a ``CROWS`` frame carrying bit-packed quantization levels
+  with per-chunk scales, or index+value records for the sparse family
+  (``core/compression.py``'s payload codec).  The spec is declared in each
+  worker's HELLO and must match the server's (``spec_mismatch`` otherwise);
+  compression keys are the engine's out-of-band round keys (``k_comp`` =
+  4th split of ``fold_in(key, t)``) so the worker-side compressed rows are
+  bit-identical to the in-engine Com-LAD path — no key material on the
+  wire.  A malformed compressed payload is a tallied per-round erasure like
+  any other bad frame.  ``--compress identity`` (the default) keeps the
+  plain dense ``ROWS`` frames, byte-for-byte.  The server tallies real
+  frames/bytes sent and received per kind (``RESULT["wire"]["sent"/"recv"]``)
+  and reports measured vs predicted uplink cost in ``RESULT["comlad"]``.
 
 Identity layer vs. data plane:
 
@@ -73,6 +89,7 @@ from __future__ import annotations
 
 import argparse
 import collections
+import dataclasses
 import json
 import os
 import select
@@ -87,11 +104,19 @@ import numpy as np
 
 from repro.timing import wallclock
 
+
+def _comp():
+    """Lazy ``repro.core.compression`` (it imports jax; --help stays instant)."""
+    from repro.core import compression
+
+    return compression
+
 __all__ = [
     "main",
     "run_server",
     "run_worker",
     "build_parser",
+    "FleetConfig",
     "FrameError",
     "WIRE_KEYS",
     "WIRE_VERSION",
@@ -99,6 +124,8 @@ __all__ = [
     "K_ROUND",
     "K_ROWS",
     "K_DONE",
+    "K_CROWS",
+    "KIND_NAMES",
     "encode_frame",
     "decode_frame_bytes",
     "recv_frame",
@@ -108,6 +135,9 @@ __all__ = [
     "unpack_round",
     "pack_rows",
     "unpack_rows",
+    "pack_crows",
+    "unpack_crows",
+    "new_wire_tallies",
     "adaptive_deadline",
 ]
 
@@ -116,12 +146,19 @@ __all__ = [
 # Byzantine peer controls every byte, so nothing on the wire may carry code)
 # --------------------------------------------------------------------------
 _MAGIC = b"RFLT"
-WIRE_VERSION = 1
+WIRE_VERSION = 2  # v2: HELLO declares the compression spec; CROWS frame kind
 _FRAME = struct.Struct("!4sBBII")  # magic, version, kind, crc32(payload), len
 _MAX_MSG = 1 << 26  # 64 MiB: a block of coded vectors is far smaller
 
-K_HELLO, K_ROUND, K_ROWS, K_DONE = 1, 2, 3, 4
-_KINDS = (K_HELLO, K_ROUND, K_ROWS, K_DONE)
+K_HELLO, K_ROUND, K_ROWS, K_DONE, K_CROWS = 1, 2, 3, 4, 5
+_KINDS = (K_HELLO, K_ROUND, K_ROWS, K_DONE, K_CROWS)
+KIND_NAMES = {
+    K_HELLO: "hello",
+    K_ROUND: "round",
+    K_ROWS: "rows",
+    K_DONE: "done",
+    K_CROWS: "crows",  # compressed rows (Com-LAD payload codec)
+}
 
 # every way a frame can be rejected; the server tallies these in RESULT
 WIRE_KEYS = (
@@ -134,6 +171,7 @@ WIRE_KEYS = (
     "bad_payload",    # payload fails structural decode (dtype/ndim/length)
     "wrong_shape",    # well-formed array of the wrong declared shape
     "bad_hello",      # malformed hello, or proc id out of range
+    "spec_mismatch",  # hello declares a different compression spec
     "pid_mismatch",   # rows claim a different worker than the connection's
     "future_round",   # rows for a round the server has not started
     "stale",          # rows for an already-finished round (tolerated)
@@ -260,16 +298,39 @@ def _unpack_array(buf: bytes, expect_shape=None) -> np.ndarray:
     return np.frombuffer(buf, dtype=_DTYPES[code], count=count, offset=off).reshape(shape)
 
 
-def pack_hello(proc: int) -> bytes:
-    return _U32.pack(proc)
+_U16 = struct.Struct("!H")
+_MAX_SPEC = 64  # canonical spec strings are short; anything longer is hostile
 
 
-def unpack_hello(payload: bytes, procs: int) -> int:
-    if len(payload) != _U32.size:
+def pack_hello(proc: int, spec: str = "identity") -> bytes:
+    """HELLO: proc id + the worker's canonical compression-spec string.
+
+    The spec rides in the handshake so a worker/server disagreement is a
+    tallied ``spec_mismatch`` at connect time, not silent garbage decode at
+    round time (both sides get the same ``--compress`` line; this validates
+    it rather than negotiating anything new).
+    """
+    raw = spec.encode("ascii")
+    if len(raw) > _MAX_SPEC:
+        raise ValueError(f"spec string too long: {spec!r}")
+    return _U32.pack(proc) + _U16.pack(len(raw)) + raw
+
+
+def unpack_hello(payload: bytes, procs: int, spec: str = "identity") -> int:
+    if len(payload) < _U32.size + _U16.size:
         raise FrameError("bad_hello")
-    (pid,) = _U32.unpack(payload)
+    (pid,) = _U32.unpack_from(payload, 0)
+    (slen,) = _U16.unpack_from(payload, _U32.size)
+    if slen > _MAX_SPEC or len(payload) != _U32.size + _U16.size + slen:
+        raise FrameError("bad_hello")
     if not (1 <= pid < procs):
         raise FrameError("bad_hello")
+    try:
+        declared = payload[_U32.size + _U16.size :].decode("ascii")
+    except UnicodeDecodeError:
+        raise FrameError("bad_hello") from None
+    if declared != spec:
+        raise FrameError("spec_mismatch")
     return pid
 
 
@@ -295,6 +356,63 @@ def unpack_rows(payload: bytes, expect_shape) -> tuple[int, int, np.ndarray]:
     return t, proc, _unpack_array(payload[_ROWS_HDR.size :], expect_shape=expect_shape)
 
 
+def pack_crows(t: int, proc: int, spec, rows) -> bytes:
+    """CROWS payload: round header + the spec's compressed representation.
+
+    ``rows`` is the dense ``(block, dim)`` compressed block (the engine's
+    dequantized / masked output); ``core/compression.pack_payload`` re-derives
+    the physically small encoding (bit-packed levels + per-chunk scales, or
+    index+value records) losslessly from it.
+    """
+    return _ROWS_HDR.pack(t, proc) + _comp().pack_payload(spec, np.asarray(rows))
+
+
+def unpack_crows(payload: bytes, spec, expect_shape) -> tuple[int, int, np.ndarray]:
+    """Decode + validate one CROWS payload; structural failures become the
+    same :class:`FrameError` buckets as the dense path (``bad_payload`` /
+    ``wrong_shape``), so a malformed compressed payload is a tallied erasure,
+    never a crash."""
+    if len(payload) < _ROWS_HDR.size:
+        raise FrameError("bad_payload")
+    t, proc = _ROWS_HDR.unpack_from(payload, 0)
+    comp = _comp()
+    try:
+        rows = comp.unpack_payload(spec, payload[_ROWS_HDR.size :], expect_shape)
+    except comp.PayloadError as exc:
+        raise FrameError(exc.reason) from None
+    return t, proc, rows
+
+
+def predicted_uplink_frame_bytes(spec, block: int, dim: int) -> int:
+    """Schema-predicted on-the-wire size of one uplink frame (header included)
+    for a ``(block, dim)`` coded block — the number the measured traffic is
+    audited against in ``RESULT["comlad"]``."""
+    if spec.name in ("none", "identity"):
+        return _FRAME.size + _ROWS_HDR.size + _ARR.size + 2 * _DIM.size + block * dim * 4
+    return _FRAME.size + _ROWS_HDR.size + _comp().packed_nbytes(spec, (block, dim))
+
+
+def new_wire_tallies() -> dict:
+    """The RESULT["wire"] schema: fault reasons + per-kind traffic counters.
+
+    ``sent`` / ``recv`` map each frame-kind name to ``[frames, bytes]`` of
+    *observed* traffic (bytes include the frame header), so compression
+    ratios are computed from what actually crossed the socket, not from the
+    schema's prediction.
+    """
+    return {
+        "faults": {k: 0 for k in WIRE_KEYS},
+        "sent": {name: [0, 0] for name in KIND_NAMES.values()},
+        "recv": {name: [0, 0] for name in KIND_NAMES.values()},
+    }
+
+
+def _tally(counters: dict, kind: int, nbytes: int) -> None:
+    row = counters[KIND_NAMES[kind]]
+    row[0] += 1
+    row[1] += nbytes
+
+
 # --------------------------------------------------------------------------
 # adaptive round deadline
 # --------------------------------------------------------------------------
@@ -316,9 +434,112 @@ def adaptive_deadline(latencies, floor: float, k: float = 4.0, min_samples: int 
 
 
 # --------------------------------------------------------------------------
+# typed configuration (the CLI is generated FROM the dataclass, so tests and
+# benchmarks construct FleetConfig directly — no argv synthesis)
+# --------------------------------------------------------------------------
+def _f(default, help_: str):
+    return dataclasses.field(default=default, metadata={"help": help_})
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Typed fleet configuration; one field per CLI flag.
+
+    ``build_parser()`` is generated from these fields (flag ``--proc-id``
+    binds field ``proc_id``; bools get ``--x/--no-x``), ``from_argv`` parses
+    a command line into a config, and ``to_argv`` emits the minimal flag list
+    that reproduces the config (round-trip: ``from_argv(to_argv()) == self``).
+    ``run_server`` / ``run_worker`` / ``_fleet_state`` take the config
+    object, not an argparse namespace.
+    """
+
+    procs: int = _f(1, "fleet size (processes)")
+    proc_id: int = _f(0, "this process (0 = server)")
+    host: str = _f("127.0.0.1", "server gather host")
+    port: int = _f(57313, "server gather port")
+    coordinator: str = _f("127.0.0.1:57312", "jax.distributed coordinator address")
+    distributed: bool = _f(True, "run jax.distributed.initialize (identity)")
+    n_devices: int = _f(6, "N logical devices across the fleet")
+    d: int = _f(3, "computational load / redundancy")
+    dim: int = _f(8, "model dimension")
+    sigma_h: float = _f(0.3, "heterogeneity of the synthetic problem")
+    steps: int = _f(6, "training rounds")
+    lr: float = _f(1e-5, "learning rate")
+    seed: int = _f(0, "shared fleet seed (data, assignment, compression keys)")
+    aggregator: str = _f(
+        "decode", "masked server rule (decode = cyclic K-of-N erasure decode)"
+    )
+    compress: str = _f(
+        "identity",
+        "uplink CompressionSpec (registry spelling: identity | quant:L[:chunk] "
+        "| randk:K | randk_shared:K | topk:K)",
+    )
+    round_timeout: float = _f(10.0, "floor of the adaptive per-round deadline")
+    deadline_k: float = _f(4.0, "adaptive deadline spread multiplier (median + k*MAD)")
+    deadline_window: int = _f(32, "sliding window of honest latencies the deadline sees")
+    init_timeout: float = _f(60.0, "startup connect window (seconds)")
+    rejoin_timeout: float = _f(30.0, "how long a disconnected worker keeps retrying")
+    checkpoint: str = _f("", "server state checkpoint path prefix (empty = off)")
+    checkpoint_every: int = _f(0, "persist server state every K rounds (0 = off)")
+    resume: bool = _f(False, "resume the server from --checkpoint if present")
+    chaos: str = _f("", "fault-injection schedule (JSON or path; launch/chaos.py)")
+    die_after_round: int = _f(-1, "test hook: worker hard-exits when it sees this round")
+    stall_after_round: int = _f(
+        -1, "test hook: worker sleeps past the deadline from this round"
+    )
+    stall_seconds: float = _f(-1.0, "injected stall length (default: 4x --round-timeout)")
+    server_crash_after_round: int = _f(
+        -1, "test hook: server hard-exits after finishing this round"
+    )
+
+    def spec(self):
+        """The parsed :class:`CompressionSpec` of ``compress`` (lazy: jax)."""
+        return _comp().CompressionSpec.parse(self.compress)
+
+    @classmethod
+    def build_parser(cls) -> argparse.ArgumentParser:
+        p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+        # `from __future__ import annotations` stringifies f.type
+        types = {"int": int, "float": float, "str": str}
+        for f in dataclasses.fields(cls):
+            flag = "--" + f.name.replace("_", "-")
+            help_ = f.metadata.get("help", "")
+            if f.type == "bool":
+                p.add_argument(
+                    flag,
+                    action=argparse.BooleanOptionalAction,
+                    default=f.default,
+                    help=help_,
+                )
+            else:
+                p.add_argument(flag, type=types[f.type], default=f.default, help=help_)
+        return p
+
+    @classmethod
+    def from_argv(cls, argv=None) -> "FleetConfig":
+        ns = cls.build_parser().parse_args(argv)
+        return cls(**{f.name: getattr(ns, f.name) for f in dataclasses.fields(cls)})
+
+    def to_argv(self) -> list[str]:
+        """The minimal flag list reproducing this config (non-default fields
+        only) — what the benchmark / test harnesses pass to subprocesses."""
+        argv: list[str] = []
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if v == f.default:
+                continue
+            flag = f.name.replace("_", "-")
+            if f.type == "bool":
+                argv.append(f"--{flag}" if v else f"--no-{flag}")
+            else:
+                argv.extend([f"--{flag}", str(v)])
+        return argv
+
+
+# --------------------------------------------------------------------------
 # shared round math (imports jax lazily so --help works instantly)
 # --------------------------------------------------------------------------
-def _fleet_state(args):
+def _fleet_state(cfg: FleetConfig):
     """Everything a process needs that is derivable from the shared seed."""
     import jax
     import jax.numpy as jnp
@@ -326,24 +547,28 @@ def _fleet_state(args):
     from repro.core import task_matrix as tm
     from repro.data.synthetic import linear_regression_problem
 
-    n, d = args.n_devices, args.d
-    if n % args.procs != 0:
-        raise ValueError(f"n_devices={n} not divisible by procs={args.procs}")
+    n, d = cfg.n_devices, cfg.d
+    if n % cfg.procs != 0:
+        raise ValueError(f"n_devices={n} not divisible by procs={cfg.procs}")
     if n % d != 0:
         raise ValueError(f"decode exactness needs d | N: N={n} d={d}")
     z, y = linear_regression_problem(
-        jax.random.PRNGKey(args.seed), n=n, dim=args.dim, sigma_h=args.sigma_h
+        jax.random.PRNGKey(cfg.seed), n=n, dim=cfg.dim, sigma_h=cfg.sigma_h
     )
-    key = jax.random.PRNGKey(args.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+    spec = cfg.spec()
+
+    def round_keys(t: int):
+        # the engine's round-key convention: fold in t, 4-way split —
+        # (assignment, byz mask, attack, compression) streams in that order
+        k = jax.random.fold_in(key, t)
+        ks = jax.random.split(k, 4)
+        return ks[0], ks[3]
 
     def round_assignment(t: int):
-        # the engine's round-key convention: fold in t, 4-way split, the
-        # assignment stream is the first key
-        k = jax.random.fold_in(key, t)
-        k_assign = jax.random.split(k, 4)[0]
-        return tm.sample_assignment(k_assign, n, d)
+        return tm.sample_assignment(round_keys(t)[0], n, d)
 
-    block = n // args.procs
+    block = n // cfg.procs
 
     def block_rows(t: int, x, proc_id: int):
         """The (block, dim) coded vectors of this process's devices.
@@ -359,37 +584,52 @@ def _fleet_state(args):
         g = linreg_subset_grads(z[need], y[need], x)  # (B*d, dim)
         return jnp.mean(g.reshape(block, d, x.shape[0]), axis=1)
 
-    return z, y, round_assignment, block, block_rows
+    def coded_block(t: int, x, proc_id: int):
+        """``block_rows`` with this round's Com-LAD compression applied.
+
+        ``compress_rows`` slices device keys ``[proc_id*block, ...)`` out of
+        the same ``jax.random.split(k_comp, n)`` fan-out the engine uses, so
+        the block is bitwise the rows ``protocol_round`` would have produced
+        for these devices.  Identity specs pass through untouched.
+        """
+        rows = block_rows(t, x, proc_id)
+        if spec.name in ("none", "identity"):
+            return rows
+        return _comp().compress_rows(
+            spec, round_keys(t)[1], rows, offset=proc_id * block, n_total=n
+        )
+
+    return z, y, round_assignment, block, block_rows, coded_block
 
 
-def _server_decode_fn(args):
+def _server_decode_fn(cfg: FleetConfig):
     import jax.numpy as jnp  # noqa: F401
 
     from repro.core.byzantine import ProtocolConfig, make_server_fn
     from repro.core.participation import ParticipationSpec
 
-    cfg = ProtocolConfig(
-        n_devices=args.n_devices,
-        d=args.d,
+    pcfg = ProtocolConfig(
+        n_devices=cfg.n_devices,
+        d=cfg.d,
         method="lad",
-        aggregator=args.aggregator,
+        aggregator=cfg.aggregator,
         participation=ParticipationSpec(name="external"),
     )
-    return make_server_fn(cfg)
+    return make_server_fn(pcfg)
 
 
-def _maybe_init_distributed(args) -> bool:
+def _maybe_init_distributed(cfg: FleetConfig) -> bool:
     """Gated ``jax.distributed.initialize`` — identity layer only."""
-    if not args.distributed or args.procs < 2:
+    if not cfg.distributed or cfg.procs < 2:
         return False
     import jax
 
     try:
         jax.distributed.initialize(
-            coordinator_address=args.coordinator,
-            num_processes=args.procs,
-            process_id=args.proc_id,
-            initialization_timeout=int(args.init_timeout),
+            coordinator_address=cfg.coordinator,
+            num_processes=cfg.procs,
+            process_id=cfg.proc_id,
+            initialization_timeout=int(cfg.init_timeout),
         )
         return True
     except Exception as exc:  # pragma: no cover - environment-dependent
@@ -401,7 +641,9 @@ def _maybe_init_distributed(args) -> bool:
 # --------------------------------------------------------------------------
 # server checkpointing (crash recovery through repro/checkpoint)
 # --------------------------------------------------------------------------
-_CKPT_KEYS = ("x", "t", "losses", "n_report", "mask_hist", "wire", "rejoins", "lat")
+_CKPT_KEYS = ("x", "t", "losses", "n_report", "mask_hist", "wire", "wire_sent",
+              "wire_recv", "rejoins", "lat")
+_KIND_ORDER = tuple(sorted(KIND_NAMES.values()))
 
 
 def save_server_checkpoint(path, *, x, step, losses, n_report, mask_hist,
@@ -416,7 +658,9 @@ def save_server_checkpoint(path, *, x, step, losses, n_report, mask_hist,
         "losses": np.asarray(losses, np.float64),
         "n_report": np.asarray(n_report, np.int32),
         "mask_hist": np.asarray(mask_hist, np.int8).reshape(len(mask_hist), n),
-        "wire": np.asarray([wire[k] for k in WIRE_KEYS], np.int64),
+        "wire": np.asarray([wire["faults"][k] for k in WIRE_KEYS], np.int64),
+        "wire_sent": np.asarray([wire["sent"][k] for k in _KIND_ORDER], np.int64),
+        "wire_recv": np.asarray([wire["recv"][k] for k in _KIND_ORDER], np.int64),
         "rejoins": np.asarray(rejoins, np.int64),
         "lat": np.asarray(list(lat), np.float64),
     }
@@ -429,7 +673,15 @@ def load_server_checkpoint(path):
         return None, 0
     from repro.checkpoint import load_checkpoint
 
-    state, step = load_checkpoint(path, {k: 0 for k in _CKPT_KEYS})
+    try:
+        state, step = load_checkpoint(path, {k: 0 for k in _CKPT_KEYS})
+    except ValueError as exc:
+        # a checkpoint from an older wire schema (key-set mismatch): the
+        # traffic counters cannot be recovered, so start fresh rather than
+        # resume with silently wrong tallies
+        print(f"fleet: checkpoint {path} has an incompatible schema ({exc}); "
+              "starting fresh", file=sys.stderr)
+        return None, 0
     if int(state["t"]) != int(step):
         print(f"fleet: checkpoint {path} is torn (npz round {int(state['t'])} "
               f"!= sidecar step {step}); starting fresh", file=sys.stderr)
@@ -440,15 +692,21 @@ def load_server_checkpoint(path):
 # --------------------------------------------------------------------------
 # server (process 0)
 # --------------------------------------------------------------------------
-def run_server(args) -> dict:
+def run_server(cfg: FleetConfig) -> dict:
     import jax.numpy as jnp
 
     from repro.core.participation import mask_stats
     from repro.data.synthetic import linreg_loss
 
-    z, y, round_assignment, block, block_rows = _fleet_state(args)
-    server = _server_decode_fn(args)
-    n, dim, procs = args.n_devices, args.dim, args.procs
+    z, y, round_assignment, block, block_rows, coded_block = _fleet_state(cfg)
+    server = _server_decode_fn(cfg)
+    n, dim, procs = cfg.n_devices, cfg.dim, cfg.procs
+    spec = cfg.spec()
+    spec_text = spec.canonical()
+    identity = spec.name in ("none", "identity")
+    # identity keeps the plain dense ROWS frames byte-for-byte; any real
+    # compressor switches the uplink to the CROWS codec
+    rows_kind = K_ROWS if identity else K_CROWS
 
     # --- state (possibly resumed) --------------------------------------
     x = jnp.zeros((dim,), jnp.float32)
@@ -457,30 +715,42 @@ def run_server(args) -> dict:
     losses: list[float] = []
     n_report: list[int] = []
     mask_hist: list[list[int]] = []
-    wire = {k: 0 for k in WIRE_KEYS}
+    wire = new_wire_tallies()
     rejoins = 0
-    lat = collections.deque(maxlen=args.deadline_window)
-    if args.resume:
-        if not args.checkpoint:
+    lat = collections.deque(maxlen=cfg.deadline_window)
+    if cfg.resume:
+        if not cfg.checkpoint:
             raise SystemExit("--resume requires --checkpoint PATH")
-        state, step = load_server_checkpoint(args.checkpoint)
+        state, step = load_server_checkpoint(cfg.checkpoint)
         if state is not None:
             x = jnp.asarray(np.asarray(state["x"], np.float32))
             t0 = resumed_from = step
             losses = [float(v) for v in state["losses"]]
             n_report = [int(v) for v in state["n_report"]]
             mask_hist = [[int(b) for b in row] for row in state["mask_hist"]]
-            wire = {k: int(v) for k, v in zip(WIRE_KEYS, state["wire"])}
+            wire["faults"] = {k: int(v) for k, v in zip(WIRE_KEYS, state["wire"])}
+            wire["sent"] = {k: [int(a), int(b)]
+                            for k, (a, b) in zip(_KIND_ORDER, state["wire_sent"])}
+            wire["recv"] = {k: [int(a), int(b)]
+                            for k, (a, b) in zip(_KIND_ORDER, state["wire_recv"])}
             rejoins = int(state["rejoins"])
             lat.extend(float(v) for v in state["lat"])
-            print(f"fleet: resumed from {args.checkpoint} at round {t0}",
+            print(f"fleet: resumed from {cfg.checkpoint} at round {t0}",
                   file=sys.stderr)
+
+    def send(conn: socket.socket, kind: int, frame: bytes) -> bool:
+        try:
+            conn.sendall(frame)
+        except OSError:
+            return False
+        _tally(wire["sent"], kind, len(frame))
+        return True
 
     # --- connections ----------------------------------------------------
     lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
     lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-    lsock.bind((args.host, args.port))
-    lsock.listen(args.procs)
+    lsock.bind((cfg.host, cfg.port))
+    lsock.listen(cfg.procs)
     conns: dict[int, socket.socket] = {}
     sock2pid: dict[socket.socket, int] = {}  # O(1) reverse lookup (accept-time)
 
@@ -494,12 +764,13 @@ def run_server(args) -> dict:
             kind, payload = got
             if kind != K_HELLO:
                 raise FrameError("bad_hello")
-            pid = unpack_hello(payload, procs)
+            pid = unpack_hello(payload, procs, spec_text)
         except (FrameError, OSError) as exc:
             reason = exc.reason if isinstance(exc, FrameError) else "truncated"
-            wire[reason] += 1
+            wire["faults"][reason] += 1
             conn.close()
             return None
+        _tally(wire["recv"], K_HELLO, _FRAME.size + len(payload))
         conn.settimeout(None)
         old = conns.pop(pid, None)
         if old is not None:
@@ -521,7 +792,7 @@ def run_server(args) -> dict:
             except OSError:
                 pass
 
-    init_deadline = wallclock() + args.init_timeout
+    init_deadline = wallclock() + cfg.init_timeout
     while len(conns) < procs - 1:
         if wallclock() > init_deadline:
             raise TimeoutError(
@@ -537,24 +808,24 @@ def run_server(args) -> dict:
     lsock.settimeout(None)  # select() drives readiness from here on
 
     # --- rounds ----------------------------------------------------------
-    for t in range(t0, args.steps):
+    for t in range(t0, cfg.steps):
         round_frame = encode_frame(K_ROUND, pack_round(t, np.asarray(x)))
         for pid in list(conns):
-            try:
-                conns[pid].sendall(round_frame)
-            except OSError:
+            if not send(conns[pid], K_ROUND, round_frame):
                 drop_conn(pid)
 
-        # the server's own block always reports (it is the aggregation host)
+        # the server's own block always reports (it is the aggregation host);
+        # it applies the same Com-LAD compression as every worker so the N-row
+        # stack matches the engine's compressed stack bitwise
         transmitted = np.zeros((n, dim), np.float32)
         mask = np.zeros((n,), np.float32)
-        transmitted[:block] = np.asarray(block_rows(t, x, 0))
+        transmitted[:block] = np.asarray(coded_block(t, x, 0))
         mask[:block] = 1.0
 
         delivered: set[int] = {0}
         erased: set[int] = set()  # faulted THIS round: a rejoin can't undo it
         start = wallclock()
-        deadline = start + adaptive_deadline(lat, args.round_timeout, k=args.deadline_k)
+        deadline = start + adaptive_deadline(lat, cfg.round_timeout, k=cfg.deadline_k)
 
         while True:
             pending = [p for p in conns if p not in delivered and p not in erased]
@@ -577,9 +848,7 @@ def run_server(args) -> dict:
                     if pid is not None:
                         rejoins += 1
                         if pid not in erased:  # faulted rounds stay erased
-                            try:
-                                conns[pid].sendall(round_frame)
-                            except OSError:
+                            if not send(conns[pid], K_ROUND, round_frame):
                                 drop_conn(pid)
                     continue
                 pid = sock2pid.get(s)
@@ -589,7 +858,7 @@ def run_server(args) -> dict:
                 try:
                     got = recv_frame(s)
                 except FrameError as exc:
-                    wire[exc.reason] += 1
+                    wire["faults"][exc.reason] += 1
                     erased.add(pid)
                     drop_conn(pid)
                     continue
@@ -602,33 +871,43 @@ def run_server(args) -> dict:
                 if conns.get(pid) is s:
                     s.settimeout(None)
                 kind, payload = got
-                if kind != K_ROWS:
-                    wire["bad_kind"] += 1
+                if kind != rows_kind:
+                    # a dense ROWS frame under a compressed spec (or a CROWS
+                    # frame under identity) is as illegal as any unknown kind
+                    wire["faults"]["bad_kind"] += 1
                     erased.add(pid)
                     drop_conn(pid)
                     continue
+                _tally(wire["recv"], kind, _FRAME.size + len(payload))
                 try:
-                    tm_, pid_claim, rows = unpack_rows(payload, expect_shape=(block, dim))
+                    if identity:
+                        tm_, pid_claim, rows = unpack_rows(
+                            payload, expect_shape=(block, dim)
+                        )
+                    else:
+                        tm_, pid_claim, rows = unpack_crows(
+                            payload, spec, expect_shape=(block, dim)
+                        )
                 except FrameError as exc:
-                    wire[exc.reason] += 1
+                    wire["faults"][exc.reason] += 1
                     erased.add(pid)
                     drop_conn(pid)
                     continue
                 if pid_claim != pid:
-                    wire["pid_mismatch"] += 1
+                    wire["faults"]["pid_mismatch"] += 1
                     erased.add(pid)
                     drop_conn(pid)
                     continue
                 if tm_ < t:
-                    wire["stale"] += 1  # straggled round: discard, keep conn
+                    wire["faults"]["stale"] += 1  # straggled round: discard, keep conn
                     continue
                 if tm_ > t:
-                    wire["future_round"] += 1
+                    wire["faults"]["future_round"] += 1
                     erased.add(pid)
                     drop_conn(pid)
                     continue
                 if pid in delivered:
-                    wire["duplicate"] += 1  # retransmit: discard, keep conn
+                    wire["faults"]["duplicate"] += 1  # retransmit: discard, keep conn
                     continue
                 lo = pid * block
                 transmitted[lo : lo + block] = rows
@@ -641,17 +920,17 @@ def run_server(args) -> dict:
         decoded = server(
             jnp.asarray(transmitted) * pm[:, None], pm, ta.task_index.astype(jnp.int32)
         )
-        x = x - args.lr * float(n) * decoded
+        x = x - cfg.lr * float(n) * decoded
         losses.append(float(linreg_loss(z, y, x)))
         n_report.append(int(mask.sum()))
         mask_hist.append(mask.astype(int).tolist())
 
-        if args.checkpoint and args.checkpoint_every > 0 and (t + 1) % args.checkpoint_every == 0:
+        if cfg.checkpoint and cfg.checkpoint_every > 0 and (t + 1) % cfg.checkpoint_every == 0:
             save_server_checkpoint(
-                args.checkpoint, x=x, step=t + 1, losses=losses, n_report=n_report,
+                cfg.checkpoint, x=x, step=t + 1, losses=losses, n_report=n_report,
                 mask_hist=mask_hist, wire=wire, rejoins=rejoins, lat=lat, n=n,
             )
-        if 0 <= args.server_crash_after_round <= t:
+        if 0 <= cfg.server_crash_after_round <= t:
             # test hook: die AFTER the round completed (post-checkpoint when
             # due) — the crash-recovery conformance tests resume from here
             os._exit(23)
@@ -659,12 +938,31 @@ def run_server(args) -> dict:
     dead = sorted(set(range(1, procs)) - set(conns))  # before teardown
     done_frame = encode_frame(K_DONE)
     for pid in list(conns):
-        try:
-            conns[pid].sendall(done_frame)
-        except OSError:
-            pass
+        send(conns[pid], K_DONE, done_frame)
         drop_conn(pid)
     lsock.close()
+
+    # --- Com-LAD uplink accounting (measured vs predicted) ---------------
+    up_frames, up_bytes = wire["recv"][KIND_NAMES[rows_kind]]
+    rounds = max(1, len(losses))
+    frame_pred = predicted_uplink_frame_bytes(spec, block, dim)
+    comp = _comp()
+    hdr = _FRAME.size + _ROWS_HDR.size
+    body_overhead = (_ARR.size + 2 * _DIM.size) if identity else comp._CHDR.size
+    comlad = {
+        "spec": spec_text,
+        "uplink_frames": up_frames,
+        "uplink_bytes": up_bytes,
+        "uplink_bytes_per_round": up_bytes / rounds,
+        "frame_bytes_predicted": frame_pred,
+        "frame_bytes_measured": (up_bytes / up_frames) if up_frames else 0.0,
+        "wire_bits_predicted": comp.wire_bits(spec, dim),
+        "wire_bits_measured": (
+            (up_bytes / up_frames - hdr - body_overhead) * 8.0 / block
+            if up_frames
+            else 0.0
+        ),
+    }
     return {
         "losses": losses,
         "n_report": n_report,
@@ -672,28 +970,34 @@ def run_server(args) -> dict:
         "dead": dead,
         "final_loss": losses[-1],
         "wire": wire,
+        "comlad": comlad,
         "rejoins": rejoins,
         "resumed_from": resumed_from,
-        "stats": mask_stats(mask_hist, args.d),
+        "stats": mask_stats(mask_hist, cfg.d),
     }
 
 
 # --------------------------------------------------------------------------
 # worker (processes 1..P-1)
 # --------------------------------------------------------------------------
-def run_worker(args) -> dict:
+def run_worker(cfg: FleetConfig) -> dict:
     import jax.numpy as jnp
 
     from repro.launch.chaos import ChaosTransport
 
-    _, _, _, _, block_rows = _fleet_state(args)
-    chaos = ChaosTransport(args.chaos, args.proc_id) if args.chaos else None
-    stall_s = args.stall_seconds if args.stall_seconds > 0 else args.round_timeout * 4.0
-    hello = encode_frame(K_HELLO, pack_hello(args.proc_id))
+    _, _, _, block, _, coded_block = _fleet_state(cfg)
+    spec = cfg.spec()
+    identity = spec.name in ("none", "identity")
+    rows_kind = K_ROWS if identity else K_CROWS
+    chaos = ChaosTransport(cfg.chaos, cfg.proc_id) if cfg.chaos else None
+    stall_s = cfg.stall_seconds if cfg.stall_seconds > 0 else cfg.round_timeout * 4.0
+    hello = encode_frame(K_HELLO, pack_hello(cfg.proc_id, spec.canonical()))
+    sent_frames = 0
+    sent_bytes = 0
 
     sock: socket.socket | None = None
     ever_connected = False
-    give_up = wallclock() + args.init_timeout
+    give_up = wallclock() + cfg.init_timeout
     backoff = 0.05
     rounds = 0
     rejoins = 0
@@ -707,7 +1011,7 @@ def run_worker(args) -> dict:
             except OSError:
                 pass
         sock = None
-        give_up = wallclock() + args.rejoin_timeout
+        give_up = wallclock() + cfg.rejoin_timeout
 
     while not done:
         if sock is None:
@@ -718,7 +1022,7 @@ def run_worker(args) -> dict:
                     "fleet worker: server never accepted before --init-timeout"
                 )
             try:
-                sock = socket.create_connection((args.host, args.port), timeout=2.0)
+                sock = socket.create_connection((cfg.host, cfg.port), timeout=2.0)
                 sock.settimeout(None)
                 sock.sendall(hello)
             except OSError:
@@ -747,18 +1051,21 @@ def run_worker(args) -> dict:
             lost()
             continue
         try:
-            t, xb = unpack_round(payload, args.dim)
+            t, xb = unpack_round(payload, cfg.dim)
         except FrameError:
             lost()
             continue
-        if 0 <= args.die_after_round <= t:
+        if 0 <= cfg.die_after_round <= t:
             # simulate a crashed host mid-round: vanish without replying
             sock.close()
             os._exit(17)
-        if 0 <= args.stall_after_round <= t:
+        if 0 <= cfg.stall_after_round <= t:
             time.sleep(stall_s)  # straggle past the deadline
-        rows = np.asarray(block_rows(t, jnp.asarray(xb), args.proc_id))
-        frame = encode_frame(K_ROWS, pack_rows(t, args.proc_id, rows))
+        rows = np.asarray(coded_block(t, jnp.asarray(xb), cfg.proc_id))
+        if identity:
+            frame = encode_frame(K_ROWS, pack_rows(t, cfg.proc_id, rows))
+        else:
+            frame = encode_frame(K_CROWS, pack_crows(t, cfg.proc_id, spec, rows))
         if chaos is None:
             try:
                 sock.sendall(frame)
@@ -770,73 +1077,40 @@ def run_worker(args) -> dict:
             if status == "partition":
                 lost()
                 time.sleep(arg)  # dark for the partition window, then rejoin
-                give_up = wallclock() + args.rejoin_timeout
+                give_up = wallclock() + cfg.rejoin_timeout
                 continue
             if status == "error":
                 lost()
                 continue
+        sent_frames += 1
+        sent_bytes += len(frame)
         rounds += 1
     if sock is not None:
         sock.close()
-    return {"proc": args.proc_id, "rounds": rounds, "rejoins": rejoins}
+    return {
+        "proc": cfg.proc_id,
+        "rounds": rounds,
+        "rejoins": rejoins,
+        "spec": spec.canonical(),
+        "sent": {KIND_NAMES[rows_kind]: [sent_frames, sent_bytes]},
+    }
 
 
 # --------------------------------------------------------------------------
 # CLI
 # --------------------------------------------------------------------------
 def build_parser() -> argparse.ArgumentParser:
-    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    p.add_argument("--procs", type=int, default=1, help="fleet size (processes)")
-    p.add_argument("--proc-id", type=int, default=0, help="this process (0 = server)")
-    p.add_argument("--host", default="127.0.0.1")
-    p.add_argument("--port", type=int, default=57313, help="server gather port")
-    p.add_argument("--coordinator", default="127.0.0.1:57312",
-                   help="jax.distributed coordinator address")
-    p.add_argument("--distributed", action=argparse.BooleanOptionalAction,
-                   default=True, help="run jax.distributed.initialize (identity)")
-    p.add_argument("--n-devices", type=int, default=6)
-    p.add_argument("--d", type=int, default=3, help="computational load / redundancy")
-    p.add_argument("--dim", type=int, default=8)
-    p.add_argument("--sigma-h", type=float, default=0.3)
-    p.add_argument("--steps", type=int, default=6)
-    p.add_argument("--lr", type=float, default=1e-5)
-    p.add_argument("--seed", type=int, default=0)
-    p.add_argument("--aggregator", default="decode",
-                   help="masked server rule (decode = cyclic K-of-N erasure decode)")
-    p.add_argument("--round-timeout", type=float, default=10.0,
-                   help="floor of the adaptive per-round deadline")
-    p.add_argument("--deadline-k", type=float, default=4.0,
-                   help="adaptive deadline spread multiplier (median + k*MAD)")
-    p.add_argument("--deadline-window", type=int, default=32,
-                   help="sliding window of honest latencies the deadline sees")
-    p.add_argument("--init-timeout", type=float, default=60.0)
-    p.add_argument("--rejoin-timeout", type=float, default=30.0,
-                   help="how long a disconnected worker keeps retrying")
-    p.add_argument("--checkpoint", default="",
-                   help="server state checkpoint path prefix (empty = off)")
-    p.add_argument("--checkpoint-every", type=int, default=0,
-                   help="persist server state every K rounds (0 = off)")
-    p.add_argument("--resume", action="store_true",
-                   help="resume the server from --checkpoint if present")
-    p.add_argument("--chaos", default="",
-                   help="fault-injection schedule (JSON or path; launch/chaos.py)")
-    p.add_argument("--die-after-round", type=int, default=-1,
-                   help="test hook: worker hard-exits when it sees this round")
-    p.add_argument("--stall-after-round", type=int, default=-1,
-                   help="test hook: worker sleeps past the deadline from this round")
-    p.add_argument("--stall-seconds", type=float, default=-1.0,
-                   help="injected stall length (default: 4x --round-timeout)")
-    p.add_argument("--server-crash-after-round", type=int, default=-1,
-                   help="test hook: server hard-exits after finishing this round")
-    return p
+    """The CLI — generated from :class:`FleetConfig`'s fields."""
+    return FleetConfig.build_parser()
 
 
 def main(argv=None) -> int:
-    args = build_parser().parse_args(argv)
-    if not (0 <= args.proc_id < args.procs):
-        raise SystemExit(f"--proc-id {args.proc_id} out of range for --procs {args.procs}")
-    _maybe_init_distributed(args)
-    out = run_server(args) if args.proc_id == 0 else run_worker(args)
+    cfg = FleetConfig.from_argv(argv)
+    if not (0 <= cfg.proc_id < cfg.procs):
+        raise SystemExit(f"--proc-id {cfg.proc_id} out of range for --procs {cfg.procs}")
+    cfg.spec()  # fail fast on an unparseable --compress before any socket work
+    _maybe_init_distributed(cfg)
+    out = run_server(cfg) if cfg.proc_id == 0 else run_worker(cfg)
     print("RESULT::" + json.dumps(out), flush=True)
     # hard exit: a killed sibling can leave the jax.distributed heartbeat
     # wedged; results are already on stdout and buffers are flushed

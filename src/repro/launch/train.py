@@ -86,8 +86,8 @@ def make_protocol(tcfg: TrainConfig, mesh) -> BlockedProtocol:
         trim_frac=tcfg.trim_frac,
         n_byz=tcfg.n_byz,
         attack=attack_lib.AttackSpec(name=tcfg.attack, n_byz=tcfg.n_byz),
-        compression=comp_lib.CompressionSpec(
-            name=tcfg.compression, q_hat_frac=tcfg.q_hat_frac, levels=tcfg.quant_levels
+        compression=comp_lib.spec_from(
+            tcfg.compression, q_hat_frac=tcfg.q_hat_frac, levels=tcfg.quant_levels
         ),
         server=tcfg.server,
         honest_mean=(tcfg.protocol == "none"),
@@ -117,8 +117,8 @@ def make_round_config(tcfg: TrainConfig, n_subsets: int) -> ProtocolConfig:
         trim_frac=tcfg.trim_frac,
         n_byz=tcfg.n_byz,
         attack=attack_lib.AttackSpec(name=tcfg.attack, n_byz=tcfg.n_byz),
-        compression=comp_lib.CompressionSpec(
-            name=tcfg.compression, q_hat_frac=tcfg.q_hat_frac, levels=tcfg.quant_levels
+        compression=comp_lib.spec_from(
+            tcfg.compression, q_hat_frac=tcfg.q_hat_frac, levels=tcfg.quant_levels
         ),
     )
 

@@ -173,18 +173,22 @@ def test_fleet_chaos_committed_baseline():
     assert {"healthy", "corrupt", "partition_rejoin"} <= names
 
 
-def _fleet_chaos_base():
-    from repro.launch.fleet import WIRE_KEYS
+def _empty_wire():
+    from repro.launch.fleet import new_wire_tallies
 
+    return new_wire_tallies()
+
+
+def _fleet_chaos_base():
     def row(name, **kw):
         r = {"name": name, "final_loss": 1.0, "rel_dev": 0.0, "server_rc": 0,
-             "dead": [], "rejoins": 0, "wire": {k: 0 for k in WIRE_KEYS},
+             "dead": [], "rejoins": 0, "wire": _empty_wire(),
              "n_report_min": 4, "within_margin": True}
         r.update(kw)
         return r
 
     return {
-        "schema_version": 1, "procs": 3, "n_devices": 6, "d": 3, "margin": 2,
+        "schema_version": 2, "procs": 3, "n_devices": 6, "d": 3, "margin": 2,
         "dim": 8, "steps": 8, "round_timeout": 2.5,
         "baseline_final_loss": 1.0, "healthy_identical": True,
         "rows": [row("healthy"), row("corrupt", rejoins=2),
@@ -203,11 +207,80 @@ def test_validate_fleet_chaos_json_rejects_drift():
         {"rows": base["rows"][:2]},  # partition_rejoin case went missing
         {"rows": [dict(r, server_rc=1) for r in base["rows"]]},  # a crash
         {"rows": [dict(r, rel_dev=0.5) for r in base["rows"]]},  # envelope
-        {"rows": [dict(r, wire={}) for r in base["rows"]]},  # wire keys
+        {"rows": [dict(r, wire={}) for r in base["rows"]]},  # wire schema
+        {"rows": [dict(r, wire=dict(_empty_wire(), faults={}))
+                  for r in base["rows"]]},  # fault keys
+        {"rows": [dict(r, wire=dict(_empty_wire(), sent={"rows": [1, 0]}))
+                  for r in base["rows"]]},  # frames without bytes
     ):
         bad = {**_fleet_chaos_base(), **breakage}
         with pytest.raises(AssertionError):
             bench_smoke.validate_fleet_chaos_json(bad)
+
+
+def test_fleet_comlad_committed_baseline():
+    """The committed BENCH_fleet_comlad.json still records the Com-LAD-over-
+    the-wire claims: --compress identity was byte-identical to the plain
+    fleet, quant:4 cut measured uplink bytes/round >= 4x inside the
+    erasure-decode envelope, and the byz-chaos case landed as tallied
+    erasures.  (The fan-out that *regenerates* it is the CI fleet-chaos
+    job's ``--suite comlad``.)"""
+    payload = bench_smoke.smoke_fleet_comlad()
+    assert payload["identity_identical"] is True
+    assert payload["quant4_ratio"] >= 4.0
+    names = {r["name"] for r in payload["rows"]}
+    assert {"identity", "quant4", "quant4_chaos_byz"} <= names
+
+
+def _fleet_comlad_base():
+    from repro.launch.fleet import WIRE_KEYS
+
+    def row(name, spec, ratio, min_ratio, **kw):
+        r = {"name": name, "spec": spec, "final_loss": 1.0, "rel_dev": 0.0,
+             "uplink_bytes_per_round": 100.0, "uplink_frames": 16,
+             "uplink_bytes": 800, "ratio_vs_identity": ratio,
+             "frame_bytes_predicted": 50.0, "frame_bytes_measured": 50.0,
+             "wire_bits_predicted": 64.0, "wire_bits_measured": 64.0,
+             "server_rc": 0, "faults": {k: 0 for k in WIRE_KEYS},
+             "within_envelope": True, "min_ratio": min_ratio}
+        r.update(kw)
+        return r
+
+    return {
+        "schema_version": 1, "procs": 3, "n_devices": 6, "d": 3,
+        "dim": 64, "steps": 8, "lr": 1e-6, "round_timeout": 2.5,
+        "baseline_final_loss": 1.0, "baseline_uplink_bytes_per_round": 544.0,
+        "identity_identical": True, "quant4_ratio": 5.44,
+        "rows": [
+            row("identity", "identity", 1.0, 1.0),
+            row("quant4", "quant:4", 5.44, 4.0),
+            row("quant4_chaos_byz", "quant:4", 6.0, 0.0,
+                within_envelope=False,
+                faults={k: 0 for k in WIRE_KEYS} | {"bad_payload": 2,
+                                                    "bad_crc": 1}),
+        ],
+    }
+
+
+def test_validate_fleet_comlad_json_rejects_drift():
+    bench_smoke.validate_fleet_comlad_json(_fleet_comlad_base())
+    base = _fleet_comlad_base()
+    for breakage in (
+        {"schema_version": 999},
+        {"identity_identical": False},  # byte-identity claim violated
+        {"quant4_ratio": 3.0},  # the >= 4x headline claim violated
+        {"rows": []},
+        {"rows": base["rows"][:2]},  # the chaos case went missing
+        {"rows": [dict(r, server_rc=1) for r in base["rows"]]},  # a crash
+        {"rows": [dict(r, rel_dev=0.5) for r in base["rows"]]},  # envelope
+        {"rows": [dict(r, spec="quant:zero") for r in base["rows"]]},
+        {"rows": [dict(r, ratio_vs_identity=0.5, min_ratio=1.0)
+                  for r in base["rows"]]},  # frontier claim violated
+        {"rows": [dict(r, faults={}) for r in base["rows"]]},  # fault keys
+    ):
+        bad = {**_fleet_comlad_base(), **breakage}
+        with pytest.raises(AssertionError):
+            bench_smoke.validate_fleet_comlad_json(bad)
 
 
 def _scaling_row(devices, warm_s=1.0, lanes_per_s=64.0, speedup=1.0):

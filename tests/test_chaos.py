@@ -11,11 +11,11 @@ per-round erasures and the worker rejoins; an all-healthy chaos fleet is
 byte-identical to the plain fleet; a partitioned worker heals.  Ports are
 unique per scenario (no reuse with test_fleet.py: 5746x there, 5748x here).
 """
+import dataclasses
 import json
 import os
 import subprocess
 import sys
-import time
 
 import pytest
 
@@ -74,7 +74,8 @@ def test_every_corruption_class_has_a_reason():
     assert _reason(huge) == "oversize"
     # every reason the codec can emit is a tallied wire key
     for r in ("bad_magic", "bad_version", "bad_kind", "bad_crc", "oversize",
-              "truncated", "bad_payload", "wrong_shape", "bad_hello"):
+              "truncated", "bad_payload", "wrong_shape", "bad_hello",
+              "spec_mismatch"):
         assert r in F.WIRE_KEYS
 
 
@@ -92,6 +93,96 @@ def test_array_payload_validation():
     with pytest.raises(F.FrameError) as e:
         F.unpack_hello(b"xx", procs=3)
     assert e.value.reason == "bad_hello"
+
+
+def test_hello_negotiates_the_compression_spec():
+    """HELLO carries the worker's canonical CompressionSpec; the server
+    rejects a worker whose spelling disagrees with its own (spec_mismatch)
+    instead of silently mis-decoding its frames."""
+    assert F.unpack_hello(F.pack_hello(1, "quant:4"), procs=3, spec="quant:4") == 1
+    assert F.unpack_hello(F.pack_hello(2), procs=3) == 2
+    with pytest.raises(F.FrameError) as e:
+        F.unpack_hello(F.pack_hello(1, "quant:4"), procs=3, spec="identity")
+    assert e.value.reason == "spec_mismatch"
+    # a non-ascii / truncated spec field is malformed, not a mismatch
+    with pytest.raises(F.FrameError) as e:
+        F.unpack_hello(F.pack_hello(1, "quant:4")[:-2], procs=3, spec="quant:4")
+    assert e.value.reason == "bad_hello"
+
+
+def test_crows_codec_roundtrip_and_validation():
+    """The compressed-rows frame round-trips bit-exactly for the quantized
+    codec, and malformed compressed payloads map to the same tallied
+    reasons as the dense path (wrong_shape / bad_payload), never a crash."""
+    from repro.core import compression as comp
+
+    spec = comp.CompressionSpec.parse("quant:4")
+    rng = np.random.default_rng(0)
+    rows = rng.standard_normal((2, 16)).astype(np.float32)
+    payload = F.pack_crows(3, 1, spec, rows)
+    t, pid, out = F.unpack_crows(payload, spec, (2, 16))
+    assert (t, pid) == (3, 1)
+    assert out.shape == (2, 16) and out.dtype == np.float32
+    # quantized values land exactly on the scale/levels lattice
+    levels = np.abs(rows).max(axis=1, keepdims=True) / 4
+    assert np.allclose(out, np.round(out / np.where(levels > 0, levels, 1))
+                       * np.where(levels > 0, levels, 1), atol=0)
+    with pytest.raises(F.FrameError) as e:
+        F.unpack_crows(payload, spec, (3, 16))  # well-formed, wrong shape
+    assert e.value.reason == "wrong_shape"
+    with pytest.raises(F.FrameError) as e:
+        F.unpack_crows(payload[:-1], spec, (2, 16))  # truncated body
+    assert e.value.reason == "bad_payload"
+    with pytest.raises(F.FrameError) as e:
+        F.unpack_crows(payload[: F._ROWS_HDR.size + 2], spec, (2, 16))
+    assert e.value.reason == "bad_payload"
+
+
+def test_byz_payload_reseals_crc_but_codec_rejects():
+    """``byz_payload`` is the Byzantine (not random) corruption: it rewrites
+    payload bytes and re-seals the CRC, so the frame layer accepts it and
+    the *codec-level* validation must be what rejects the rows."""
+    # the chaos layer's stdlib-only frame mirror must match the real header
+    assert C._FRAME.format == F._FRAME.format
+    assert C._FRAME.size == F._FRAME.size
+    frame = _good_rows_frame()
+    for t in range(4):
+        forged = C.byz_payload_bytes(frame, C.fault_rng(6, 1, t, "byz_payload"))
+        assert forged != frame
+        # CRC layer accepts the forged frame...
+        kind, payload = F.decode_frame_bytes(forged)
+        assert kind == F.K_ROWS
+        # ...codec validation rejects it with a tallied reason
+        with pytest.raises(F.FrameError) as e:
+            F.unpack_rows(payload, (2, 8))
+        # a forged dense header can also trip the element-count guard
+        assert e.value.reason in ("wrong_shape", "bad_payload", "oversize"), (
+            e.value.reason
+        )
+    # deterministic per (seed, proc, round, op), like every chaos op
+    a = C.byz_payload_bytes(frame, C.fault_rng(6, 1, 0, "byz_payload"))
+    b = C.byz_payload_bytes(frame, C.fault_rng(6, 1, 0, "byz_payload"))
+    assert a == b
+
+
+def test_fleet_config_argv_roundtrip():
+    """FleetConfig is the one spelling of fleet configuration: the generated
+    parser and ``to_argv`` are exact inverses, and defaults come from the
+    dataclass fields (empty argv == default config)."""
+    assert F.FleetConfig.from_argv([]) == F.FleetConfig()
+    assert F.FleetConfig().to_argv() == []
+    cfg = F.FleetConfig(procs=3, proc_id=2, dim=64, lr=1e-6, distributed=False,
+                        compress="quant:4", chaos='{"seed": 1, "faults": []}',
+                        resume=True, round_timeout=2.5)
+    argv = cfg.to_argv()
+    assert "--compress" in argv and "--no-distributed" in argv
+    assert F.FleetConfig.from_argv(argv) == cfg
+    # defaults are omitted from the argv (minimal reproduction)
+    assert "--port" not in argv and "--steps" not in argv
+    with pytest.raises(SystemExit):
+        F.FleetConfig.from_argv(["--not-a-flag"])
+    with pytest.raises(ValueError):
+        F.FleetConfig(compress="quant:nope").spec()
 
 
 # --------------------------------------------------------------------------
@@ -206,19 +297,19 @@ def test_mask_stats_counts_margin():
 # --------------------------------------------------------------------------
 # slow tier: real 3-process fleets under seeded schedules
 # --------------------------------------------------------------------------
-def _run_fleet(port, extra_by_proc, steps=8, round_timeout=3.0):
+def _run_fleet(port, extra_by_proc, steps=8, round_timeout=3.0, **kw):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    base = [
-        sys.executable, "-m", "repro.launch.fleet",
-        "--procs", "3", "--n-devices", "6", "--d", "3", "--dim", "8",
-        "--steps", str(steps), "--lr", "1e-5", "--seed", "0",
-        "--round-timeout", str(round_timeout),
-        "--port", str(port), "--no-distributed",
-    ]
+    base_cfg = F.FleetConfig(
+        procs=3, n_devices=6, d=3, dim=kw.pop("dim", 8), steps=steps,
+        lr=kw.pop("lr", 1e-5), seed=0, round_timeout=round_timeout,
+        port=port, distributed=False, **kw,
+    )
     procs = [
         subprocess.Popen(
-            base + ["--proc-id", str(pid)] + extra_by_proc.get(pid, []),
+            [sys.executable, "-m", "repro.launch.fleet",
+             *dataclasses.replace(base_cfg, proc_id=pid).to_argv()]
+            + extra_by_proc.get(pid, []),
             env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
         )
         for pid in range(3)
@@ -246,7 +337,7 @@ def test_corrupt_frames_become_per_round_erasures_then_rejoin():
         assert res["mask_hist"][t] == [1, 1, 1, 1, 0, 0], (t, res["mask_hist"])
     assert res["mask_hist"][-1] == [1, 1, 1, 1, 1, 1], res["mask_hist"]
     assert res["dead"] == [] and res["rejoins"] >= 1
-    assert sum(res["wire"].values()) >= 2  # both bad frames were tallied
+    assert sum(res["wire"]["faults"].values()) >= 2  # both bad frames tallied
     assert res["stats"]["max_erasures"] <= res["stats"]["margin"]
     assert res["losses"][-1] < res["losses"][0]
 
@@ -284,3 +375,25 @@ def test_partition_then_rejoin_heals_within_margin():
     assert res["dead"] == [] and res["rejoins"] >= 1
     assert res["stats"]["max_erasures"] <= res["stats"]["margin"]
     assert res["stats"]["within_margin_rounds"] == res["stats"]["rounds"]
+
+
+@pytest.mark.slow
+def test_byz_payload_against_compressed_fleet_becomes_erasures():
+    """Worker 1 ships CRC-valid-but-forged compressed frames on rounds 2-3
+    (the ``byz_payload`` chaos op): the server's codec-level validation
+    rejects each as ``wrong_shape``/``bad_payload``, the rounds are erased
+    within the margin, the worker rejoins, and the server exits cleanly —
+    a Byzantine payload against the compressed uplink is an erasure, never
+    a crash or a poisoned decode."""
+    chaos = json.dumps({"seed": 6, "faults": [
+        {"op": "byz_payload", "proc": 1, "rounds": [2, 3]}]})
+    res, _, _, _ = _run_fleet(
+        57489, {1: ["--chaos", chaos]}, compress="quant:4")
+    faults = res["wire"]["faults"]
+    assert faults["wrong_shape"] + faults["bad_payload"] >= 2, faults
+    assert faults["bad_crc"] == 0, faults  # the CRC was re-sealed: codec caught it
+    for t in (2, 3):
+        assert res["mask_hist"][t][2:4] == [0, 0], (t, res["mask_hist"])
+    assert res["mask_hist"][-1] == [1, 1, 1, 1, 1, 1], res["mask_hist"]
+    assert res["dead"] == [] and res["rejoins"] >= 1
+    assert res["stats"]["max_erasures"] <= res["stats"]["margin"]

@@ -88,3 +88,135 @@ def test_quant_wire_bits():
     spec = comp.CompressionSpec("quant", levels=16, chunk=1024)
     bits = comp.wire_bits(spec, 1 << 20)
     assert bits < 0.25 * 32 * (1 << 20)  # ~6 bits/coord + scales << fp32
+
+
+# --------------------------------------------------------------------------
+# registry grammar: one spelling for compression everywhere
+# --------------------------------------------------------------------------
+def test_parse_canonical_roundtrip():
+    """``CompressionSpec.parse`` and ``canonical()`` are exact inverses on
+    every registry spelling — the fleet CLI, scenario rows, and the wire
+    negotiation all share this grammar."""
+    for text, name, canonical in [
+        ("identity", "none", "identity"),
+        ("quant:4", "quant", "quant:4"),
+        ("quant:16:64", "quant", "quant:16:64"),
+        ("randk:8", "rand_sparse", "randk:8"),
+        ("randk:0.3", "rand_sparse", "randk:0.3"),
+        ("randk_shared:16", "rand_sparse_shared", "randk_shared:16"),
+        ("topk:8", "top_k", "topk:8"),
+    ]:
+        spec = comp.CompressionSpec.parse(text)
+        assert spec.name == name, (text, spec)
+        assert spec.canonical() == canonical, (text, spec.canonical())
+        assert comp.CompressionSpec.parse(spec.canonical()) == spec
+    # spec_from accepts both the bare legacy name and the registry spelling
+    assert comp.spec_from("quant", levels=8).levels == 8
+    assert comp.spec_from("quant:8") == comp.CompressionSpec.parse("quant:8")
+    for bad in ("", "magic", "quant", "quant:0", "quant:4:0", "randk:-1",
+                "randk:1.5", "topk:0", "identity:4"):
+        with pytest.raises(ValueError):
+            comp.CompressionSpec.parse(bad)
+
+
+def test_kept_absolute_count_wins():
+    spec = comp.CompressionSpec.parse("randk:16")
+    assert spec.q_hat == 16
+    assert spec.kept(64) == 16
+    assert spec.kept(8) == 8  # clamped to the vector length
+    frac = comp.CompressionSpec.parse("randk:0.25")
+    assert frac.kept(64) == 16
+
+
+# --------------------------------------------------------------------------
+# payload codec: pack/unpack roundtrip properties (fleet CROWS frames)
+# --------------------------------------------------------------------------
+@given(st.integers(1, 5), st.integers(4, 64), st.integers(1, 32),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_quant_payload_roundtrip_bit_exact(r, q, levels, seed):
+    """Bit-packed quantized payloads reconstruct the compressor's dense
+    output exactly: per-row scales recover losslessly and every level fits
+    the declared bit width."""
+    spec = comp.CompressionSpec("quant", levels=levels, chunk=1024)
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (r, q), dtype=jnp.float32)
+    rows = np.asarray(comp.compress_rows(spec, key, g, n_total=r))
+    buf = comp.pack_payload(spec, rows)
+    assert len(buf) == comp._CHDR.size + r * comp._quant_geometry(spec, q)[2]
+    assert len(buf) == comp.packed_nbytes(spec, rows.shape)
+    out = comp.unpack_payload(spec, buf, (r, q))
+    assert out.tobytes() == rows.tobytes()  # bit-exact, scales included
+    bits = comp.quant_level_bits(levels)
+    assert 2 * levels < 2 ** bits <= 4 * levels + 1
+
+
+@given(st.integers(1, 4), st.integers(4, 64), st.integers(1, 16),
+       st.integers(0, 2**31 - 1), st.sampled_from(["rand_sparse",
+                                                   "rand_sparse_shared",
+                                                   "top_k"]))
+@settings(max_examples=40, deadline=None)
+def test_sparse_payload_roundtrip(r, q, k, seed, name):
+    """Index+value sparse payloads reconstruct the compressor's dense output
+    (array-equal; a dropped -0.0 reconstructs as +0.0), with sorted
+    strictly-increasing in-bounds indices."""
+    spec = comp.CompressionSpec(name, q_hat=min(k, q))
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (r, q), dtype=jnp.float32)
+    rows = np.asarray(comp.compress_rows(spec, key, g, n_total=r))
+    buf = comp.pack_payload(spec, rows)
+    out = comp.unpack_payload(spec, buf, (r, q))
+    assert np.array_equal(out, rows)  # == treats a dropped -0.0 as +0.0
+    # index invariants, straight from the wire encoding
+    off = comp._CHDR.size
+    for _ in range(r):
+        (count,) = comp._CNT.unpack_from(buf, off)
+        idx = np.frombuffer(buf, ">u4", count, off + comp._CNT.size)
+        assert count <= spec.kept(q)
+        assert np.all(idx < q)
+        assert np.all(np.diff(idx.astype(np.int64)) > 0)
+        off += comp._CNT.size + count * 8
+    assert off == len(buf)
+
+
+@given(st.integers(1, 3), st.integers(4, 48), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_payload_rejects_truncation_and_trailing(r, q, seed):
+    spec = comp.CompressionSpec("quant", levels=4)
+    key = jax.random.PRNGKey(seed)
+    rows = np.asarray(comp.compress_rows(
+        spec, key, jax.random.normal(key, (r, q), dtype=jnp.float32), n_total=r))
+    buf = comp.pack_payload(spec, rows)
+    with pytest.raises(comp.PayloadError) as e:
+        comp.unpack_payload(spec, buf, (r + 1, q))
+    assert e.value.reason == "wrong_shape"
+    with pytest.raises(comp.PayloadError) as e:
+        comp.unpack_payload(spec, buf[:-1], (r, q))
+    assert e.value.reason == "bad_payload"
+    with pytest.raises(comp.PayloadError) as e:
+        comp.unpack_payload(spec, buf + b"\x00", (r, q))
+    assert e.value.reason == "bad_payload"
+
+
+# --------------------------------------------------------------------------
+# engine/fleet conformance: one compression stage, bit-identical both paths
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [10, 16, 32])
+@pytest.mark.parametrize("text", ["identity", "quant:4", "quant:16",
+                                  "randk:4", "randk_shared:4", "topk:4"])
+def test_worker_compression_matches_engine_bitwise(n, text):
+    """``compress_rows`` on a worker's block slice (offset = pid * block)
+    equals the engine's full-fan-out compression on those same rows, bit for
+    bit — the structural guarantee that makes a compressed fleet's decode
+    input identical to the in-engine Com-LAD path."""
+    spec = comp.CompressionSpec.parse(text)
+    q = 24
+    key = jax.random.fold_in(jax.random.PRNGKey(0), 3)  # a round key
+    k_comp = jax.random.split(key, 4)[3]
+    rows = jax.random.normal(jax.random.PRNGKey(n), (n, q), dtype=jnp.float32)
+    full = np.asarray(comp.compress_rows(spec, k_comp, rows, n_total=n))
+    block = n // 2
+    for pid, sl in enumerate((slice(0, block), slice(block, n))):
+        part = np.asarray(comp.compress_rows(
+            spec, k_comp, rows[sl], offset=pid * block, n_total=n))
+        assert part.tobytes() == full[sl].tobytes(), (text, n, pid)

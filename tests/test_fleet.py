@@ -12,12 +12,15 @@ block is 2 rows = erasure_margin(3) — within the margin, so the cyclic
 K-of-N decode keeps recovering the full gradient mean and training
 converges.
 """
+import dataclasses
 import json
 import os
 import subprocess
 import sys
 
 import pytest
+
+from repro.launch.fleet import FleetConfig, predicted_uplink_frame_bytes
 
 pytestmark = pytest.mark.slow
 
@@ -27,31 +30,37 @@ _PORT_REF = (57465, None)  # None coordinator = --no-distributed (host-only)
 _PORT_RESUME_A = (57467, None)
 _PORT_RESUME_B = (57469, None)
 _PORT_CRASH = (57471, None)
+_PORT_IDENT = (57473, None)
+_PORT_QUANT = (57475, None)
 
 
-def _fleet_cmd(ports, steps, round_timeout):
+def _fleet_cfg(ports, steps, round_timeout, **kw) -> FleetConfig:
+    """The test geometry as a typed config (the subprocess argv is
+    ``cfg.to_argv()`` — flags are never hand-synthesized)."""
     gather, coord = ports
-    base = [
-        sys.executable, "-m", "repro.launch.fleet",
-        "--procs", "3", "--n-devices", "6", "--d", "3", "--dim", "8",
-        "--steps", str(steps), "--lr", "1e-5", "--seed", "0",
-        "--round-timeout", str(round_timeout),
-        "--port", str(gather),
-    ]
-    if coord is None:
-        base += ["--no-distributed"]
-    else:
-        base += ["--coordinator", f"127.0.0.1:{coord}"]
-    return base
+    return FleetConfig(
+        procs=3, n_devices=6, d=3, dim=kw.pop("dim", 8), steps=steps,
+        lr=kw.pop("lr", 1e-5), seed=0, round_timeout=round_timeout,
+        port=gather, distributed=coord is not None,
+        coordinator=f"127.0.0.1:{coord}" if coord is not None else "127.0.0.1:57312",
+        **kw,
+    )
 
 
-def _run_fleet(ports, extra_by_proc, steps=8, round_timeout=15.0):
+def _fleet_cmd(ports, steps, round_timeout, **kw):
+    cfg = _fleet_cfg(ports, steps, round_timeout, **kw)
+    return [sys.executable, "-m", "repro.launch.fleet", *cfg.to_argv()]
+
+
+def _run_fleet(ports, extra_by_proc, steps=8, round_timeout=15.0, **kw):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    base = _fleet_cmd(ports, steps, round_timeout)
+    base_cfg = _fleet_cfg(ports, steps, round_timeout, **kw)
     procs = [
         subprocess.Popen(
-            base + ["--proc-id", str(pid)] + extra_by_proc.get(pid, []),
+            [sys.executable, "-m", "repro.launch.fleet",
+             *dataclasses.replace(base_cfg, proc_id=pid).to_argv()]
+            + extra_by_proc.get(pid, []),
             env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
         )
         for pid in range(3)
@@ -61,14 +70,14 @@ def _run_fleet(ports, extra_by_proc, steps=8, round_timeout=15.0):
     assert procs[0].returncode == 0, server_err[-4000:]
     lines = [l for l in server_out.splitlines() if l.startswith("RESULT::")]
     assert lines, (server_out, server_err[-2000:])
-    return json.loads(lines[0][len("RESULT::"):]), procs, outs
+    return json.loads(lines[0][len("RESULT::"):]), lines[0], procs, outs
 
 
 @pytest.fixture(scope="module")
 def killed_worker():
     """Worker 2 hard-exits when it sees round 2: rounds 0-1 are full, rounds
     2+ run with its 2-row block permanently erased."""
-    res, procs, outs = _run_fleet(
+    res, _, procs, outs = _run_fleet(
         _PORT_KILL, {2: ["--die-after-round", "2"]}
     )
     assert procs[2].returncode == 17, outs[2][1][-2000:]  # the kill hook fired
@@ -98,7 +107,7 @@ def test_stalled_worker_is_per_round_erasure():
     stall length is the real ``--stall-seconds`` flag (6 s > every remaining
     2 s deadline), and the short ``--rejoin-timeout`` proves a stalled-then-
     expired worker exits quietly instead of hanging the harness."""
-    res, procs, outs = _run_fleet(
+    res, _, procs, outs = _run_fleet(
         _PORT_STALL,
         {1: ["--stall-after-round", "2", "--stall-seconds", "6.0",
              "--rejoin-timeout", "3.0"]},
@@ -115,9 +124,9 @@ def test_stalled_worker_is_per_round_erasure():
 def uninterrupted_reference():
     """Plain 8-step fleet (host-only transport): the trajectory every
     resume scenario must reproduce exactly."""
-    res, _, _ = _run_fleet(_PORT_REF, {})
+    res, line, _, _ = _run_fleet(_PORT_REF, {})
     assert res["dead"] == [] and res["n_report"] == [6] * 8
-    return res
+    return res, line
 
 
 def test_resume_from_checkpoint_matches_uninterrupted(
@@ -129,18 +138,18 @@ def test_resume_from_checkpoint_matches_uninterrupted(
     window) round-trips through the checkpoint, and the round keys are
     derived from (seed, t) alone."""
     ck = str(tmp_path / "fleet_ck")
-    res_a, _, _ = _run_fleet(
+    res_a, _, _, _ = _run_fleet(
         _PORT_RESUME_A,
         {0: ["--checkpoint", ck, "--checkpoint-every", "2"]},
         steps=4,
     )
     assert res_a["n_report"] == [6] * 4
-    res_b, _, _ = _run_fleet(
+    res_b, _, _, _ = _run_fleet(
         _PORT_RESUME_B,
         {0: ["--checkpoint", ck, "--resume"]},
         steps=8,
     )
-    ref = uninterrupted_reference
+    ref, _ = uninterrupted_reference
     assert res_b["resumed_from"] == 4
     assert res_b["losses"] == ref["losses"]
     assert res_b["n_report"] == ref["n_report"]
@@ -179,8 +188,44 @@ def test_server_crash_recovery_mid_training(uninterrupted_reference, tmp_path):
     lines = [l for l in out2[0].splitlines() if l.startswith("RESULT::")]
     assert lines, (out2[0], out2[1][-2000:])
     res = json.loads(lines[0][len("RESULT::"):])
-    ref = uninterrupted_reference
+    ref, _ = uninterrupted_reference
     assert res["resumed_from"] == 4
     assert res["losses"] == ref["losses"]
     assert res["final_loss"] == ref["final_loss"]
     assert res["dead"] == []
+
+
+def test_compress_identity_is_byte_identical_to_default(uninterrupted_reference):
+    """An explicit ``--compress identity`` fleet ships the same dense K_ROWS
+    frames as a fleet with no compression flag at all: the entire RESULT
+    line — losses, masks, wire tallies, comlad byte accounting — is
+    byte-identical (the PR-8 wire format is untouched by the negotiation)."""
+    _, ref_line = uninterrupted_reference
+    extra = ["--compress", "identity"]
+    _, line, _, _ = _run_fleet(_PORT_IDENT, {0: extra, 1: extra, 2: extra})
+    assert line == ref_line
+
+
+def test_compressed_fleet_quant4_cuts_uplink_bytes():
+    """A ``--compress quant:4`` fleet at dim=64 ships bit-packed CROWS frames:
+    measured uplink bytes/frame equals the codec's predicted size exactly,
+    the reduction vs the (predicted) dense identity frame is >= 4x, and
+    training still converges — the paper's communication-efficiency claim on
+    the real TCP data plane."""
+    from repro.core.compression import CompressionSpec
+
+    res, _, _, _ = _run_fleet(
+        _PORT_QUANT, {}, dim=64, lr=1e-6, compress="quant:4")
+    com = res["comlad"]
+    assert com["spec"] == "quant:4"
+    assert com["uplink_frames"] == 2 * 8  # 2 workers x 8 rounds, no faults
+    assert com["frame_bytes_measured"] == com["frame_bytes_predicted"]
+    block = 6 // 3
+    dense = predicted_uplink_frame_bytes(
+        CompressionSpec.parse("identity"), block, 64)
+    assert dense / com["frame_bytes_measured"] >= 4.0, (dense, com)
+    # observed traffic tallies agree with the comlad accounting
+    frames, nbytes = res["wire"]["recv"]["crows"]
+    assert (frames, nbytes) == (com["uplink_frames"], com["uplink_bytes"])
+    assert res["wire"]["recv"]["rows"] == [0, 0]
+    assert res["losses"][-1] < res["losses"][0]
