@@ -255,6 +255,7 @@ def _timed_sharded_rows(
 GRID_SHARDED_SCHEMA_VERSION = 1
 LM_ENGINE_SCHEMA_VERSION = 1
 PARTICIPATION_SCHEMA_VERSION = 1
+ZOO_SERVE_SCHEMA_VERSION = 1
 
 
 def _write_json(payload: dict, path: str) -> None:
@@ -500,6 +501,160 @@ def participation_bench(
     return payload
 
 
+def write_zoo_serve_json(payload: dict, path: str) -> None:
+    _write_json(payload, path)
+
+
+ZOO_SERVE_ROBUST_DELTA_BOUND = 0.25  # nats; robust-vs-clean eval NLL gap
+
+
+def zoo_serve(
+    families=None,
+    steps: int = 40,
+    n_subsets: int = 8,
+    per_subset: int = 2,
+    seq_len: int = 16,
+    n_byz: int = 3,
+    lr: float = 1e-2,
+    serve_batch: int = 4,
+    new_tokens: int = 8,
+    out_path: str = "benchmarks/out/BENCH_zoo_serve.json",
+):
+    """The train-to-serve loop over the architecture zoo, measured.
+
+    For every zoo family (``scenarios.ZOO_FAMILIES``) three engine-path
+    trainers run on identical heterogeneous-LM data through
+    ``build_engine_step``:
+
+      * **clean**      — ``protocol="none"`` (honest mean, no attack);
+      * **robust**     — ``protocol="lad"`` (d=2 cyclic code + CWTM) under a
+        ``n_byz``-of-N sign-flip attack — the paper's pipeline at
+        whole-model granularity;
+      * **undefended** — ``protocol="plain"`` (plain mean) under the SAME
+        attack.  At ``n_byz=3`` of 8 the sign-flip (coeff -2) drives the
+        mean to ``-g/8``: the undefended run *ascends*.
+
+    Each records eval NLL on a held-out batch; the robust-vs-clean delta is
+    asserted within ``ZOO_SERVE_ROBUST_DELTA_BOUND`` while the undefended
+    delta is recorded (and must exceed the robust delta).  The robust
+    checkpoint then closes the loop: ``Trainer.save`` ->
+    ``checkpoint.restore_for_serving`` (asserted bitwise) ->
+    ``launch.serve.serve_traffic`` prefill + greedy decode, recording
+    tokens/sec.  Rows land in ``BENCH_zoo_serve.json`` (schema validated by
+    scripts/bench_smoke.py; drift-tested in tier-1, committed baseline
+    checked in CI's determinism job).
+    """
+    import os
+    import tempfile
+
+    import numpy as np
+
+    from repro.checkpoint import restore_for_serving
+    from repro.configs.base import TrainConfig
+    from repro.data.synthetic import lm_batch_for_devices
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.serve import serve_traffic
+    from repro.launch.train import Trainer
+
+    families = list(families if families is not None else scenarios.ZOO_FAMILIES)
+    mesh = make_host_mesh(1, 1)
+    ckpt_dir = tempfile.mkdtemp(prefix="zoo_serve_")
+    rows = []
+    for fam in families:
+        cfg = scenarios.zoo_arch(fam)
+
+        def flat_batch(seed, cfg=cfg):
+            b = lm_batch_for_devices(
+                jax.random.PRNGKey(seed), cfg.vocab, n_subsets=n_subsets,
+                per_subset=per_subset, seq_len=seq_len, sigma_h=0.5,
+            )
+            out = {k: v.reshape((-1,) + v.shape[2:]) for k, v in b.items()}
+            if cfg.family in ("vlm", "audio"):
+                enc = cfg.encoder
+                out["frontend"] = jax.random.normal(
+                    jax.random.fold_in(jax.random.PRNGKey(seed), 7),
+                    (n_subsets * per_subset, enc.n_frontend_tokens, enc.d_frontend),
+                )
+            return out
+
+        train_b, eval_b = flat_batch(0), flat_batch(1)
+        nll = {}
+        robust_tr = None
+        for label, protocol, agg, byz in (
+            ("clean", "none", "mean", 0),
+            ("robust", "lad", "cwtm", n_byz),
+            ("undefended", "plain", "mean", n_byz),
+        ):
+            tcfg = TrainConfig(
+                arch=cfg.name, protocol=protocol, protocol_impl="engine",
+                n_subsets=n_subsets, d=2, aggregator=agg, trim_frac=0.375,
+                n_byz=byz, attack="sign_flip", steps=steps, lr=lr,
+                remat=False, seed=0,
+            )
+            tr = Trainer(cfg=cfg, tcfg=tcfg, mesh=mesh)
+            tr.run([train_b] * steps, log_every=steps)
+            nll[label] = tr.eval_loss(eval_b)
+            if label == "robust":
+                robust_tr = tr
+        robust_delta = nll["robust"] - nll["clean"]
+        undefended_delta = nll["undefended"] - nll["clean"]
+        assert robust_delta <= ZOO_SERVE_ROBUST_DELTA_BOUND, (
+            f"{fam}: robust checkpoint degraded by {robust_delta:.3f} nats "
+            f"(> {ZOO_SERVE_ROBUST_DELTA_BOUND}) under the attack"
+        )
+        assert undefended_delta > robust_delta, (fam, nll)
+
+        # close the loop: checkpoint -> restore -> serve
+        path = os.path.join(ckpt_dir, fam)
+        robust_tr.save(path)
+        params, specs, step = restore_for_serving(path, cfg)
+        assert step == steps
+        roundtrip = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(robust_tr.params), jax.tree.leaves(params))
+        )
+        assert roundtrip, f"{fam}: checkpoint roundtrip not bitwise"
+        served = serve_traffic(
+            cfg, params, specs, mesh,
+            eval_b["tokens"][:serve_batch],
+            frontend=(eval_b["frontend"][:serve_batch]
+                      if "frontend" in eval_b else None),
+            new_tokens=new_tokens,
+        )
+        assert served["pos"] == seq_len + new_tokens, served["pos"]
+        rows.append({
+            "family": fam,
+            "arch": cfg.name,
+            "n_layers": cfg.n_layers,
+            "params": int(scenarios._lm_fns(cfg)[0].size),
+            "nll_clean": float(nll["clean"]),
+            "nll_robust": float(nll["robust"]),
+            "nll_undefended": float(nll["undefended"]),
+            "robust_delta": float(robust_delta),
+            "undefended_delta": float(undefended_delta),
+            "roundtrip_bitwise": bool(roundtrip),
+            "prefill_tokens_per_s": float(served["prefill_tokens_per_s"]),
+            "decode_tokens_per_s": float(served["decode_tokens_per_s"]),
+            "decoded_tokens": int(served["tokens"].shape[1]),
+        })
+    payload = {
+        "schema_version": ZOO_SERVE_SCHEMA_VERSION,
+        "device_count": jax.device_count(),
+        "steps": steps,
+        "n_subsets": n_subsets,
+        "per_subset": per_subset,
+        "seq_len": seq_len,
+        "n_byz": n_byz,
+        "attack": "sign_flip",
+        "lr": lr,
+        "new_tokens": new_tokens,
+        "robust_delta_bound": ZOO_SERVE_ROBUST_DELTA_BOUND,
+        "rows": rows,
+    }
+    write_zoo_serve_json(payload, out_path)
+    return payload
+
+
 def grid_timing(steps: int = 300, kernel_steps: int = 60):
     """End-to-end wall-clock of the whole-grid on-device engine vs the PR-1
     per-scenario dispatch loop, on the full ``section7_grid()`` — for the
@@ -565,4 +720,5 @@ FIGURES = {
     "grid_sharded": grid_sharded,
     "lm_engine": lm_engine,
     "participation": participation_bench,
+    "zoo_serve": zoo_serve,
 }

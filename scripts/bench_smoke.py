@@ -465,6 +465,87 @@ def smoke_fleet_comlad() -> dict:
     return committed
 
 
+def validate_zoo_serve_json(payload: dict) -> None:
+    """Assert the BENCH_zoo_serve.json schema AND the train-to-serve claims
+    it records (see paper_figures.ZOO_SERVE_SCHEMA_VERSION): per zoo family,
+    the robust-under-attack checkpoint's eval-NLL delta stays within the
+    recorded bound, the undefended delta exceeds it, the checkpoint
+    round-trips bitwise into the serving path, and serving moved tokens."""
+    import math
+
+    from benchmarks.paper_figures import ZOO_SERVE_SCHEMA_VERSION
+
+    assert isinstance(payload, dict), type(payload)
+    assert payload.get("schema_version") == ZOO_SERVE_SCHEMA_VERSION, (
+        payload.get("schema_version")
+    )
+    for field in ("device_count", "steps", "n_subsets", "per_subset",
+                  "seq_len", "n_byz", "new_tokens"):
+        v = payload.get(field)
+        assert isinstance(v, int) and v >= 1, (field, v)
+    for field in ("lr", "robust_delta_bound"):
+        v = payload.get(field)
+        assert isinstance(v, float) and v > 0, (field, v)
+    assert isinstance(payload.get("attack"), str) and payload["attack"], payload
+    bound = payload["robust_delta_bound"]
+    rows = payload.get("rows")
+    assert isinstance(rows, list) and rows, "rows must be a non-empty list"
+    families = set()
+    for row in rows:
+        assert set(row) == {
+            "family", "arch", "n_layers", "params", "nll_clean", "nll_robust",
+            "nll_undefended", "robust_delta", "undefended_delta",
+            "roundtrip_bitwise", "prefill_tokens_per_s", "decode_tokens_per_s",
+            "decoded_tokens",
+        }, sorted(row)
+        assert isinstance(row["family"], str) and row["family"], row
+        assert isinstance(row["arch"], str) and row["arch"], row
+        for f in ("n_layers", "params", "decoded_tokens"):
+            assert isinstance(row[f], int) and row[f] >= 1, (f, row)
+        for f in ("nll_clean", "nll_robust", "nll_undefended",
+                  "robust_delta", "undefended_delta"):
+            assert isinstance(row[f], float) and math.isfinite(row[f]), (f, row)
+        for f in ("nll_clean", "nll_robust", "nll_undefended"):
+            assert row[f] > 0, (f, row)
+        # the train-to-serve contract, row by row
+        assert row["robust_delta"] <= bound, row
+        assert row["undefended_delta"] > row["robust_delta"], row
+        assert row["roundtrip_bitwise"] is True, row
+        for f in ("prefill_tokens_per_s", "decode_tokens_per_s"):
+            assert isinstance(row[f], float) and row[f] > 0, (f, row)
+        assert row["decoded_tokens"] == payload["new_tokens"], row
+        families.add(row["family"])
+    assert len(families) == len(rows), "duplicate family rows"
+
+
+def smoke_zoo_serve() -> dict:
+    """Run the train-to-serve loop on two zoo families at tiny step counts —
+    including its robust-delta, bitwise-roundtrip and serving assertions —
+    then validate the committed full-matrix BENCH_zoo_serve.json baseline
+    (>= 4 families; the full matrix itself is nightly work, not tier-1's)."""
+    from benchmarks.paper_figures import zoo_serve
+
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "BENCH_zoo_serve.json")
+        payload_out = zoo_serve(
+            families=("transformer", "rwkv"), steps=8, out_path=path,
+        )
+        with open(path) as f:
+            payload = json.load(f)
+    assert payload == json.loads(json.dumps(payload_out)), "round-trip drift"
+    validate_zoo_serve_json(payload)
+
+    baseline = os.path.join(REPO_ROOT, "benchmarks", "out",
+                            "BENCH_zoo_serve.json")
+    with open(baseline) as f:
+        committed = json.load(f)
+    validate_zoo_serve_json(committed)
+    assert len(committed["rows"]) >= 4, (
+        "committed BENCH_zoo_serve.json must cover >= 4 zoo families"
+    )
+    return payload
+
+
 def smoke_grid_timing() -> list:
     """Miniature whole-grid-vs-per-scenario timing (with its bitwise check),
     on both the XLA and the kernel backend."""
@@ -519,6 +600,11 @@ def main() -> int:
     print(
         f"fleet comlad smoke: {len(comlad['rows'])} committed cases, "
         f"quant4_ratio={comlad['quant4_ratio']:.2f}x, schema + claims OK"
+    )
+    zoo = smoke_zoo_serve()
+    print(
+        f"zoo serve smoke: {len(zoo['rows'])} families trained-under-attack, "
+        f"restored and served + committed baseline, schema + claims OK"
     )
     return 0
 

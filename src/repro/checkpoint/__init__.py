@@ -1,3 +1,7 @@
-from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint.checkpoint import (
+    load_checkpoint,
+    restore_for_serving,
+    save_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "load_checkpoint"]
+__all__ = ["save_checkpoint", "load_checkpoint", "restore_for_serving"]

@@ -80,3 +80,33 @@ def load_checkpoint(path: str, like) -> tuple[Any, int]:
     ]
     leaves = [restored_flat[p] for p in paths]
     return jax.tree_util.tree_unflatten(treedef, leaves), int(meta["step"])
+
+
+def restore_for_serving(path: str, cfg) -> tuple[Any, Any, int]:
+    """Restore a training checkpoint straight into the serving path.
+
+    Rebuilds the params structure of ``cfg`` via ``jax.eval_shape`` (no
+    weight allocation — the ``like`` tree is shapes only), loads the npz
+    into it and returns ``(params, specs, step)`` ready for
+    ``launch.serve.build_prefill_fn`` / ``build_decode_fn``.  This is the
+    consumer half of the train-to-serve loop: a trainer saves with
+    ``save_checkpoint``; a serving process needs only the ``ArchConfig`` and
+    this path to come up.
+    """
+    import jax
+
+    from repro import models
+
+    # the logical-spec tree is plain python data produced during tracing —
+    # not a valid eval_shape output — so it rides a side channel (the same
+    # pattern as launch.dryrun._shapes_and_specs)
+    captured = {}
+
+    def only_params(k):
+        p, s = models.init(k, cfg)
+        captured["specs"] = s
+        return p
+
+    like = jax.eval_shape(only_params, jax.random.PRNGKey(0))
+    params, step = load_checkpoint(path, like)
+    return params, captured["specs"], step

@@ -103,6 +103,19 @@ class ArchConfig:
                 f"{self.name}: n_layers={self.n_layers} not divisible by "
                 f"period length {len(self.period)}"
             )
+        for i, spec in enumerate(self.period):
+            # rwkv_ffn carries token-shift state in the block's RWKVState;
+            # every other mixer caches a KVCache/MambaState at serving time,
+            # which has no ffn_x_prev slot to thread it through — reject the
+            # combination up front instead of an AttributeError mid-decode
+            if spec.mlp == "rwkv_ffn" and spec.mixer != "rwkv":
+                raise ValueError(
+                    f"{self.name}: period[{i}] combines mlp='rwkv_ffn' with "
+                    f"mixer='{spec.mixer}' — the rwkv channel-mix FFN needs "
+                    "the RWKVState serving cache of the 'rwkv' mixer (other "
+                    "mixers' caches carry no ffn token-shift slot); use "
+                    "mlp='dense'/'moe' here or mixer='rwkv'"
+                )
 
     @property
     def n_periods(self) -> int:

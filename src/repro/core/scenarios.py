@@ -73,6 +73,10 @@ __all__ = [
     "lm_sweep",
     "run_lm_scenario",
     "run_lm_grid",
+    "ZOO_FAMILIES",
+    "zoo_arch",
+    "zoo_sweep",
+    "run_zoo_sweep",
     "grid_finals",
 ]
 
@@ -796,7 +800,7 @@ def lm_arch():
     )
 
 
-@functools.lru_cache(maxsize=4)
+@functools.lru_cache(maxsize=16)
 def _lm_fns(arch):
     """(x0, subset_grad_fn, loss_fn) of the LM problem for one architecture.
 
@@ -807,6 +811,11 @@ def _lm_fns(arch):
     ``launch.train.build_engine_step`` pipeline, realized as a grid lane.
     lru-cached so the returned callables have stable identities: they key the
     engine's compiled-program cache (zero warm compiles across sweeps).
+    (maxsize covers the whole ``ZOO_FAMILIES`` zoo at once.)
+
+    Frontend-bearing families (vlm / audio) train on a 3-tuple ``data`` —
+    ``(tokens, labels, frontend)`` — which the engine threads through
+    unchanged as a runtime pytree operand; everything else keeps the 2-tuple.
     """
     from repro import models
     from repro.core.coding import flatten_pytree, unflatten_pytree
@@ -814,31 +823,40 @@ def _lm_fns(arch):
     params0, specs = models.init(jax.random.PRNGKey(0), arch)
     params0 = jax.tree.map(lambda a: a.astype(jnp.float32), params0)
     x0, flat_spec = flatten_pytree(params0)
+    has_frontend = arch.family in ("vlm", "audio")
+
+    def _unpack(data):
+        if has_frontend:
+            return data  # (tokens, labels, frontend)
+        tokens, labels = data
+        return tokens, labels, None
 
     def lm_subset_grads(data, x):
-        tokens, labels = data  # (N, rows, S)
+        tokens, labels, frontend = _unpack(data)  # leaves (N, rows, ...)
         params = unflatten_pytree(x, flat_spec)
 
-        def one(sub_tokens, sub_labels):
+        def one(sub_batch):
             def lf(pp):
-                loss, _ = models.loss_fn(
-                    pp, specs, arch,
-                    {"tokens": sub_tokens, "labels": sub_labels}, remat=False,
-                )
+                loss, _ = models.loss_fn(pp, specs, arch, sub_batch, remat=False)
                 return loss
 
             flat, _ = flatten_pytree(jax.grad(lf)(params))
             return flat
 
-        return jax.vmap(one)(tokens, labels)
+        batch = {"tokens": tokens, "labels": labels}
+        if has_frontend:
+            batch["frontend"] = frontend
+        return jax.vmap(one)(batch)
 
     def lm_loss(data, x):
-        tokens, labels = data
+        tokens, labels, frontend = _unpack(data)
         params = unflatten_pytree(x, flat_spec)
         batch = {
             "tokens": tokens.reshape((-1,) + tokens.shape[2:]),
             "labels": labels.reshape((-1,) + labels.shape[2:]),
         }
+        if has_frontend:
+            batch["frontend"] = frontend.reshape((-1,) + frontend.shape[2:])
         loss, _ = models.loss_fn(params, specs, arch, batch, remat=False)
         return loss
 
@@ -859,12 +877,24 @@ engine_lib.register_program_cache(
 def _lm_problem(arch, *, seed: int, n_subsets: int, sigma_h: float,
                 per_subset: int, seq_len: int):
     """The shared heterogeneous-LM data of one bucket: ``(tokens, labels)``
-    with ``(N, per_subset, seq_len)`` leaves (see ``data.synthetic``)."""
+    with ``(N, per_subset, seq_len)`` leaves (see ``data.synthetic``).  For
+    frontend-bearing archs (vlm / audio) a third leaf carries the stub
+    modality embeddings, ``(N, per_subset, n_frontend_tokens, d_frontend)``,
+    drawn deterministically from a fold of the same seed."""
     batch = lm_batch_for_devices(
         jax.random.PRNGKey(seed), arch.vocab, n_subsets=n_subsets,
         per_subset=per_subset, seq_len=seq_len, sigma_h=sigma_h,
     )
-    return batch["tokens"], batch["labels"]
+    data = (batch["tokens"], batch["labels"])
+    if arch.family in ("vlm", "audio"):
+        enc = arch.encoder
+        frontend = jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(seed), 7),
+            (n_subsets, per_subset, enc.n_frontend_tokens, enc.d_frontend),
+            dtype=jnp.float32,
+        )
+        data = data + (frontend,)
+    return data
 
 
 def lm_sweep(
@@ -1030,6 +1060,135 @@ def run_lm_grid(
             )
         )
     return {s.name: out[s.name] for s in scns}
+
+
+# --------------------------------------------------------------------------
+# The architecture zoo: the LM sweep generalized over an architecture axis.
+# Each family is a tiny (d_model=32, vocab=64) but structurally faithful
+# member of the assigned model zoo; every family's rows ride the identical
+# grid / bucketing / sharding machinery via ``run_lm_grid(rows, arch=...)``.
+# --------------------------------------------------------------------------
+
+ZOO_FAMILIES = ("transformer", "jamba", "rwkv", "moe", "swa", "cross", "audio")
+
+
+@functools.lru_cache(maxsize=None)
+def zoo_arch(family: str):
+    """The tiny-but-faithful ``ArchConfig`` of one zoo family.
+
+    Structure is preserved — jamba keeps its 8-block 1:7 attn:mamba period
+    with MoE on even positions, rwkv its token-shift FFN, cross/audio their
+    frontend encoders, swa a non-power-of-two sliding window (ring-buffer
+    alignment coverage) — while dims shrink to the ``lm_arch`` scale so a
+    whole family sweep trains in seconds on CPU.  lru-cached for the same
+    reason as ``lm_arch``: one config identity per family keys the
+    ``_lm_fns`` / engine program caches.
+    """
+    from repro.configs.archs import ARCHS, reduced
+    from repro.configs.base import (
+        BlockSpec, EncoderConfig, MambaConfig, RWKVConfig,
+    )
+
+    if family == "transformer":
+        return lm_arch()  # shared identity with the plain LM sweeps
+    tiny = dict(d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
+                d_ff=64, vocab=64)
+    if family == "swa":
+        # non-power-of-two window that does NOT divide typical seq lens —
+        # exercises the prefill ring-buffer modular alignment
+        return lm_arch().scaled(
+            name="zoo-swa", period=(BlockSpec(sliding_window=6),),
+        )
+    if family == "jamba":
+        base = reduced(ARCHS["jamba-1.5-large-398b"])
+        return base.scaled(
+            name="zoo-jamba", n_layers=8, **tiny,
+            moe=dataclasses.replace(base.moe, d_ff_expert=32),
+            mamba=MambaConfig(d_state=4, d_conv=4, expand=2),
+        )
+    if family == "rwkv":
+        return reduced(ARCHS["rwkv6-1.6b"]).scaled(
+            name="zoo-rwkv", n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+            head_dim=16, d_ff=64, vocab=64,
+            rwkv=RWKVConfig(head_dim=16, decay_lora=8),
+        )
+    if family == "moe":
+        base = reduced(ARCHS["granite-moe-3b-a800m"])
+        return base.scaled(
+            name="zoo-moe", n_layers=1, **tiny,
+            moe=dataclasses.replace(base.moe, d_ff_expert=32),
+        )
+    if family == "cross":
+        return reduced(ARCHS["llama-3.2-vision-90b"]).scaled(
+            name="zoo-cross", n_layers=5, **tiny,
+            encoder=EncoderConfig(n_frontend_tokens=8, d_frontend=16,
+                                  n_encoder_layers=0),
+        )
+    if family == "audio":
+        return reduced(ARCHS["whisper-small"]).scaled(
+            name="zoo-audio", n_layers=2, **tiny,
+            encoder=EncoderConfig(n_frontend_tokens=8, d_frontend=16,
+                                  n_encoder_layers=1),
+        )
+    raise ValueError(f"unknown zoo family {family!r} (have {ZOO_FAMILIES})")
+
+
+def zoo_sweep(
+    families: Sequence[str] = ZOO_FAMILIES,
+    methods: Sequence[tuple[str, int]] = (("lad", 2), ("plain", 1)),
+    attacks: Sequence[str] = ("sign_flip",),
+    aggregators: Sequence[str] = ("cwtm",),
+    compressors: Sequence[str] = ("none",),
+    *,
+    n_devices: int = 8,
+    n_byz: int = 2,
+    sigma_h: float = 0.5,
+    **kw,
+) -> dict[str, list[Scenario]]:
+    """The zoo evaluation matrix: ``lm_sweep``'s method x attack x aggregator
+    x compressor rows, replicated per architecture family and renamed
+    ``zoo/<family>/...``.  Families stay separate lists (one grid call per
+    family — buckets cannot mix architectures: the iterate dimension P
+    differs), but within a family every row rides ``run_lm_grid`` unchanged.
+    """
+    out: dict[str, list[Scenario]] = {}
+    for fam in families:
+        zoo_arch(fam)  # validate the family name up front
+        rows = lm_sweep(
+            methods, attacks, aggregators, compressors,
+            n_devices=n_devices, n_byz=n_byz, sigma_h=sigma_h, **kw,
+        )
+        out[fam] = [
+            dataclasses.replace(s, name=f"zoo/{fam}/" + s.name[len("lm/"):])
+            for s in rows
+        ]
+    return out
+
+
+def run_zoo_sweep(
+    steps: int,
+    *,
+    families: Sequence[str] = ZOO_FAMILIES,
+    sweep: dict[str, list[Scenario]] | None = None,
+    seed: int = 0,
+    per_subset: int = 2,
+    seq_len: int = 16,
+    mode: str = "grid",
+    **grid_kw,
+) -> dict[str, dict[str, TrajectoryResult]]:
+    """Train the whole zoo under attack: one ``run_lm_grid`` per family with
+    that family's ``zoo_arch``.  Returns ``{family: {row_name: trajectory}}``;
+    per-lane results are bitwise equal to standalone ``run_lm_scenario(...,
+    arch=zoo_arch(family))`` (same ``_run_bucket`` contract as the LM grid).
+    """
+    sweep = sweep if sweep is not None else zoo_sweep(families)
+    return {
+        fam: run_lm_grid(
+            rows, steps, arch=zoo_arch(fam), seed=seed,
+            per_subset=per_subset, seq_len=seq_len, mode=mode, **grid_kw,
+        )
+        for fam, rows in sweep.items()
+    }
 
 
 def grid_finals(results: dict[str, TrajectoryResult]) -> dict[str, dict[str, float]]:

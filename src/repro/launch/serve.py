@@ -62,6 +62,8 @@ def decode_state_pspecs(state_shapes: Any, mesh) -> Any:
             return P(None, None, c_ax, h_ax, None)
         if field == "length":
             return P(None)
+        if field == "pos":  # scalar decode position counter
+            return P()
         if field == "h":  # mamba (P, B, di, ds)
             _, b, di, _ = shp
             return P(None, dax if _div(b, mesh, dax) else None,
@@ -95,14 +97,70 @@ def build_decode_fn(cfg: ArchConfig, mesh, param_shardings, specs):
     def fn(params, token, state):
         return models.decode_step(params, specs, cfg, token, state)
 
-    return fn
+    return jax.jit(fn)
 
 
-def build_prefill_fn(cfg: ArchConfig, mesh, specs):
+def build_prefill_fn(cfg: ArchConfig, mesh, specs, *, capacity: int | None = None):
+    """jit'd prefill (full forward + cache build).  ``capacity`` reserves
+    ring headroom so decode can run past the prompt without evicting row 0."""
+
     def fn(params, tokens, frontend=None):
-        return models.prefill(params, specs, cfg, tokens, frontend=frontend)
+        return models.prefill(params, specs, cfg, tokens, frontend=frontend,
+                              capacity=capacity)
 
-    return fn
+    return jax.jit(fn)
+
+
+def serve_traffic(
+    cfg: ArchConfig,
+    params,
+    specs,
+    mesh,
+    tokens: jax.Array,
+    *,
+    frontend: jax.Array | None = None,
+    new_tokens: int = 8,
+):
+    """Serve one batch of traffic: prefill the prompt, then greedy-decode
+    ``new_tokens`` steps through the jitted serve fns.
+
+    Returns ``{prefill_s, decode_s, prefill_tokens_per_s,
+    decode_tokens_per_s, tokens (B, new_tokens), pos}`` — the measured
+    serving record of the train-to-serve loop (``benchmarks/paper_figures.
+    zoo_serve``).  Timings are warm: each fn runs once for compile before
+    the measured pass.
+    """
+    import time
+
+    b, s = tokens.shape
+    prefill_fn = build_prefill_fn(cfg, mesh, specs, capacity=s + new_tokens)
+    decode_fn = build_decode_fn(cfg, mesh, None, specs)
+
+    jax.block_until_ready(prefill_fn(params, tokens, frontend))  # compile
+    t0 = time.perf_counter()
+    logits, state = prefill_fn(params, tokens, frontend)
+    jax.block_until_ready(logits)
+    prefill_s = time.perf_counter() - t0
+
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(decode_fn(params, tok, state))  # compile
+    out = []
+    t0 = time.perf_counter()
+    for _ in range(new_tokens):
+        logits, state = decode_fn(params, tok, state)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    decode_s = time.perf_counter() - t0
+
+    return {
+        "prefill_s": prefill_s,
+        "decode_s": decode_s,
+        "prefill_tokens_per_s": b * s / max(prefill_s, 1e-9),
+        "decode_tokens_per_s": b * new_tokens / max(decode_s, 1e-9),
+        "tokens": jnp.concatenate(out, axis=1),
+        "pos": int(state["pos"]),
+    }
 
 
 def serve_input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh):

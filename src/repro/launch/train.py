@@ -555,6 +555,7 @@ class Trainer:
                 else jax.jit(step_fn, donate_argnums=(0, 1))
             )
             self._bsharding = NamedSharding(self.mesh, bspec)
+            self.step = 0
 
     def run(self, batches, log_every: int = 10):
         history = []
@@ -570,6 +571,27 @@ class Trainer:
                 self.params, self.opt_state, loss, metrics = self._jit_step(
                     self.params, self.opt_state, batch, jnp.asarray(i, jnp.int32)
                 )
+                self.step = i + 1
                 if i % log_every == 0 or i == self.tcfg.steps - 1:
                     history.append((i, float(loss)))
         return history
+
+    def save(self, path: str) -> None:
+        """Write the current params as a serving-consumable checkpoint.
+
+        The producer half of the train-to-serve loop: the file restores via
+        ``repro.checkpoint.restore_for_serving(path, self.cfg)`` (bitwise for
+        fp32 params — asserted by tests/test_serving.py) straight into
+        ``launch.serve``'s prefill/decode fns.
+        """
+        from repro.checkpoint import save_checkpoint
+
+        save_checkpoint(path, self.params, step=self.step, specs=self.specs)
+
+    def eval_loss(self, batch) -> float:
+        """Next-token NLL of the current params on one (clean) batch — the
+        quality probe the zoo-serve bench records per checkpoint."""
+        with self.mesh:
+            loss, _ = models.loss_fn(self.params, self.specs, self.cfg, batch,
+                                     remat=False)
+        return float(loss)

@@ -70,7 +70,9 @@ def sinusoidal_positions(seq: int, d_model: int) -> jax.Array:
     angle = pos / jnp.power(10000.0, dim / d_model)
     pe = jnp.zeros((seq, d_model), dtype=jnp.float32)
     pe = pe.at[:, 0::2].set(jnp.sin(angle))
-    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    # odd d_model: the cos half has floor(d/2) slots but angle has ceil(d/2)
+    # columns — the last sin frequency carries no cos partner
+    pe = pe.at[:, 1::2].set(jnp.cos(angle[:, : d_model // 2]))
     return pe
 
 

@@ -58,10 +58,14 @@ def block_cache_init(cfg: ArchConfig, spec: BlockSpec, batch: int, seq_len: int,
 
 
 def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int, filled: int | None = None):
-    """Full decode state: per-block caches stacked over periods.
+    """Full decode state: per-block caches stacked over periods, plus an
+    explicit ``"pos"`` counter (absolute position of the next token).
 
     ``filled`` — number of tokens already in the cache (dry-run decode shapes
     use ``seq_len`` per the assignment: one new token against a full cache).
+    ``"pos"`` is the position source of truth for decode-time position
+    embeddings: block caches are not reliable here (a cross-attention or
+    recurrent first block never advances a ``length``).
     """
     filled = seq_len if filled is None else filled
 
@@ -69,19 +73,25 @@ def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int, filled: int | N
         leaves = [make() for _ in range(cfg.n_periods)]
         return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *leaves)
 
-    return {
+    state = {
         f"blk{i}": stack(lambda i=i: block_cache_init(cfg, cfg.period[i], batch, seq_len, filled))
         for i in range(len(cfg.period))
     }
+    state["pos"] = jnp.asarray(filled, jnp.int32)
+    return state
 
 
 def _sinusoidal_at(pos, d_model: int) -> jax.Array:
-    """Single-position sinusoidal embedding (dynamic position).  -> (d_model,)."""
+    """Single-position sinusoidal embedding (dynamic position).  -> (d_model,).
+
+    Matches ``layers.sinusoidal_positions(seq, d_model)[pos]`` exactly, for
+    even AND odd ``d_model`` (the cos half has floor(d/2) slots, one fewer
+    than ``angle`` when d is odd)."""
     dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)
-    angle = pos.astype(jnp.float32) / jnp.power(10000.0, dim / d_model)
+    angle = jnp.asarray(pos).astype(jnp.float32) / jnp.power(10000.0, dim / d_model)
     pe = jnp.zeros((d_model,), dtype=jnp.float32)
     pe = pe.at[0::2].set(jnp.sin(angle))
-    pe = pe.at[1::2].set(jnp.cos(angle))
+    pe = pe.at[1::2].set(jnp.cos(angle[: d_model // 2]))
     return pe
 
 
@@ -133,12 +143,20 @@ def decode_step(
     token: jax.Array,
     state,
 ):
-    """One decode step.  token: (B, 1) int32 -> (logits (B, V) fp32, state)."""
+    """One decode step.  token: (B, 1) int32 -> (logits (B, V) fp32, state).
+
+    ``state["pos"]`` carries the absolute position of the incoming token
+    (after prefilling s tokens, decode step t sees position ``s + t``); it is
+    what positions the audio family's sinusoidal embedding — block caches are
+    not consulted for position, since a cross-attention or recurrent first
+    block never advances a ``length`` during decode.
+    """
     del specs
+    pos = state["pos"]
+    caches = {k: v for k, v in state.items() if k != "pos"}
     emb_table = params["embed"]["table"]
     x = jnp.take(emb_table, token, axis=0)
     if cfg.family == "audio":
-        pos = state["blk0"].length[0]  # first period's self-attn cache length
         x = x + _sinusoidal_at(pos, cfg.d_model)[None, None].astype(x.dtype)
 
     def body(x, xs):
@@ -148,7 +166,8 @@ def decode_step(
             x, new_caches[f"blk{i}"] = _block_decode(cfg, spec, pp[f"blk{i}"], x, caches[f"blk{i}"])
         return x, new_caches
 
-    x, new_state = jax.lax.scan(body, x, (params["periods"], state))
+    x, new_state = jax.lax.scan(body, x, (params["periods"], caches))
+    new_state["pos"] = pos + 1
 
     x = L.rmsnorm({"scale": params["ln_f"]}, x, cfg.norm_eps)
     head = emb_table if cfg.tie_embeddings else params["lm_head"]
@@ -194,6 +213,7 @@ def prefill(
         return x, new_caches
 
     x, state = jax.lax.scan(body, x, params["periods"])
+    state["pos"] = jnp.asarray(s, jnp.int32)
 
     x = L.rmsnorm({"scale": params["ln_f"]}, x, cfg.norm_eps)
     last = x[:, -1, :]
@@ -221,13 +241,18 @@ def _block_prefill(cfg, spec: BlockSpec, bp, x, positions, cross_src, seq_len,
         if cap > seq_len:  # headroom slots at the tail of the ring
             pad = ((0, 0), (0, cap - seq_len), (0, 0), (0, 0))
             kc, vc = jnp.pad(kc, pad), jnp.pad(vc, pad)
+        elif cap < seq_len:
+            # Ring-buffer alignment: decode reads slot i as the largest
+            # position p <= pos with p === i (mod cap), so the window's
+            # positions [seq_len - cap, seq_len) must land at rows p % cap.
+            # The contiguous slice above puts position seq_len - cap + i at
+            # row i; rolling by seq_len % cap moves each to its modular slot
+            # (a no-op when cap divides seq_len — the old aligned case).
+            kc = jnp.roll(kc, seq_len % cap, axis=1)
+            vc = jnp.roll(vc, seq_len % cap, axis=1)
         bcache = attn_lib.KVCache(
             k=kc, v=vc, length=jnp.asarray(seq_len, jnp.int32),
         )
-        # NOTE: ring-buffer alignment — with cap >= seq_len row i holds
-        # position i; for sliding-window caches (cap = window) row i holds
-        # seq_len - cap + i, consistent with decode's modular indexing when
-        # cap divides seq_len (power-of-two windows and lengths).
     elif spec.mixer == "cross":
         kv_pos = jnp.broadcast_to(
             jnp.arange(cross_src.shape[1], dtype=jnp.int32)[None], cross_src.shape[:2]

@@ -283,6 +283,71 @@ def test_validate_fleet_comlad_json_rejects_drift():
             bench_smoke.validate_fleet_comlad_json(bad)
 
 
+@pytest.mark.slow
+def test_zoo_serve_smoke_and_json_schema():
+    """The train-to-serve bench runs two zoo families at tiny step counts —
+    with its robust-delta, bitwise-roundtrip and serving assertions — and
+    both its JSON and the committed >= 4-family baseline validate.
+    Slow-marked like the LM-engine smoke: every push still runs it via the
+    CI determinism job's standalone ``scripts/bench_smoke.py``, and nightly
+    via --runslow; the pure-dict drift test below stays tier-1."""
+    payload = bench_smoke.smoke_zoo_serve()
+    bench_smoke.validate_zoo_serve_json(payload)  # idempotent re-check
+    fams = {r["family"] for r in payload["rows"]}
+    assert fams == {"transformer", "rwkv"}
+
+
+def _zoo_serve_row(family, robust_delta=0.01, undefended_delta=0.8, **kw):
+    r = {
+        "family": family, "arch": f"zoo-{family}", "n_layers": 1,
+        "params": 10000, "nll_clean": 4.0, "nll_robust": 4.0 + robust_delta,
+        "nll_undefended": 4.0 + undefended_delta,
+        "robust_delta": robust_delta, "undefended_delta": undefended_delta,
+        "roundtrip_bitwise": True, "prefill_tokens_per_s": 1000.0,
+        "decode_tokens_per_s": 100.0, "decoded_tokens": 8,
+    }
+    r.update(kw)
+    return r
+
+
+def _zoo_serve_base():
+    return {
+        "schema_version": 1, "device_count": 1, "steps": 40, "n_subsets": 8,
+        "per_subset": 2, "seq_len": 16, "n_byz": 3, "attack": "sign_flip",
+        "lr": 1e-2, "new_tokens": 8, "robust_delta_bound": 0.25,
+        "rows": [_zoo_serve_row(f)
+                 for f in ("transformer", "rwkv", "moe", "swa")],
+    }
+
+
+def test_validate_zoo_serve_json_rejects_drift():
+    bench_smoke.validate_zoo_serve_json(_zoo_serve_base())
+    base = _zoo_serve_base()
+    for breakage in (
+        {"schema_version": 999},
+        {"rows": []},
+        {"attack": ""},
+        # robust checkpoint degraded past the recorded bound
+        {"rows": base["rows"][:3] + [_zoo_serve_row("swa", robust_delta=0.5)]},
+        # the attack must hurt the undefended run more than the robust one
+        {"rows": base["rows"][:3]
+         + [_zoo_serve_row("swa", undefended_delta=-0.5)]},
+        # checkpoint roundtrip must be bitwise
+        {"rows": base["rows"][:3]
+         + [_zoo_serve_row("swa", roundtrip_bitwise=False)]},
+        # serving must have moved tokens
+        {"rows": base["rows"][:3]
+         + [_zoo_serve_row("swa", decode_tokens_per_s=0.0)]},
+        {"rows": base["rows"][:3] + [_zoo_serve_row("swa", decoded_tokens=3)]},
+        {"rows": base["rows"] + [_zoo_serve_row("swa")]},  # duplicate family
+        {"rows": base["rows"][:3]
+         + [{k: v for k, v in _zoo_serve_row("swa").items() if k != "params"}]},
+    ):
+        bad = {**_zoo_serve_base(), **breakage}
+        with pytest.raises(AssertionError):
+            bench_smoke.validate_zoo_serve_json(bad)
+
+
 def _scaling_row(devices, warm_s=1.0, lanes_per_s=64.0, speedup=1.0):
     return {
         "devices": devices, "platform": "cpu", "lanes": 64, "steps": 6,

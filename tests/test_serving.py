@@ -1,0 +1,263 @@
+"""Serving-path regression + conformance suite (the train-to-serve loop).
+
+Four regression locks (each was a live bug in the serving path):
+  1. ``_sinusoidal_at`` odd-``d_model`` parity with the full-sequence table.
+  2. Decode position tracking via the explicit ``state["pos"]`` counter —
+     a cross-attention/recurrent first block never advances a cache
+     ``length``, so reading positions off ``blk0`` silently froze the
+     audio family's position embedding.
+  3. ``rwkv_ffn`` on a non-rwkv mixer rejected at ``ArchConfig`` validation
+     (was an ``AttributeError`` on ``KVCache.ffn_x_prev`` mid-decode).
+  4. Sliding-window ring-buffer alignment when the window does NOT divide
+     the prompt length (prefill's contiguous rows vs decode's modular
+     indexing).
+
+Plus the prefill-vs-decode conformance matrix over every zoo family:
+decode step t after prefilling s tokens must reproduce the full forward's
+logits at position s + t (tolerance 5e-2 — fp32 full forward vs the
+bf16/fp32-mixed incremental path, same bound as test_models).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs.archs import ARCHS, reduced
+from repro.configs.base import ArchConfig, BlockSpec, EncoderConfig
+from repro.core.scenarios import (
+    ZOO_FAMILIES,
+    run_zoo_sweep,
+    zoo_arch,
+    zoo_sweep,
+)
+from repro.models import layers as L
+from repro.models.serving import _sinusoidal_at
+
+# Fast representatives run in tier-1 (transformer = plain ring buffer, swa =
+# modular ring alignment, audio = sinusoidal positions + cross-attention);
+# the full zoo matrix rides --runslow / nightly.
+FAST_FAMILIES = {"transformer", "swa", "audio"}
+
+
+def _fam_params():
+    return [
+        f if f in FAST_FAMILIES else pytest.param(f, marks=pytest.mark.slow)
+        for f in ZOO_FAMILIES
+    ]
+
+
+def _traffic(cfg, key, b=2, t=20):
+    tokens = jax.random.randint(key, (b, t), 0, cfg.vocab)
+    frontend = None
+    if cfg.family in ("vlm", "audio"):
+        enc = cfg.encoder
+        frontend = jax.random.normal(
+            jax.random.fold_in(key, 9), (b, enc.n_frontend_tokens, enc.d_frontend)
+        )
+    return tokens, frontend
+
+
+# -------------------------------------------------------------------------
+# regression 1: single-position sinusoidal embedding parity
+# -------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d_model", [16, 17, 32, 33])
+def test_sinusoidal_at_matches_table_even_and_odd(d_model):
+    """``_sinusoidal_at(p, d)`` == ``sinusoidal_positions(s, d)[p]`` for even
+    AND odd d (odd d has one fewer cos slot than sin — the original decode
+    helper crashed/mismatched on the truncation)."""
+    table = np.asarray(L.sinusoidal_positions(8, d_model))
+    for pos in (0, 3, 7):
+        single = np.asarray(_sinusoidal_at(pos, d_model))
+        np.testing.assert_allclose(single, table[pos], rtol=1e-6, atol=1e-6)
+
+
+# -------------------------------------------------------------------------
+# regression 2: decode position tracking (audio family)
+# -------------------------------------------------------------------------
+
+
+def _cross_first_audio():
+    """An audio arch whose FIRST block is cross-attention: its cache length
+    is pinned to the encoder length and never advances during decode, so any
+    position read off ``blk0`` freezes — only ``state["pos"]`` is correct."""
+    return reduced(ARCHS["whisper-small"]).scaled(
+        name="audio-cross-first",
+        n_layers=2,
+        d_model=32,
+        n_heads=2,
+        n_kv_heads=1,
+        head_dim=16,
+        d_ff=64,
+        vocab=64,
+        period=(
+            BlockSpec(mixer="cross", mlp="dense"),
+            BlockSpec(mixer="attn_nope", mlp="none"),
+        ),
+        encoder=EncoderConfig(n_frontend_tokens=8, d_frontend=16, n_encoder_layers=1),
+    )
+
+
+def test_audio_decode_position_advances(key):
+    """Token t of decode must be embedded at position s0 + t; the state's
+    ``pos`` counter is the source of truth and must advance every step."""
+    cfg = _cross_first_audio()
+    params, specs = models.init(key, cfg)
+    s0, t_total = 13, 20
+    tokens, frontend = _traffic(cfg, key, t=t_total)
+    logits_full, _ = models.forward(params, specs, cfg, tokens, frontend=frontend)
+    _, state = models.prefill(
+        params, specs, cfg, tokens[:, :s0], frontend=frontend, capacity=t_total + 2
+    )
+    assert int(state["pos"]) == s0
+    for t in range(s0, t_total):
+        logits, state = models.decode_step(params, specs, cfg, tokens[:, t : t + 1], state)
+        assert int(state["pos"]) == t + 1
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(logits_full[:, t]), rtol=5e-2, atol=5e-2,
+            err_msg=f"audio decode diverges at position {t} (frozen position?)",
+        )
+
+
+def test_decode_state_carries_pos_counter():
+    cfg = zoo_arch("transformer")
+    state = models.init_decode_state(cfg, batch=2, seq_len=16, filled=5)
+    assert int(state["pos"]) == 5
+    assert state["pos"].dtype == jnp.int32
+
+
+# -------------------------------------------------------------------------
+# regression 3: rwkv_ffn requires the rwkv mixer's cache
+# -------------------------------------------------------------------------
+
+
+def test_rwkv_ffn_on_non_rwkv_mixer_rejected():
+    base = zoo_arch("transformer")
+    with pytest.raises(ValueError, match="rwkv_ffn"):
+        dataclasses.replace(
+            base, period=(BlockSpec(mixer="attn", mlp="rwkv_ffn"),)
+        )
+
+
+def test_rwkv_ffn_on_rwkv_mixer_accepted_and_serves(key):
+    cfg = zoo_arch("rwkv")  # period is (rwkv, rwkv_ffn) — the supported combo
+    assert cfg.period[0].mlp == "rwkv_ffn"
+    params, specs = models.init(key, cfg)
+    tokens, _ = _traffic(cfg, key, t=9)
+    _, state = models.prefill(params, specs, cfg, tokens[:, :8])
+    logits, _ = models.decode_step(params, specs, cfg, tokens[:, 8:9], state)
+    assert not jnp.any(jnp.isnan(logits))
+
+
+# -------------------------------------------------------------------------
+# regression 4: sliding-window ring alignment (window does not divide s0)
+# -------------------------------------------------------------------------
+
+
+def test_sliding_window_prefill_decode_alignment(key):
+    """Non-power-of-two window (6) with a prompt it does not divide (13):
+    prefill's ring rows must land at ``position % capacity`` or the first
+    decode steps attend to misattributed positions."""
+    cfg = zoo_arch("swa")
+    assert cfg.period[0].sliding_window == 6
+    params, specs = models.init(key, cfg)
+    s0, t_total = 13, 20
+    tokens, _ = _traffic(cfg, key, t=t_total)
+    logits_full, _ = models.forward(params, specs, cfg, tokens)
+    _, state = models.prefill(params, specs, cfg, tokens[:, :s0])
+    for t in range(s0, t_total):
+        logits, state = models.decode_step(params, specs, cfg, tokens[:, t : t + 1], state)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(logits_full[:, t]), rtol=5e-2, atol=5e-2,
+            err_msg=f"sliding-window decode diverges at position {t}",
+        )
+
+
+# -------------------------------------------------------------------------
+# conformance matrix: prefill-then-decode == full forward, every zoo family
+# -------------------------------------------------------------------------
+
+
+# Expert-routed families get a looser bound: a borderline top-k router
+# logit can flip experts between the full-forward and prefill programs
+# (different fusion, ~1-ulp router input differences), moving a handful of
+# output logits by more than pure-arithmetic noise.
+_CONFORMANCE_TOL = {"jamba": 2e-1, "moe": 1e-1}
+
+
+@pytest.mark.parametrize("family", _fam_params())
+def test_zoo_prefill_decode_conformance(family, key):
+    cfg = zoo_arch(family)
+    tol = _CONFORMANCE_TOL.get(family, 5e-2)
+    params, specs = models.init(key, cfg)
+    s0, t_total = 13, 20
+    tokens, frontend = _traffic(cfg, key, t=t_total)
+    logits_full, _ = models.forward(params, specs, cfg, tokens, frontend=frontend)
+    logits_pre, state = models.prefill(
+        params, specs, cfg, tokens[:, :s0], frontend=frontend, capacity=t_total + 2
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_pre), np.asarray(logits_full[:, s0 - 1]),
+        rtol=tol, atol=tol, err_msg=f"{family}: prefill logits",
+    )
+    assert int(state["pos"]) == s0
+    for t in range(s0, t_total):
+        logits, state = models.decode_step(params, specs, cfg, tokens[:, t : t + 1], state)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(logits_full[:, t]),
+            rtol=tol, atol=tol,
+            err_msg=f"{family}: decode diverges at position {t}",
+        )
+    assert int(state["pos"]) == t_total
+
+
+# -------------------------------------------------------------------------
+# checkpoint -> restore_for_serving roundtrip
+# -------------------------------------------------------------------------
+
+
+def test_restore_for_serving_roundtrip(tmp_path, key):
+    from repro.checkpoint import restore_for_serving, save_checkpoint
+
+    cfg = zoo_arch("transformer")
+    params, specs = models.init(key, cfg)
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, params, step=7, specs=specs)
+    restored, r_specs, step = restore_for_serving(path, cfg)
+    assert step == 7
+    assert r_specs == specs
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    tokens, _ = _traffic(cfg, key, t=8)
+    la, _ = models.prefill(params, specs, cfg, tokens)
+    lb, _ = models.prefill(restored, r_specs, cfg, tokens)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# -------------------------------------------------------------------------
+# zoo sweep rides the engine grid
+# -------------------------------------------------------------------------
+
+
+def test_zoo_sweep_row_names_and_engine_smoke():
+    sweep = zoo_sweep(("transformer",))
+    rows = sweep["transformer"]
+    assert all(r.name.startswith("zoo/transformer/") for r in rows)
+    out = run_zoo_sweep(2, sweep=sweep)["transformer"]
+    for name, traj in out.items():
+        loss = np.asarray(traj.metrics["loss"])
+        assert np.isfinite(loss).all(), name
+
+
+@pytest.mark.slow
+def test_zoo_sweep_full_families_smoke():
+    out = run_zoo_sweep(2)
+    assert set(out) == set(ZOO_FAMILIES)
+    for fam, grid in out.items():
+        for name, traj in grid.items():
+            assert np.isfinite(np.asarray(traj.metrics["loss"])).all(), (fam, name)
